@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: wall-clock measurement of jitted callables
+on this host (XLA:CPU — relative numbers) + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+import jax
+
+
+def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+                min_s: float = 0.5) -> float:
+    """Mean µs/call after warmup (compiles on first call)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    n, t0 = 0, time.perf_counter()
+    while True:
+        out = fn(*args)
+        jax.block_until_ready(out)
+        n += 1
+        el = time.perf_counter() - t0
+        if n >= iters and el >= min_s:
+            break
+        if n >= 100:
+            break
+    return el / n * 1e6
+
+
+def emit_csv(rows: Iterable[dict], header: List[str]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

@@ -1,0 +1,73 @@
+"""Figure 2 analog: cumulative optimization-level ablation on the flash
+attention kernel (d=128, the paper's running example), on TPU analogues of
+its ladder (DESIGN.md §2):
+
+  L0 naive            tiny q tiles, no skip       (paper: Naive)
+  L1 +aligned tiles   (8,128)->(128,128) tiles    (paper: Bank conflict)
+  L2 +transV staging  lane-aligned PV operands    (paper: TransV)
+  L3 +deep pipeline   larger KV blocks            (paper: Pipeline+WS)
+  L4 +causal skip     skip masked KV blocks       (paper: sched/All)
+  L5 argus-tuned      harness best config
+
+Times are cost-model v5e estimates; every level's config passes invariant
+validation before being scored (a level that broke pairing would be
+rejected with a counterexample, not mis-benchmarked).
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from dataclasses import replace  # noqa: E402
+
+from repro.core.harness import (KernelState, Planner, Selector, Validator,
+                                optimize_kernel)  # noqa: E402
+from repro.core.harness.costmodel import estimate  # noqa: E402
+from repro.core.invariants import (FlashAttentionConfig,
+                                   FlashAttentionProblem,
+                                   verify_flash_attention)  # noqa: E402
+
+PROB = FlashAttentionProblem(batch=16, q_heads=8, kv_heads=1, seq_q=8192,
+                             seq_kv=8192, head_dim=128, causal=True,
+                             dtype="bf16")
+
+LEVELS = [
+    ("L0_naive", FlashAttentionConfig(block_q=8, block_kv=128,
+                                      causal_block_skip=False)),
+    ("L1_aligned_tiles", FlashAttentionConfig(block_q=128, block_kv=128,
+                                              causal_block_skip=False)),
+    ("L2_transv", FlashAttentionConfig(block_q=128, block_kv=128,
+                                       v_transposed_staging=True,
+                                       causal_block_skip=False)),
+    ("L3_deep_pipeline", FlashAttentionConfig(block_q=128, block_kv=512,
+                                              v_transposed_staging=True,
+                                              causal_block_skip=False)),
+    ("L4_causal_skip", FlashAttentionConfig(block_q=128, block_kv=512,
+                                            v_transposed_staging=True,
+                                            causal_block_skip=True)),
+]
+
+
+def main():
+    print("name,us_per_call,derived")
+    base = None
+    for name, cfg in LEVELS:
+        ver = verify_flash_attention(cfg, PROB)
+        assert ver.hard_ok, f"{name} failed invariants:\n{ver.render()}"
+        est = estimate("flash_attention", cfg, PROB)
+        base = base or est.time_s
+        print(f"{name},{est.time_s*1e6:.1f},"
+              f"speedup={base/est.time_s:.2f}x;bound={est.bound}",
+              flush=True)
+    st = KernelState("flash_attention", LEVELS[0][1], PROB).refresh()
+    res = optimize_kernel(st, planner=Planner(),
+                          selector=Selector(temperature=0.1, seed=3),
+                          validator=Validator(), iterations=24)
+    est = res.best_state.est
+    print(f"L5_argus_tuned,{est.time_s*1e6:.1f},"
+          f"speedup={base/est.time_s:.2f}x;cfg={res.best_state.cfg.name()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [table1|table2|fig2|table3|roofline]
+
+With no argument, runs every section (roofline only if dry-run JSONs
+exist).  Output is CSV per section, ``name,us_per_call,derived``-style.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    sections = []
+    if which in ("all", "table1"):
+        sections.append(("TABLE 1 — optimization coverage (KB)",
+                         "benchmarks.table1_optimizations"))
+    if which in ("all", "table2"):
+        sections.append(("TABLE 2 — kernel throughput (host µs + v5e "
+                         "cost-model)", "benchmarks.table2_kernels"))
+    if which in ("all", "fig2"):
+        sections.append(("FIGURE 2 — flash-attention ablation",
+                         "benchmarks.fig2_ablation"))
+    if which in ("all", "table3"):
+        sections.append(("TABLE 3 / §9.4 — generality + invariants",
+                         "benchmarks.table3_generality"))
+    if which in ("all", "icrl"):
+        sections.append(("§ICRL — cross-task planner transfer "
+                         "(Algorithm 1)", "benchmarks.icrl_transfer"))
+    if which in ("all", "roofline") and \
+            list(Path("experiments/dryrun").glob("*.json")):
+        sections.append(("§ROOFLINE — per (arch × shape × mesh)",
+                         "benchmarks.roofline"))
+
+    from importlib import import_module
+    for title, mod in sections:
+        print(f"\n### {title}")
+        import_module(mod).main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Table 2 analog: effective throughput for GEMM / flash attention / MoE.
+
+Per paper configuration we report:
+  * ``us_host``      — measured wall-time of the jitted XLA reference graph
+                       on this CPU host (relative numbers only);
+  * ``naive_ms_v5e`` — cost-model v5e time of a naive kernel config;
+  * ``argus_ms_v5e`` — cost-model v5e time of the ARGUS-tuned config
+                       (harness hillclimb, invariant-gated moves);
+  * ``tflops_eff``   — effective TFLOPS of the tuned config on v5e;
+  * ``roofline_pct`` — tuned time vs the config's own roofline bound
+                       max(compute, memory) with perfect utilization.
+
+The paper's absolute MI300X numbers are not reproducible off-hardware; the
+comparable claim we validate is *closing the gap to the hardware bound*
+(paper: 99–104% of hand-tuned libraries).
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.harness import (KernelState, Planner, Selector, Validator,
+                                optimize_kernel)  # noqa: E402
+from repro.core.harness.costmodel import (HBM_BW, PEAK_FLOPS,
+                                          estimate)  # noqa: E402
+from repro.core.invariants import (FlashAttentionConfig,
+                                   FlashAttentionProblem, GemmConfig,
+                                   GemmProblem, MoEConfig,
+                                   MoEProblem)  # noqa: E402
+
+from .common import time_jitted  # noqa: E402
+
+HOST_MEASURE_LIMIT = 2 ** 31  # FLOP budget for host wall-clock rows
+
+
+def _roofline_bound_s(est) -> float:
+    """Ideal time: max(pure compute at peak, pure memory at full bw)."""
+    return max(est.flops / PEAK_FLOPS, est.hbm_bytes / HBM_BW)
+
+
+def _tune(family, cfg, prob, iters=24, seed=0):
+    st = KernelState(family, cfg, prob).refresh()
+    res = optimize_kernel(st, planner=Planner(),
+                          selector=Selector(temperature=0.15, seed=seed),
+                          validator=Validator(), iterations=iters)
+    return res
+
+
+def gemm_rows():
+    for size in (1024, 2048, 4096, 8192, 16384):
+        prob = GemmProblem(size, size, size, "bf16")
+        naive = GemmConfig(bm=128, bn=128, bk=128)
+        base = estimate("gemm", naive, prob)
+        res = _tune("gemm", naive, prob)
+        tuned = res.best_state.est
+        host_us = ""
+        if 2 * size ** 3 <= HOST_MEASURE_LIMIT:
+            a = jnp.asarray(np.random.default_rng(0).normal(
+                size=(size, size)), jnp.bfloat16)
+            b = jnp.asarray(np.random.default_rng(1).normal(
+                size=(size, size)), jnp.bfloat16)
+            f = jax.jit(lambda a, b: jnp.dot(
+                a, b, preferred_element_type=jnp.float32))
+            host_us = round(time_jitted(f, a, b), 1)
+        yield {
+            "name": f"gemm_bf16_{size}",
+            "us_per_call": host_us,
+            "naive_ms_v5e": round(base.time_s * 1e3, 4),
+            "argus_ms_v5e": round(tuned.time_s * 1e3, 4),
+            "tflops_eff": round(tuned.flops / tuned.time_s / 1e12, 1),
+            "roofline_pct": round(100 * _roofline_bound_s(tuned)
+                                  / tuned.time_s, 1),
+            "best_cfg": res.best_state.cfg.name(),
+        }
+
+
+def fa_rows():
+    for seq in (1024, 2048, 4096, 8192, 16384):
+        prob = FlashAttentionProblem(batch=16, q_heads=8, kv_heads=1,
+                                     seq_q=seq, seq_kv=seq, head_dim=128,
+                                     causal=True, dtype="bf16")
+        naive = FlashAttentionConfig(block_q=8, block_kv=128,
+                                     causal_block_skip=False)
+        base = estimate("flash_attention", naive, prob)
+        res = _tune("flash_attention", naive, prob)
+        tuned = res.best_state.est
+        host_us = ""
+        if seq <= 2048:
+            from repro.kernels.flash_attention import mha_ref
+            q = jnp.asarray(np.random.default_rng(0).normal(
+                size=(2, 8, seq, 128)), jnp.bfloat16)
+            k = jnp.asarray(np.random.default_rng(1).normal(
+                size=(2, 1, seq, 128)), jnp.bfloat16)
+            f = jax.jit(lambda q, k: mha_ref(q, k, k, causal=True))
+            host_us = round(time_jitted(f, q, k), 1)
+        yield {
+            "name": f"fa_gqa_{seq}",
+            "us_per_call": host_us,
+            "naive_ms_v5e": round(base.time_s * 1e3, 4),
+            "argus_ms_v5e": round(tuned.time_s * 1e3, 4),
+            "tflops_eff": round(tuned.flops / tuned.time_s / 1e12, 1),
+            "roofline_pct": round(100 * _roofline_bound_s(tuned)
+                                  / tuned.time_s, 1),
+            "best_cfg": res.best_state.cfg.name(),
+        }
+
+
+def moe_rows():
+    # DeepSeek-V3-ish deployment slice: dim 7168, inter 2048, 32 experts/chip
+    for seq in (1024, 2048, 4096, 8192, 16384):
+        prob = MoEProblem(tokens=seq, d_model=7168, d_ff=2048,
+                          n_experts=32, top_k=8, dtype="bf16")
+        naive = MoEConfig(block_t=8, block_f=2048)
+        base = estimate("moe", naive, prob)
+        res = _tune("moe", naive, prob)
+        tuned = res.best_state.est
+        yield {
+            "name": f"moe_fused_{seq}",
+            "us_per_call": "",
+            "naive_ms_v5e": round(base.time_s * 1e3, 4),
+            "argus_ms_v5e": round(tuned.time_s * 1e3, 4),
+            "tflops_eff": round(tuned.flops / tuned.time_s / 1e12, 1),
+            "roofline_pct": round(100 * _roofline_bound_s(tuned)
+                                  / tuned.time_s, 1),
+            "best_cfg": res.best_state.cfg.name(),
+        }
+
+
+HEADER = ["name", "us_per_call", "naive_ms_v5e", "argus_ms_v5e",
+          "tflops_eff", "roofline_pct", "best_cfg"]
+
+
+def main():
+    print(",".join(HEADER))
+    for gen in (gemm_rows, fa_rows, moe_rows):
+        for r in gen():
+            print(",".join(str(r[h]) for h in HEADER), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Table 3 / §9.4 analog: generality + the effect of data-flow invariants.
+
+A 60-problem suite across the three families (varying shape regimes —
+square/skinny/tall GEMMs, GQA/MQA attention at several lengths, MoE widths)
+is optimized by the harness under the *fault model* (the lowering agent
+mis-implements intrusive rewrites at the paper's observed rates).  Two
+arms:
+
+  invariants ON  — violations caught at compile time with counterexamples
+                   (targeted repair), unit tests as backstop;
+  invariants OFF — failures surface only through unit tests (blind repair).
+
+Reported per arm: Pass@1 (first lowering correct or statically repaired
+before any unit test), solved%, mean validator cost units (the token-budget
+analogue), mean speedup of the best valid config.  Paper: invariants raise
+Pass@1 15–17 points and cut cost ~5–17% (§9.4).
+"""
+from __future__ import annotations
+
+import statistics
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.harness import (KernelState, LoweringAgent, Planner,
+                                Selector, Validator,
+                                optimize_kernel)  # noqa: E402
+from repro.core.invariants import (FlashAttentionConfig,
+                                   FlashAttentionProblem, GemmConfig,
+                                   GemmProblem, MoEConfig,
+                                   MoEProblem)  # noqa: E402
+
+
+def build_suite():
+    tasks = []
+    # 25 GEMM problems (Level-1 style)
+    for m, n, k in [(1024, 1024, 1024), (4096, 4096, 4096),
+                    (8192, 8192, 8192), (256, 8192, 8192),
+                    (8192, 256, 8192), (128, 128, 16384),
+                    (16384, 16384, 2048), (2048, 512, 2048),
+                    (512, 2048, 4096), (1024, 8192, 1024),
+                    (4096, 1024, 512), (8192, 8192, 512),
+                    (512, 512, 8192), (2048, 2048, 2048),
+                    (1024, 4096, 4096), (4096, 4096, 1024),
+                    (256, 256, 4096), (8192, 1024, 8192),
+                    (1024, 1024, 8192), (16384, 512, 512),
+                    (512, 16384, 512), (2048, 8192, 2048),
+                    (8192, 2048, 8192), (4096, 512, 4096),
+                    (512, 4096, 512)]:
+        tasks.append(KernelState("gemm", GemmConfig(),
+                                 GemmProblem(m, n, k, "bf16")))
+    # 20 attention problems
+    for b, hq, hkv, s, d in [(16, 8, 1, 1024, 128), (16, 8, 1, 4096, 128),
+                             (16, 8, 1, 16384, 128), (8, 16, 4, 2048, 128),
+                             (8, 16, 4, 8192, 128), (4, 32, 8, 4096, 128),
+                             (4, 32, 32, 2048, 128), (32, 8, 8, 1024, 64),
+                             (32, 8, 2, 4096, 64), (2, 64, 8, 8192, 128),
+                             (16, 16, 1, 2048, 256), (16, 16, 2, 1024, 256),
+                             (1, 8, 1, 32768, 128), (2, 8, 1, 16384, 64),
+                             (64, 8, 1, 512, 128), (8, 8, 1, 8192, 128),
+                             (8, 4, 1, 4096, 128), (4, 16, 2, 16384, 128),
+                             (16, 32, 4, 2048, 64), (8, 64, 8, 1024, 128)]:
+        tasks.append(KernelState(
+            "flash_attention", FlashAttentionConfig(),
+            FlashAttentionProblem(b, hq, hkv, s, s, d, True, "bf16")))
+    # 15 MoE problems
+    for t, dm, df, e, k in [(4096, 1024, 2048, 16, 2),
+                            (8192, 2048, 1408, 64, 6),
+                            (16384, 7168, 2048, 32, 8),
+                            (4096, 1536, 512, 40, 8),
+                            (2048, 4096, 4096, 8, 2),
+                            (8192, 1024, 4096, 16, 2),
+                            (4096, 2048, 2048, 32, 4),
+                            (16384, 1024, 1024, 64, 2),
+                            (2048, 7168, 2048, 16, 4),
+                            (8192, 4096, 1024, 32, 2),
+                            (4096, 512, 2048, 8, 2),
+                            (32768, 1024, 512, 128, 8),
+                            (8192, 2048, 4096, 8, 2),
+                            (2048, 2048, 1024, 16, 8),
+                            (4096, 4096, 512, 64, 4)]:
+        tasks.append(KernelState("moe", MoEConfig(),
+                                 MoEProblem(t, dm, df, e, k, "bf16")))
+    return tasks
+
+
+def run_arm(tasks, *, use_invariants: bool, iterations: int = 8,
+            seed: int = 0):
+    rows = []
+    for i, t in enumerate(tasks):
+        st = KernelState(t.family, t.cfg, t.prob).refresh()
+        res = optimize_kernel(
+            st, planner=Planner(),
+            selector=Selector(temperature=0.2, seed=seed + i),
+            lowering=LoweringAgent(fault_model=True, seed=seed * 31 + i),
+            validator=Validator(use_invariants=use_invariants),
+            iterations=iterations)
+        first = res.history[0] if res.history else None
+        pass1 = bool(first and (first.verdict.ok
+                                or first.verdict.caught_static))
+        solved = any(r.verdict.ok for r in res.history)
+        silent = any("SILENT" in r.verdict.violation_report
+                     for r in res.history)
+        rows.append({"pass1": pass1, "solved": solved,
+                     "cost": res.cost_units, "speedup": res.speedup,
+                     "silent": silent})
+    return rows
+
+
+def summarize(name, rows):
+    n = len(rows)
+    return {
+        "name": name,
+        "pass@1_pct": round(100 * sum(r["pass1"] for r in rows) / n, 1),
+        "solved_pct": round(100 * sum(r["solved"] for r in rows) / n, 1),
+        "mean_cost_units": round(statistics.mean(r["cost"] for r in rows),
+                                 1),
+        "mean_speedup": round(statistics.mean(r["speedup"] for r in rows),
+                              2),
+        "silent_corruptions": sum(r["silent"] for r in rows),
+    }
+
+
+def main():
+    tasks = build_suite()
+    header = ["name", "pass@1_pct", "solved_pct", "mean_cost_units",
+              "mean_speedup", "silent_corruptions"]
+    print(",".join(header))
+    for arm, inv in (("invariants_on", True), ("invariants_off", False)):
+        s = summarize(arm, run_arm(tasks, use_invariants=inv))
+        print(",".join(str(s[h]) for h in header), flush=True)
+
+
+if __name__ == "__main__":
+    main()

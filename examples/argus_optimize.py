@@ -1,0 +1,82 @@
+"""ARGUS kernel tuning: the paper's workflow as a framework feature.
+
+    PYTHONPATH=src python examples/argus_optimize.py --family gemm \
+        --iterations 20 [--run-kernels]
+
+Runs the agentic harness (planner -> selector -> lowering -> validator,
+invariant-gated) on each kernel family's production problem, printing the
+trajectory and writing the winning configs to ``tuning_cache.json`` — the
+file the training/serving launchers consult for kernel configs.
+``--run-kernels`` additionally executes every accepted candidate in Pallas
+interpret mode against the jnp oracle (slow; CI uses small shapes).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.core.harness import (KernelState, LoweringAgent, Planner,
+                                Selector, Validator,
+                                optimize_kernel)  # noqa: E402
+from repro.core.invariants import (FlashAttentionConfig,
+                                   FlashAttentionProblem, GemmConfig,
+                                   GemmProblem, MoEConfig,
+                                   MoEProblem)  # noqa: E402
+
+PROBLEMS = {
+    "gemm": (GemmConfig(), GemmProblem(8192, 8192, 8192, "bf16")),
+    "flash_attention": (FlashAttentionConfig(block_q=8,
+                                             causal_block_skip=False),
+                        FlashAttentionProblem(16, 8, 1, 8192, 8192, 128,
+                                              True, "bf16")),
+    "moe": (MoEConfig(block_t=8), MoEProblem(16384, 7168, 2048, 32, 8,
+                                             "bf16")),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="all",
+                    choices=["all", "gemm", "flash_attention", "moe"])
+    ap.add_argument("--iterations", type=int, default=20)
+    ap.add_argument("--run-kernels", action="store_true")
+    ap.add_argument("--out", default="tuning_cache.json")
+    args = ap.parse_args()
+
+    fams = list(PROBLEMS) if args.family == "all" else [args.family]
+    cache = {}
+    if Path(args.out).exists():
+        cache = json.loads(Path(args.out).read_text())
+
+    for fam in fams:
+        cfg, prob = PROBLEMS[fam]
+        st = KernelState(fam, cfg, prob).refresh()
+        print(f"\n=== {fam}: baseline {st.est.time_s*1e3:.3f} ms "
+              f"({st.est.bound}-bound, {st.est.tflops():.0f} TFLOPS)")
+        res = optimize_kernel(
+            st, planner=Planner(), selector=Selector(temperature=0.15),
+            lowering=LoweringAgent(fault_model=False),
+            validator=Validator(run_kernels=args.run_kernels),
+            iterations=args.iterations)
+        for r in res.history:
+            mark = "✓" if r.accepted else ("·" if r.verdict.ok else "✗")
+            print(f"  {mark} {r.skill:22s} {r.context:18s} "
+                  f"{r.time_s*1e3:9.3f} ms"
+                  + (f"   [{r.verdict.violation_report.splitlines()[0][:60]}]"
+                     if not r.verdict.ok else ""))
+        best = res.best_state
+        print(f"  best: {best.cfg.name()}  {res.best_time_s*1e3:.3f} ms "
+              f"({res.speedup:.2f}x, {best.est.tflops():.0f} TFLOPS)")
+        cache[fam] = {"problem": dataclasses.asdict(prob),
+                      "config": dataclasses.asdict(best.cfg),
+                      "est_ms": res.best_time_s * 1e3,
+                      "speedup": res.speedup}
+    Path(args.out).write_text(json.dumps(cache, indent=2))
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Pytree (de)serialization: logical (mesh-independent) checkpoint format.
+
+Leaves are saved by *path* with dtype/shape metadata into a directory of
+.npy shards plus an index.json — restoring never needs the original mesh:
+arrays are loaded logically and re-sharded by the caller (elastic restarts,
+DESIGN.md §5)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    elif isinstance(tree, (tuple, list)) and not hasattr(tree, "shape"):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, prefix + (str(i),))
+    else:
+        yield prefix, tree
+
+
+def save_pytree(tree: Any, path: Path) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    index = {}
+    for p, leaf in _flatten(tree):
+        key = "/".join(p)
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":      # npy has no bf16: store bits
+            arr = arr.view(np.uint16)
+        fn = key.replace("/", "__") + ".npy"
+        np.save(path / fn, arr)
+        index[key] = {"file": fn, "shape": list(arr.shape),
+                      "dtype": dtype_name}
+    (path / "index.json").write_text(json.dumps(index, indent=1))
+
+
+def load_pytree(template: Any, path: Path) -> Any:
+    """Restore into the structure of ``template`` (values ignored)."""
+    path = Path(path)
+    index = json.loads((path / "index.json").read_text())
+
+    def build(tree, prefix=()):
+        if isinstance(tree, dict):
+            return {k: build(v, prefix + (str(k),))
+                    for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)) and not hasattr(tree, "shape"):
+            vals = [build(v, prefix + (str(i),))
+                    for i, v in enumerate(tree)]
+            return type(tree)(vals) if not hasattr(tree, "_fields") \
+                else type(tree)(*vals)
+        key = "/".join(prefix)
+        if key not in index:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        meta = index[key]
+        arr = np.load(path / meta["file"])
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        return jnp.asarray(arr)
+
+    return build(template)

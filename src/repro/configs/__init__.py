@@ -1,0 +1,58 @@
+"""Architecture config registry: the 10 assigned archs (+ smoke variants).
+
+``get_config(name)``/``get_reduced(name)`` return ModelConfigs;
+``input_specs(name, shape)`` builds the dry-run ShapeDtypeStruct inputs.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+from .shapes import SHAPES, LONG_CONTEXT_ARCHS, ShapeCell, input_specs as \
+    _input_specs, supports_cell
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "gemma-7b": "gemma_7b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "stablelm-3b": "stablelm_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "chameleon-34b": "chameleon_34b",
+    "mamba2-780m": "mamba2_780m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _mod(name).reduced()
+
+
+def arch_input_specs(name: str, shape: str, *, reduced: bool = False):
+    from repro.models import model as model_mod
+    cfg = get_reduced(name) if reduced else get_config(name)
+    m = model_mod.build(cfg)
+    return _input_specs(m, SHAPES[shape], frontend=cfg.frontend)
+
+
+def all_cells():
+    """Every (arch, shape) pair in the assignment — 40 cells, with the
+    long_500k rows marked runnable/skip per DESIGN.md §4."""
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            yield arch, shape, supports_cell(arch, shape)

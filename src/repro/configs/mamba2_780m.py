@@ -1,0 +1,25 @@
+"""mamba2-780m  [ssm]  — SSD (state-space duality), attention-free
+[arXiv:2405.21060; unverified].  Runs long_500k (O(1) decode state).
+
+ARGUS applicability (DESIGN.md §4): flash-attention invariants are
+inapplicable (attention-free); the GEMM invariants govern the SSD
+chunked matmuls."""
+from repro.models.config import ModelConfig, SSMSpec
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280, tie_embeddings=True,
+    ssm=SSMSpec(d_state=128, expand=2, head_dim=64, n_groups=1,
+                conv_width=4, chunk=256),
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m-smoke", family="ssm",
+        n_layers=3, d_model=64, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=256, tie_embeddings=True,
+        ssm=SSMSpec(d_state=16, expand=2, head_dim=16, n_groups=1,
+                    conv_width=4, chunk=16),
+    )

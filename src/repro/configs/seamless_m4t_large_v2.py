@@ -1,0 +1,23 @@
+"""seamless-m4t-large-v2  [audio]  — enc-dec backbone  [arXiv:2308.11596; hf]
+
+24L d_model=1024 16H d_ff=8192 vocab=256206.  Backbone only: the speech
+frontend is a stub — ``input_specs`` supplies precomputed frame embeddings
+(B, S, d_model) to the encoder (assignment note).  24 encoder + 24 decoder
+layers (the text-to-text path of the large-v2 release)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=256206,
+    ffn_type="gelu", frontend="audio_frames",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2-smoke", family="audio",
+        n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256,
+        ffn_type="gelu", frontend="audio_frames",
+    )

@@ -1,0 +1,35 @@
+"""ARGUS core: the paper's contribution as a composable JAX-side library.
+
+Layers (DESIGN.md §3):
+  layout    — CuTe-style layout algebra (shapes/strides, nesting, division)
+  tags      — symbolic tags + quasi-affine expression engine (⊥ < t < ⊤)
+  dsl       — the tile IR: grids, loads/stores, compute ops, tag assertions
+  analysis  — flow-sensitive, path-insensitive tag propagation
+  solver    — decision layer with concrete counterexamples
+  invariants— per-kernel-family templates (GEMM / flash attention / MoE)
+  kernelspec— TPU structural checks (alignment, VMEM fit, masking)
+  harness   — the agentic optimization loop (knowledge base, planner,
+              selector, lowering, validator, ICRL)
+"""
+from .analysis import CheckReport, check
+from .dsl import TileProgram
+from .invariants import (FlashAttentionConfig, FlashAttentionProblem,
+                         GemmConfig, GemmProblem, MoEConfig, MoEProblem,
+                         SSDConfig, SSDProblem,
+                         build_flash_attention_program, build_gemm_program,
+                         build_moe_program, build_ssd_program,
+                         verify_flash_attention, verify_gemm, verify_moe,
+                         verify_ssd)
+from .kernelspec import VerifyResult
+from .solver import ProofResult, Status
+from .tags import BOT, TOP, Expr, Var, app, make_tag
+
+__all__ = [
+    "CheckReport", "check", "TileProgram",
+    "GemmConfig", "GemmProblem", "FlashAttentionConfig",
+    "FlashAttentionProblem", "MoEConfig", "MoEProblem",
+    "build_gemm_program", "build_flash_attention_program",
+    "build_moe_program", "verify_gemm", "verify_flash_attention",
+    "verify_moe", "VerifyResult", "ProofResult", "Status",
+    "BOT", "TOP", "Expr", "Var", "app", "make_tag",
+]

@@ -1,0 +1,12 @@
+from .costmodel import CostEstimate, estimate
+from .icrl import OptimizeResult, icrl_train, optimize_kernel
+from .knowledge import KNOWLEDGE_BASE, Skill, skills_for
+from .lowering import LoweringAgent
+from .planner import KernelState, Planner, PlannerParams
+from .selector import Selector
+from .validator import Validator
+
+__all__ = ["estimate", "CostEstimate", "KNOWLEDGE_BASE", "Skill",
+           "skills_for", "Planner", "PlannerParams", "KernelState",
+           "Selector", "LoweringAgent", "Validator", "optimize_kernel",
+           "icrl_train", "OptimizeResult"]

@@ -1,0 +1,150 @@
+"""In-context RL loop — Algorithm 1 of the paper.
+
+The planner prompt θ is the mutable policy; trajectories of
+(state, action, reward) feed PolicyEval → Analyze → ParameterUpdate.
+Offline, θ is the per-skill bias vector plus a textual lesson log (the
+"text gradient" analogue: every update appends a human-readable lesson and
+nudges the biases toward skills with positive advantage) — DESIGN.md §2d.
+
+``optimize_kernel`` is the inner hillclimb (one s₀, T steps, keep the best
+valid candidate); ``icrl_train`` is the outer cross-task loop.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .lowering import LoweredState, LoweringAgent
+from .planner import KernelState, Planner, PlannerParams, Proposal
+from .selector import Selector
+from .validator import Validator, Verdict
+
+
+@dataclass
+class StepRecord:
+    skill: str
+    context: str
+    verdict: Verdict
+    accepted: bool
+    time_s: float
+
+
+@dataclass
+class OptimizeResult:
+    best_state: KernelState
+    best_time_s: float
+    baseline_time_s: float
+    history: List[StepRecord] = field(default_factory=list)
+    cost_units: float = 0.0
+    solved: bool = True
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_time_s / self.best_time_s
+
+
+def optimize_kernel(state0: KernelState, *, planner: Planner,
+                    selector: Optional[Selector] = None,
+                    lowering: Optional[LoweringAgent] = None,
+                    validator: Optional[Validator] = None,
+                    iterations: int = 10,
+                    max_repairs: int = 2) -> OptimizeResult:
+    selector = selector or Selector()
+    lowering = lowering or LoweringAgent()
+    validator = validator or Validator()
+
+    state0.refresh()
+    best = state0
+    best_t = state0.est.time_s
+    res = OptimizeResult(best, best_t, best_t)
+
+    cur = state0
+    for _ in range(iterations):
+        props = planner.propose(cur)
+        prop = selector.select(props)
+        if prop is None:
+            break
+        lowered = lowering.apply(cur, prop)
+        verdict = validator.evaluate(lowered, best_t)
+        res.cost_units += verdict.cost_units
+        repairs = 0
+        while not verdict.ok and repairs < max_repairs and (
+                verdict.caught_static or verdict.caught_unit):
+            lowered = lowering.repair(lowered,
+                                      targeted=verdict.caught_static)
+            verdict = validator.evaluate(lowered, best_t)
+            res.cost_units += verdict.cost_units
+            repairs += 1
+        accepted = verdict.ok and verdict.est_time_s < best_t
+        if accepted:
+            best = lowered.state
+            best_t = verdict.est_time_s
+            cur = lowered.state
+        elif verdict.ok:
+            cur = lowered.state      # sideways move keeps exploring
+        res.history.append(StepRecord(prop.skill.name, prop.context,
+                                      verdict, accepted,
+                                      verdict.est_time_s))
+    res.best_state, res.best_time_s = best, best_t
+    res.solved = any(r.verdict.ok for r in res.history) or not res.history
+    return res
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — outer loop
+# --------------------------------------------------------------------------
+
+def policy_eval(buffer: List[StepRecord]) -> Dict[str, float]:
+    """E_k: mean reward per skill over the episode buffer."""
+    sums: Dict[str, List[float]] = {}
+    for rec in buffer:
+        sums.setdefault(rec.skill, []).append(rec.verdict.reward)
+    return {k: sum(v) / len(v) for k, v in sums.items()}
+
+
+def analyze(evals: Dict[str, float]) -> Dict[str, float]:
+    """g_k: advantage of each skill vs the episode mean (the numeric
+    'text gradient')."""
+    if not evals:
+        return {}
+    mean = sum(evals.values()) / len(evals)
+    return {k: v - mean for k, v in evals.items()}
+
+
+def parameter_update(params: PlannerParams, grads: Dict[str, float],
+                     lr: float = 0.5) -> PlannerParams:
+    for k, g in grads.items():
+        params.skill_bias[k] = params.skill_bias.get(k, 0.0) + lr * g
+        direction = "prefer" if g > 0 else "avoid"
+        params.lessons.append(
+            f"{direction} {k} (advantage {g:+.3f}) on this task family")
+    return params
+
+
+def icrl_train(tasks: Sequence[KernelState], *, episodes: int = 8,
+               iterations: int = 8, seed: int = 0,
+               fault_model: bool = True,
+               use_invariants: bool = True) -> Tuple[PlannerParams,
+                                                     List[OptimizeResult]]:
+    """Outer ICRL loop: sample s₀ ~ E, run the inner trajectory, update θ."""
+    rng = random.Random(seed)
+    params = PlannerParams()
+    results: List[OptimizeResult] = []
+    for k in range(episodes):
+        s0 = tasks[rng.randrange(len(tasks))]
+        state = KernelState(s0.family, s0.cfg, s0.prob).refresh()
+        planner = Planner(params)
+        res = optimize_kernel(
+            state, planner=planner,
+            selector=Selector(seed=seed * 1000 + k),
+            lowering=LoweringAgent(fault_model=fault_model,
+                                   seed=seed * 77 + k),
+            validator=Validator(use_invariants=use_invariants),
+            iterations=iterations)
+        results.append(res)
+        evals = policy_eval(res.history)
+        grads = analyze(evals)
+        params = parameter_update(params, grads)
+    return params, results

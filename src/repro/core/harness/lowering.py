@@ -1,0 +1,84 @@
+"""Lowering agent (paper §6): applies the selected transformation.
+
+In this offline reproduction the rewrite itself is exact (config-space), but
+intrusive rewrites in the paper are *fallible* — the LLM mis-lowers some
+fraction of global restructurings, which is precisely what data-flow
+invariants exist to catch.  The agent therefore carries a calibrated fault
+model: each applied skill may inject a latent bug from the family's
+injectable-bug list (the same bugs the invariant tests catch), with a rate
+per Table-1 tier.  Benchmarks Table-3/§9.4 run with the fault model ON to
+measure the invariant feedback's effect; production tuning
+(examples/argus_optimize.py) runs with it OFF.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, replace as dc_replace
+from typing import Dict, List, Optional, Tuple
+
+from .planner import KernelState, Proposal
+
+# latent-bug menu per family (must match invariants.build_* inject_bug)
+FAMILY_BUGS: Dict[str, Tuple[str, ...]] = {
+    "gemm": ("swap_b_index", "acc_depends_k", "grid_short", "missing_init",
+             "stagger_mismatch"),
+    "flash_attention": ("wrong_kv_head", "m_depends_kv", "q_block_offset"),
+    "moe": ("w_by_block_index", "combine_other_table", "gate_unpermuted",
+            "down_f_offset", "y_depends_f"),
+    "ssd": ("b_chunk_offset", "state_depends_c", "xb_mismatch"),
+    "flash_decode": ("wrong_kv_head", "split_overlap", "partial_mislabel"),
+}
+
+# fault rates by Table-1 tier: intrusive rewrites break more often
+TIER_BUG_RATE = {"global": 0.35, "local": 0.10, "isa": 0.20}
+
+
+@dataclass
+class LoweredState:
+    state: KernelState
+    latent_bug: Optional[str] = None    # unknown to the agent until caught
+    applied: str = ""
+
+
+class LoweringAgent:
+    def __init__(self, *, fault_model: bool = False, seed: int = 0):
+        self.fault_model = fault_model
+        self.rng = random.Random(seed)
+
+    def apply(self, state: KernelState, prop: Proposal) -> LoweredState:
+        new_state = KernelState(state.family, prop.new_cfg, state.prob)
+        new_state.refresh()
+        bug = None
+        if self.fault_model:
+            rate = TIER_BUG_RATE.get(prop.skill.tier, 0.1)
+            menu = self._compatible_bugs(new_state)
+            if menu and self.rng.random() < rate:
+                bug = self.rng.choice(menu)
+        return LoweredState(new_state, bug,
+                            applied=f"{prop.skill.name}[{prop.context}]")
+
+    def repair(self, lowered: LoweredState, *, targeted: bool
+               ) -> LoweredState:
+        """Fix attempt after a failure report.  With a concrete
+        counterexample (targeted) the fix lands with high probability; with
+        only a unit-test failure it is blind trial-and-error (paper §9.4)."""
+        p_fix = 0.9 if targeted else 0.4
+        if self.rng.random() < p_fix:
+            return LoweredState(lowered.state, None, lowered.applied)
+        # failed fix may even mutate into a different bug
+        menu = self._compatible_bugs(lowered.state)
+        bug = self.rng.choice(menu) if menu else None
+        return LoweredState(lowered.state, bug, lowered.applied)
+
+    def _compatible_bugs(self, state: KernelState) -> List[str]:
+        menu = list(FAMILY_BUGS[state.family])
+        cfg, prob = state.cfg, state.prob
+        if state.family == "gemm":
+            if not getattr(cfg, "stagger_k", False):
+                menu.remove("stagger_mismatch")
+        if state.family in ("flash_attention", "flash_decode"):
+            if prob.q_heads == prob.kv_heads:
+                menu.remove("wrong_kv_head")
+        if state.family == "moe" and not getattr(cfg, "fuse_gate", True):
+            menu.remove("gate_unpermuted")
+        return menu

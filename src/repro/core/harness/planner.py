@@ -1,0 +1,80 @@
+"""Learnable planner (paper §6): binds KB skills to the current kernel.
+
+The planner is a *policy* over (skill, context) proposals.  Its scoring is
+the paper's "napkin math first" discipline: for every enumerable context it
+predicts the cost-model delta, then adds a learned per-skill bias θ (the
+ICRL-updated "prompt parameters").  Offline this policy is deterministic
+arithmetic; an ``LLMPolicy`` adapter can replace `score_extra` online —
+the ICRL loop (icrl.py) is agnostic (DESIGN.md §2d).
+
+Proposals are the paper's triple (optimization, context, score); each also
+carries the invariant templates that must hold after the rewrite (the
+family verify_* call re-instantiates them concretely).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from . import costmodel
+from .knowledge import Skill, skills_for
+
+
+@dataclass
+class Proposal:
+    skill: Skill
+    context: str
+    new_cfg: object
+    score: float
+    predicted_s: float
+    note: str = ""
+
+
+@dataclass
+class KernelState:
+    family: str
+    cfg: object
+    prob: object
+    est: costmodel.CostEstimate = None   # filled by the validator
+
+    def refresh(self):
+        self.est = costmodel.estimate(self.family, self.cfg, self.prob)
+        return self
+
+
+@dataclass
+class PlannerParams:
+    """θ — the mutable policy parameters the ICRL loop updates."""
+
+    skill_bias: Dict[str, float] = field(default_factory=dict)
+    lessons: List[str] = field(default_factory=list)   # textual trace
+
+    def bias(self, skill: str) -> float:
+        return self.skill_bias.get(skill, 0.0)
+
+
+class Planner:
+    def __init__(self, params: Optional[PlannerParams] = None):
+        self.params = params or PlannerParams()
+
+    def propose(self, state: KernelState, top: int = 12) -> List[Proposal]:
+        if state.est is None:
+            state.refresh()
+        base = state.est.time_s
+        out: List[Proposal] = []
+        for skill in skills_for(state.family):
+            for label, new_cfg in skill.contexts(state.cfg, state.prob):
+                try:
+                    est = costmodel.estimate(state.family, new_cfg,
+                                             state.prob)
+                except Exception:
+                    continue
+                speedup = base / est.time_s if est.time_s > 0 else 0.0
+                score = math.log(max(speedup, 1e-6)) \
+                    + self.params.bias(skill.name)
+                out.append(Proposal(skill, label, new_cfg, score,
+                                    est.time_s,
+                                    note=f"bound={est.bound}"))
+        out.sort(key=lambda p: -p.score)
+        return out[:top]

@@ -1,0 +1,4 @@
+from .straggler import StepTimer, StragglerMonitor
+from .preemption import PreemptionHandler
+
+__all__ = ["StragglerMonitor", "StepTimer", "PreemptionHandler"]

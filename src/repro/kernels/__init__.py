@@ -1,0 +1,17 @@
+"""Pallas TPU kernels — the paper's three production families plus two
+beyond-paper extensions, every config gated by ARGUS invariant validation
+before lowering (see repro.core.invariants):
+
+  gemm             — MXU GEMM: tiles / stagger-K / split-K policies
+  flash_attention  — online-softmax prefill (GQA, causal) + split-KV
+                     flash-decode for serving
+  moe              — capacity dispatch + grouped FFN + fused gate epilogue
+  ssd              — Mamba-2 state-space-dual chunk scan
+
+Each family: <name>.py (pl.pallas_call + BlockSpec), ops.py (validated
+jit entry point), ref.py (pure-jnp oracle).  Kernels are validated in
+interpret=True mode on this CPU host; TPU v5e is the lowering target.
+"""
+from . import flash_attention, gemm, moe, ssd
+
+__all__ = ["gemm", "flash_attention", "moe", "ssd"]

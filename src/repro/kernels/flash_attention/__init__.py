@@ -1,0 +1,5 @@
+from .ops import InvariantViolation, default_config, mha, mha_decode
+from .ref import mha_ref
+
+__all__ = ["mha", "mha_decode", "mha_ref", "default_config",
+           "InvariantViolation"]

@@ -1,0 +1,122 @@
+"""Public flash-attention entry point with the ARGUS verification gate and a
+recompute-based custom VJP (flash-style backward: nothing but q, k, v and
+the output are saved; the backward pass recomputes attention via the oracle
+graph, which XLA fuses — the TPU analogue of FlashAttention-2's recompute
+backward)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.invariants import (FlashAttentionConfig,
+                                   FlashAttentionProblem,
+                                   verify_flash_attention)
+
+from . import ref
+from .flash_attention import flash_attention
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+@functools.lru_cache(maxsize=512)
+def _validate(cfg: FlashAttentionConfig,
+              prob: FlashAttentionProblem) -> None:
+    res = verify_flash_attention(cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def default_config(seq_q: int, seq_kv: int,
+                   head_dim: int) -> FlashAttentionConfig:
+    bq = 256 if seq_q >= 256 else max(8, seq_q)
+    bkv = 128 if seq_kv >= 128 else max(8, seq_kv)
+    return FlashAttentionConfig(block_q=bq, block_kv=bkv)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6))
+def _attn(q, k, v, cfg, causal, scale, interpret):
+    return flash_attention(q, k, v, cfg=cfg, causal=causal, scale=scale,
+                           interpret=interpret)
+
+
+def _attn_fwd(q, k, v, cfg, causal, scale, interpret):
+    out = flash_attention(q, k, v, cfg=cfg, causal=causal, scale=scale,
+                          interpret=interpret)
+    return out, (q, k, v)
+
+
+def _attn_bwd(cfg, causal, scale, interpret, saved, g):
+    q, k, v = saved
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.mha_ref(q_, k_, v_, causal=causal,
+                                       scale=scale), q, k, v)
+    return vjp(g)
+
+
+_attn.defvjp(_attn_fwd, _attn_bwd)
+
+
+@functools.lru_cache(maxsize=512)
+def _validate_decode(cfg, prob) -> None:
+    from repro.core.invariants import verify_flash_decode
+    res = verify_flash_decode(cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def mha_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               kv_len, *, cfg=None, scale=None,
+               interpret: bool = False) -> jnp.ndarray:
+    """Validated split-KV decode attention.  q: (B, Hq, 1, D);
+    k, v: (B, Hkv, S, D) cache; kv_len: () current length.  The jnp
+    oracle is ``ref.mha_ref(..., causal=False, kv_len=...)``."""
+    from repro.core.invariants import (FlashDecodeConfig,
+                                       FlashDecodeProblem)
+    B, Hq, _, D = q.shape
+    _, Hkv, S, _ = k.shape
+    cfg = cfg or FlashDecodeConfig(
+        kv_splits=max(1, min(16, S // max(S // 16, 128))))
+    while S % cfg.kv_splits:
+        cfg = FlashDecodeConfig(kv_splits=cfg.kv_splits - 1)
+    prob = FlashDecodeProblem(
+        batch=int(B), q_heads=int(Hq), kv_heads=int(Hkv), seq_kv=int(S),
+        head_dim=int(D),
+        dtype={"bfloat16": "bf16", "float32": "f32"}.get(str(q.dtype),
+                                                         str(q.dtype)))
+    _validate_decode(cfg, prob)
+    from .decode import flash_decode
+    return flash_decode(q, k, v, kv_len, cfg=cfg, scale=scale,
+                        interpret=interpret)
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        cfg: Optional[FlashAttentionConfig] = None,
+        causal: bool = True, scale=None, interpret: bool = False,
+        use_kernel: bool = True) -> jnp.ndarray:
+    """Validated GQA flash attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
+    if not use_kernel:
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale)
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    cfg = cfg or default_config(Sq, Skv, D)
+    prob = FlashAttentionProblem(
+        batch=int(B), q_heads=int(Hq), kv_heads=int(Hkv), seq_q=int(Sq),
+        seq_kv=int(Skv), head_dim=int(D), causal=bool(causal),
+        dtype={"bfloat16": "bf16", "float32": "f32"}.get(str(q.dtype),
+                                                         str(q.dtype)))
+    if prob.causal is False and cfg.causal_block_skip:
+        cfg = FlashAttentionConfig(cfg.block_q, cfg.block_kv,
+                                   cfg.v_transposed_staging, False,
+                                   cfg.applies_mask)
+    _validate(cfg, prob)
+    return _attn(q, k, v, cfg, causal, scale, interpret)

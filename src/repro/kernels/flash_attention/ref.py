@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+import jax.numpy as jnp
+
+
+def _softmax(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, scale=None,
+            kv_len=None) -> jnp.ndarray:
+    """O = softmax(Q Kᵀ · scale) V, f32 internally.
+
+    q: (B, Hq, Sq, D);  k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    ``kv_len`` masks padded key positions >= kv_len.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    neg = jnp.float32(-1e30)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, neg)
+    if kv_len is not None and kv_len < Skv:
+        s = jnp.where(jnp.arange(Skv)[None, :] < kv_len, s, neg)
+    p = _softmax(s)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

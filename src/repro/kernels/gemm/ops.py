@@ -1,0 +1,62 @@
+"""jit'd public entry point for the GEMM family, with the ARGUS gate.
+
+A kernel config must pass compile-time invariant validation
+(:func:`repro.core.invariants.verify_gemm`) before it is allowed to lower —
+this is the framework-level integration of the paper's technique: a config
+that mispairs MXU operands, clobbers its accumulator, or under-covers the
+output is rejected *here*, with a concrete counterexample, before any
+``pallas_call``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.invariants import GemmConfig, GemmProblem, verify_gemm
+
+from . import ref
+from .gemm import gemm
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+@functools.lru_cache(maxsize=512)
+def _validate(cfg: GemmConfig, prob: GemmProblem) -> None:
+    res = verify_gemm(cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *,
+           cfg: Optional[GemmConfig] = None,
+           out_dtype=None, interpret: bool = False,
+           use_kernel: bool = True) -> jnp.ndarray:
+    """Validated GEMM.  ``use_kernel=False`` falls back to the oracle
+    (used on hosts without Pallas lowering support)."""
+    if not use_kernel:
+        return ref.matmul_ref(a, b, out_dtype=out_dtype)
+    cfg = cfg or default_config(a.shape[0], b.shape[1], a.shape[1])
+    prob = GemmProblem(m=int(a.shape[0]), n=int(b.shape[1]),
+                       k=int(a.shape[1]), dtype=str(a.dtype))
+    _validate(cfg, _normalize(prob))
+    return gemm(a, b, cfg=cfg, out_dtype=out_dtype, interpret=interpret)
+
+
+def _normalize(prob: GemmProblem) -> GemmProblem:
+    dt = {"bfloat16": "bf16", "float32": "f32"}.get(prob.dtype, prob.dtype)
+    return GemmProblem(prob.m, prob.n, prob.k, dt)
+
+
+def default_config(m: int, n: int, k: int) -> GemmConfig:
+    """Shape-adaptive default (the harness' tuned configs override this)."""
+    bm = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
+    bn = 128 if n >= 128 else max(128, n)  # lane dim stays 128-aligned
+    bk = 128 if k >= 128 else max(128, k)
+    if m * n <= 256 * 256 and k >= 4096 and (k // bk) % 4 == 0:
+        return GemmConfig(bm=bm, bn=min(bn, 128), bk=bk, split_k=4)
+    return GemmConfig(bm=bm, bn=bn, bk=bk)

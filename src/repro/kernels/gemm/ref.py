@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the GEMM kernel family."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+               out_dtype=None) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation (the kernel's numerics contract)."""
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)

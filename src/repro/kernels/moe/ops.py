@@ -1,0 +1,96 @@
+"""Full fused-MoE layer op: route → dispatch → grouped FFN kernel → combine,
+with the ARGUS gate on the kernel config."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.invariants import MoEConfig, MoEProblem, verify_moe
+from repro.core.kernelspec import cdiv
+
+from . import ref
+from .moe import compute_dispatch, grouped_ffn
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+@functools.lru_cache(maxsize=512)
+def _validate(cfg: MoEConfig, prob: MoEProblem) -> None:
+    res = verify_moe(cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def default_config(d_model: int, d_ff: int) -> MoEConfig:
+    bf = 512
+    while d_ff % bf:
+        bf //= 2
+    bt = 64
+    return MoEConfig(block_t=bt, block_f=max(bf, 128) if d_ff % 128 == 0
+                     else d_ff)
+
+
+def capacity_for(tokens: int, top_k: int, n_experts: int, block_t: int,
+                 capacity_factor: float = 1.25) -> int:
+    cap = int(tokens * top_k * capacity_factor / n_experts)
+    return max(block_t, cdiv(cap, block_t) * block_t)
+
+
+def moe_ffn(x: jnp.ndarray, gates: jnp.ndarray, expert_idx: jnp.ndarray,
+            wg: jnp.ndarray, wu: jnp.ndarray, wd: jnp.ndarray, *,
+            cfg: Optional[MoEConfig] = None,
+            capacity_factor: float = 1.25,
+            interpret: bool = False,
+            use_kernel: bool = True) -> jnp.ndarray:
+    """Fused MoE feed-forward.
+
+    x: (T, DM); gates: (T, K) f32; expert_idx: (T, K) int32;
+    wg, wu: (E, DM, DF); wd: (E, DF, DM).  Returns (T, DM).
+    Tokens above expert capacity are dropped (contribute zero), the
+    GShard/Switch convention; the dense oracle in ref.py is capacity-free,
+    so layer tests compare through ``compute_dispatch``'s keep mask.
+    """
+    T, DM = x.shape
+    E, _, DF = wg.shape
+    K = gates.shape[1]
+    if not use_kernel:
+        return ref.moe_ffn_ref(x, gates, expert_idx, wg, wu, wd)
+    cfg = cfg or default_config(DM, DF)
+    _validate(cfg, MoEProblem(tokens=int(T), d_model=int(DM), d_ff=int(DF),
+                              n_experts=int(E), top_k=int(K),
+                              dtype={"bfloat16": "bf16"}.get(str(x.dtype),
+                                                             str(x.dtype))))
+    C = capacity_for(T, K, E, cfg.block_t, capacity_factor)
+
+    dest, keep = compute_dispatch(expert_idx, E, C)          # (T, K)
+    flat_dest = dest.reshape(-1)
+    flat_keep = keep.reshape(-1)
+    tok_of_pair = jnp.repeat(jnp.arange(T), K)
+
+    # dispatch: scatter token rows into (E*C, DM) slots
+    x_routed = jnp.zeros((E * C, DM), x.dtype)
+    x_routed = x_routed.at[jnp.where(flat_keep, flat_dest, E * C)].set(
+        x[tok_of_pair], mode="drop")
+    g_routed = jnp.zeros((E * C, 1), jnp.float32)
+    g_routed = g_routed.at[jnp.where(flat_keep, flat_dest, E * C)].set(
+        gates.reshape(-1, 1).astype(jnp.float32), mode="drop")
+
+    y_routed = grouped_ffn(
+        x_routed.reshape(E, C, DM), wg, wu, wd,
+        g_routed.reshape(E, C, 1), cfg=cfg, interpret=interpret)
+
+    # combine: gather each (token, slot) pair's output and sum over slots;
+    # gate scaling already applied in the kernel epilogue when fused
+    y_flat = y_routed.reshape(E * C, DM)
+    pair_out = jnp.where(flat_keep[:, None],
+                         y_flat[flat_dest], 0).astype(jnp.float32)
+    if not cfg.fuse_gate:
+        pair_out = pair_out * gates.reshape(-1, 1)
+    out = pair_out.reshape(T, K, DM).sum(axis=1)
+    return out.astype(x.dtype)

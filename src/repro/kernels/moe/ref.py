@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the fused MoE family."""
+import jax.numpy as jnp
+
+
+def swiglu_ref(hg, hu):
+    return jnp.asarray(jax_silu(hg) * hu)
+
+
+def jax_silu(x):
+    xf = x.astype(jnp.float32)
+    return xf / (1.0 + jnp.exp(-xf))
+
+
+def grouped_ffn_ref(x_routed, wg, wu, wd, gates_routed=None):
+    """Oracle for the Pallas grouped-FFN kernel.
+
+    x_routed: (E, C, DM); wg, wu: (E, DM, DF); wd: (E, DF, DM);
+    gates_routed: optional (E, C, 1) fused gate scaling.
+    """
+    xf = x_routed.astype(jnp.float32)
+    hg = jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32))
+    hu = jnp.einsum("ecd,edf->ecf", xf, wu.astype(jnp.float32))
+    act = jax_silu(hg) * hu
+    y = jnp.einsum("ecf,efd->ecd", act.astype(x_routed.dtype
+                                              ).astype(jnp.float32),
+                   wd.astype(jnp.float32))
+    if gates_routed is not None:
+        y = y * gates_routed.astype(jnp.float32)
+    return y.astype(x_routed.dtype)
+
+
+def moe_ffn_ref(x, gates, expert_idx, wg, wu, wd):
+    """Dense oracle for the *whole* MoE layer, capacity-free.
+
+    x: (T, DM); gates: (T, K) f32; expert_idx: (T, K) int32;
+    wg, wu: (E, DM, DF); wd: (E, DF, DM).  Every token visits every expert
+    densely; routing masks select contributions — exact, O(T·E) flops.
+    """
+    T, DM = x.shape
+    E = wg.shape[0]
+    xf = x.astype(jnp.float32)
+    hg = jnp.einsum("td,edf->etf", xf, wg.astype(jnp.float32))
+    hu = jnp.einsum("td,edf->etf", xf, wu.astype(jnp.float32))
+    act = jax_silu(hg) * hu
+    y_e = jnp.einsum("etf,efd->etd", act.astype(x.dtype).astype(jnp.float32),
+                     wd.astype(jnp.float32))          # (E, T, DM)
+    # combine: sum over slots of gate * expert output
+    onehot = jax_one_hot(expert_idx, E)               # (T, K, E)
+    w = (onehot * gates[..., None]).sum(axis=1)       # (T, E)
+    out = jnp.einsum("te,etd->td", w.astype(jnp.float32), y_e)
+    return out.astype(x.dtype)
+
+
+def jax_one_hot(idx, n):
+    return (idx[..., None] == jnp.arange(n)).astype(jnp.float32)

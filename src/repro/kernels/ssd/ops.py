@@ -1,0 +1,41 @@
+"""Public SSD entry point with the ARGUS gate."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.invariants import SSDConfig, SSDProblem, verify_ssd
+
+from . import ref
+from .ssd import ssd_chunk_scan
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+@functools.lru_cache(maxsize=256)
+def _validate(cfg: SSDConfig, prob: SSDProblem) -> None:
+    res = verify_ssd(cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def ssd(x: jnp.ndarray, da: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
+        *, cfg: Optional[SSDConfig] = None, interpret: bool = False,
+        use_kernel: bool = True) -> jnp.ndarray:
+    """Validated SSD chunk scan.  x: (BH, S, P); da: (BH, S) log-decays;
+    Bm, Cm: (BH, S, N) -> y (BH, S, P)."""
+    if not use_kernel:
+        return ref.ssd_ref(x, da, Bm, Cm, (cfg or SSDConfig()).chunk)[0]
+    BH, S, P = x.shape
+    cfg = cfg or SSDConfig(chunk=min(128, S))
+    _validate(cfg, SSDProblem(batch_heads=int(BH), seq=int(S),
+                              head_dim=int(P), d_state=int(Bm.shape[-1]),
+                              dtype={"float32": "f32",
+                                     "bfloat16": "bf16"}.get(str(x.dtype),
+                                                             str(x.dtype))))
+    return ssd_chunk_scan(x, da, Bm, Cm, cfg=cfg, interpret=interpret)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the SSD (Mamba-2) chunk kernel."""
+import jax.numpy as jnp
+
+
+def _segsum(da):
+    """da: (..., q) -> L[..., i, j] = sum_{k in (j, i]} da_k, -inf above."""
+    q = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_ref(x, da, Bm, Cm, chunk):
+    """Chunked SSD scan, sequential-over-chunks oracle.
+
+    x: (BH, S, P); da: (BH, S) log-decays (<= 0); Bm, Cm: (BH, S, N).
+    Returns y: (BH, S, P), final_state: (BH, N, P).
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    q = chunk
+    xc = x.reshape(BH, nc, q, P).astype(jnp.float32)
+    dac = da.reshape(BH, nc, q).astype(jnp.float32)
+    Bc = Bm.reshape(BH, nc, q, N).astype(jnp.float32)
+    Cc = Cm.reshape(BH, nc, q, N).astype(jnp.float32)
+
+    L = jnp.exp(_segsum(dac))                              # (BH,nc,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc) * L
+    y_intra = jnp.einsum("bcqk,bckp->bcqp", scores, xc)
+
+    dacs = jnp.cumsum(dac, axis=-1)
+    decay_to_end = jnp.exp(dacs[..., -1:] - dacs)          # (BH,nc,q)
+    chunk_state = jnp.einsum("bcqn,bcq,bcqp->bcnp", Bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(dacs[..., -1])                   # (BH,nc)
+
+    ys = []
+    state = jnp.zeros((BH, N, P), jnp.float32)
+    for c in range(nc):
+        y_inter = jnp.einsum("bqn,bq,bnp->bqp", Cc[:, c],
+                             jnp.exp(dacs[:, c]), state)
+        ys.append(y_intra[:, c] + y_inter)
+        state = chunk_decay[:, c][:, None, None] * state + chunk_state[:, c]
+    y = jnp.stack(ys, axis=1).reshape(BH, S, P)
+    return y.astype(x.dtype), state

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+                           ).strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run driver (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture × input shape × mesh) cell:
+    jit(step).lower(**ShapeDtypeStruct inputs).compile()
+with the production in/out shardings, then record
+    compiled.memory_analysis()  — proves the cell fits per-device HBM,
+    compiled.cost_analysis()    — FLOPs/bytes for §Roofline,
+    collective bytes parsed from the partitioned HLO.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, supports_cell
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.optim.schedule import cosine_schedule
+from repro.parallel import (data_shardings, default_rules, param_shardings)
+from repro.parallel.sharding import tree_shardings
+from repro.train import abstract_opt_state, make_train_step
+from repro.train.step import make_prefill_step, make_serve_step
+
+
+def _named(tree_shardings):
+    return tree_shardings
+
+
+def model_flops_for(cfg, model, cell) -> float:
+    n = model.n_active_params
+    if cell.mode == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.mode == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: Path,
+             grad_accum: int = 1) -> dict:
+    cell = SHAPES[shape]
+    cfg = configs.get_config(arch)
+    model = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.api import set_activation_spec
+    b_axes = rules.batch_axes
+    set_activation_spec(P(b_axes if len(b_axes) > 1 else b_axes[0],
+                          None, None))
+
+    abstract = model.abstract()
+    p_shard = param_shardings(model.axes(), abstract, rules, mesh)
+    inputs = configs.arch_input_specs(arch, shape)
+    in_shard = data_shardings(inputs, rules, mesh)
+    if "cache" in inputs:
+        in_shard["cache"] = tree_shardings(model.cache_axes(),
+                                           inputs["cache"], rules, mesh)
+
+    with mesh:
+        if cell.mode == "train":
+            opt = abstract_opt_state(abstract)
+            o_shard = jax.tree.map(lambda p: p.sharding if hasattr(
+                p, "sharding") else None, p_shard)
+            step = make_train_step(
+                model, lr_fn=lambda s: cosine_schedule(
+                    s, peak_lr=3e-4, warmup=100, total=10000),
+                grad_accum=grad_accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard,
+                              jax.tree.map(lambda _: None, opt),
+                              in_shard),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(abstract, opt, inputs)
+        elif cell.mode == "prefill":
+            pre = make_prefill_step(model, cell.seq_len)
+            if cfg.frontend == "audio_frames":
+                fn = lambda params, enc: model.prefill(params, enc,
+                                                       cell.seq_len)
+                cache_sh = tree_shardings(
+                    model.cache_axes(),
+                    model.cache_shape(cell.global_batch, cell.seq_len,
+                                      cell.seq_len), rules, mesh)
+                jitted = jax.jit(fn, in_shardings=(p_shard,
+                                                   in_shard["enc_embeds"]),
+                                 out_shardings=cache_sh)
+                lowered = jitted.lower(abstract, inputs["enc_embeds"])
+            else:
+                cache_sh = tree_shardings(
+                    model.cache_axes(),
+                    model.cache_shape(cell.global_batch, cell.seq_len),
+                    rules, mesh)
+                jitted = jax.jit(pre, in_shardings=(p_shard,
+                                                    in_shard["tokens"]),
+                                 out_shardings=(None, cache_sh))
+                lowered = jitted.lower(abstract, inputs["tokens"])
+        else:  # decode
+            serve = make_serve_step(model)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(p_shard, in_shard["cache"],
+                              in_shard["tokens"], in_shard["pos"]),
+                out_shardings=(None, in_shard["cache"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(abstract, inputs["cache"],
+                                   inputs["tokens"], inputs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    set_activation_spec(None)
+    mem = compiled.memory_analysis()
+    roof = hlo_analysis.analyze(
+        compiled, n_chips=n_chips, trips=model.scan_trips(),
+        model_flops=model_flops_for(cfg, model, cell))
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "mode": cell.mode,
+        "params": model.n_params,
+        "active_params": model.n_active_params,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": roof.as_dict(),
+    }
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape}_{rec['mesh']}"
+    (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.outdir)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    archs = configs.ARCH_NAMES if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            if not supports_cell(arch, shape):
+                print(f"SKIP  {arch:24s} {shape:12s} "
+                      f"(full-attention arch, O(N²) at 500k — DESIGN.md §4)")
+                continue
+            for mp in meshes:
+                tag = f"{arch} {shape} {'multi' if mp else 'single'}"
+                try:
+                    t0 = time.time()
+                    rec = run_cell(arch, shape, mp, outdir,
+                                   args.grad_accum)
+                    r = rec["roofline"]
+                    print(f"OK    {tag:52s} "
+                          f"compile={rec['compile_s']:6.1f}s "
+                          f"bound={r['bound']:10s} "
+                          f"step={max(r['compute_s'], r['memory_s'], r['collective_s']):.4f}s "
+                          f"peak={(rec['memory']['peak_bytes'] or 0)/2**30:.2f}GiB",
+                          flush=True)
+                    results.append(rec)
+                except Exception as e:
+                    print(f"FAIL  {tag}: {e}", flush=True)
+                    traceback.print_exc()
+                    failures.append((tag, str(e)))
+    print(f"\n{len(results)} cells passed, {len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Roofline-term extraction from compiled/lowered artifacts.
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes; collective bytes
+are NOT in cost_analysis, so we parse the (optimized, SPMD-partitioned) HLO
+text and sum tensor sizes of every collective op, with per-op traffic
+factors for a ring implementation (assignment §ROOFLINE).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# v5e model constants (assignment)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# fraction of the tensor that actually crosses links (ring algorithms)
+_TRAFFIC_FACTOR = {
+    "all-gather": 1.0,        # output bytes ·(n−1)/n ≈ 1
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the op's result shape (the `= dtype[dims]` on the line);
+    tuple results sum their components."""
+    rhs = line.split("=", 1)
+    if len(rhs) < 2:
+        return 0
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs[1].split(")")[0] + ")"):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+        # only the result shape(s) before the op name; stop at first op call
+        break
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str, *, loop_trips: int = 1
+                     ) -> CollectiveStats:
+    """Sum collective traffic per device.
+
+    Trip attribution: XLA prints each computation once; collectives inside
+    a ``while`` body execute ``loop_trips`` times (the model's layer scan)
+    while entry-computation collectives execute once.  We detect the
+    enclosing computation by tracking section headers in the HLO text —
+    collectives cannot fuse, so they always appear directly in a named
+    computation body.
+    """
+    stats = CollectiveStats()
+    in_body = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # computation section headers look like:  %name (args) -> ty {
+        if ls.endswith("{") and ("(" in ls) and ("=" not in ls.split("(")[0]):
+            head = ls.split("(")[0]
+            in_body = ("while" in head) or ("body" in head)
+            continue
+        if "=" not in ls:
+            continue
+        for kind in _COLLECTIVES:
+            # match op invocation, not variable names: `kind(` after `= `
+            if re.search(rf"=\s*\S*\s*{kind}(?:-start)?\(", ls):
+                mult = loop_trips if in_body else 1
+                b = _first_shape_bytes(ls) * _TRAFFIC_FACTOR[kind] * mult
+                stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(
+                    kind, 0.0) + b
+                stats.count_by_kind[kind] = stats.count_by_kind.get(
+                    kind, 0) + 1
+                break
+    return stats
+
+
+@dataclass
+class Roofline:
+    """Per-device roofline terms.
+
+    Two measurement caveats discovered on this stack (EXPERIMENTS.md
+    §Dry-run): (1) XLA ``cost_analysis()`` reports the *per-device*
+    partitioned program, so terms divide by per-chip rates, not by chip
+    count; (2) XLA counts a ``while``/scan body ONCE regardless of trip
+    count (verified empirically), so all quantities are corrected by the
+    model's layer-scan trip count (``trips``) — the out-of-loop part
+    (embed/unembed) is over-scaled by the same factor, a documented
+    approximation.
+    """
+
+    flops: float          # per-device, trip-corrected
+    hbm_bytes: float
+    coll_bytes: float
+    n_chips: int
+    model_flops: float = 0.0   # global 6·N_active·D
+    trips: int = 1
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — how much of compiled compute
+        is 'useful' (catches remat/redundancy waste)."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "n_chips": self.n_chips,
+            "trips": self.trips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def analyze(compiled, *, n_chips: int, model_flops: float = 0.0,
+            trips: int = 1, hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * trips
+    hbm = float(cost.get("bytes accessed", 0.0)) * trips
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=coll.total_bytes * trips, n_chips=n_chips,
+                    model_flops=model_flops, trips=trips)

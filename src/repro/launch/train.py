@@ -1,0 +1,124 @@
+"""Training launcher.
+
+Runs for real on this host (reduced/small configs; ``--mesh host``) and
+carries the production posture: sharded step via pjit, checkpoint/restore
+with resumable data state, preemption handling, straggler monitoring,
+gradient accumulation + bf16 gradient compression.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --steps 200 --batch 8 --seq 128
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+        --reduced --steps 50 --resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import make_dataset
+from repro.ft import PreemptionHandler, StepTimer, StragglerMonitor
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.optim import adamw_init
+from repro.optim.schedule import cosine_schedule
+from repro.parallel import data_shardings, default_rules, param_shardings
+from repro.train import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", default="bf16",
+                    choices=["bf16", "none"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    model = build(cfg)
+    print(f"arch={cfg.name} params={model.n_params:,} "
+          f"active={model.n_active_params:,}")
+
+    mesh = make_host_mesh()
+    rules = default_rules(mesh, fsdp=False)
+    ds = make_dataset(cfg, seq_len=args.seq, global_batch=args.batch,
+                      seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    opt = adamw_init(params)
+    start_step = 0
+
+    ckpt_dir = args.ckpt_dir or f"checkpoints/{cfg.name}"
+    mgr = CheckpointManager(ckpt_dir, keep=3)
+    if args.resume and mgr.latest_step() is not None:
+        state = mgr.restore({"params": params, "opt": opt,
+                             "data": ds.state()})
+        params, opt = state["params"], state["opt"]
+        ds.restore(jax.tree.map(lambda x: int(np.asarray(x)),
+                                state["data"]))
+        start_step = int(state["meta"]["step"])
+        print(f"resumed from step {start_step}")
+
+    lr_fn = lambda s: cosine_schedule(s, peak_lr=args.lr, warmup=20,
+                                      total=max(args.steps, 100))
+    step_fn = make_train_step(
+        model, lr_fn=lr_fn, grad_accum=args.grad_accum,
+        compress_grads=None if args.compress_grads == "none" else "bf16")
+
+    p_shard = param_shardings(model.axes(), params, rules, mesh)
+    with mesh:
+        params = jax.device_put(params, p_shard)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        pre = PreemptionHandler()
+        mon = StragglerMonitor()
+        host = f"host{jax.process_index()}"
+        losses = []
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, next(ds))
+            with StepTimer() as t:
+                params, opt, metrics = jitted(params, opt, batch)
+                loss = float(metrics["loss"])
+            mon.record(host, t.last)
+            mon.check()
+            losses.append(loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['gnorm']):7.3f} "
+                      f"{t.last*1e3:7.1f} ms", flush=True)
+            want_ckpt = (step + 1) % args.ckpt_every == 0 or pre.preempted
+            if want_ckpt:
+                mgr.save(step + 1, {"params": params, "opt": opt,
+                                    "data": ds.state(),
+                                    "meta": {"step": step + 1}})
+            if pre.preempted:
+                print("preemption requested: checkpointed, exiting")
+                break
+        mgr.wait()
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .config import (MLASpec, ModelConfig, MoESpec, RecurrentSpec, SSMSpec)
+from .model import build, lm_loss
+
+__all__ = ["ModelConfig", "MoESpec", "MLASpec", "SSMSpec", "RecurrentSpec",
+           "build", "lm_loss"]

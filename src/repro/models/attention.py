@@ -1,0 +1,129 @@
+"""Attention variants beyond plain GQA: Multi-head Latent Attention (MLA,
+DeepSeek-V2) and KV-cache plumbing for decode.
+
+MLA caches the low-rank latent ``c_kv`` (+ the shared roped key) instead of
+full K/V — (kv_lora_rank + qk_rope_dim) per token instead of
+2·H·head_dim — the paper-assigned deepseek-v2-lite arch's signature
+mechanism (DESIGN.md §4)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .components import (F32, apply_head_norm, apply_norm, head_norm_specs,
+                         rope, sdpa)
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def mla_specs(cfg: ModelConfig) -> Dict:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.dtype)
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    s: Dict = {}
+    if m.q_lora_rank:
+        s["wq_a"] = ParamSpec((cfg.d_model, m.q_lora_rank), dt,
+                              ("embed", None))
+        s["q_norm"] = {"scale": ParamSpec((m.q_lora_rank,), F32, (None,),
+                                          "ones")}
+        s["wq_b"] = ParamSpec((m.q_lora_rank, H, qk), dt,
+                              (None, "heads", "head_dim"))
+    else:
+        s["wq"] = ParamSpec((cfg.d_model, H, qk), dt,
+                            ("embed", "heads", "head_dim"))
+    s["w_dkv"] = ParamSpec((cfg.d_model, m.kv_lora_rank), dt,
+                           ("embed", "kv_lora"))
+    s["w_kr"] = ParamSpec((cfg.d_model, m.qk_rope_dim), dt, ("embed", None))
+    s["kv_norm"] = {"scale": ParamSpec((m.kv_lora_rank,), F32, ("kv_lora",),
+                                       "ones")}
+    s["w_uk"] = ParamSpec((m.kv_lora_rank, H, m.qk_nope_dim), dt,
+                          ("kv_lora", "heads", "head_dim"))
+    s["w_uv"] = ParamSpec((m.kv_lora_rank, H, m.v_head_dim), dt,
+                          ("kv_lora", "heads", "head_dim"))
+    s["wo"] = ParamSpec((H, m.v_head_dim, cfg.d_model), dt,
+                        ("heads", "head_dim", "embed"))
+    return s
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(F32)
+    return (xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+            * scale).astype(x.dtype)
+
+
+def mla_latents(p: Dict, x: jnp.ndarray, positions, cfg: ModelConfig):
+    """x -> (c_kv, k_rope): the cached quantities. c_kv: (B,S,r);
+    k_rope: (B,S,rope_dim), roped."""
+    m = cfg.mla
+    c_kv = _rms(x @ p["w_dkv"], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_r = rope(x @ p["w_kr"], positions, theta=cfg.rope_theta)
+    return c_kv, k_r
+
+
+def mla_attention(p: Dict, x: jnp.ndarray, c_kv: jnp.ndarray,
+                  k_rope: jnp.ndarray, positions, cfg: ModelConfig, *,
+                  causal: bool = True, kv_positions=None) -> jnp.ndarray:
+    """Full MLA attention.  x: (B, Sq, D) queries; c_kv/k_rope cover the
+    (possibly longer, cached) key range."""
+    m = cfg.mla
+    H = cfg.n_heads
+    if m.q_lora_rank:
+        q_lat = _rms(x @ p["wq_a"], p["q_norm"]["scale"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bhse", q_lat, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = rope(q_rope, positions, theta=cfg.rope_theta)
+
+    # reconstruct per-head keys/values from the latent
+    k_nope = jnp.einsum("bkr,rhe->bhke", c_kv, p["w_uk"])
+    v = jnp.einsum("bkr,rhe->bhke", c_kv, p["w_uv"])
+    k_r = jnp.broadcast_to(k_rope[:, None, :, :],
+                           (k_rope.shape[0], H, k_rope.shape[1],
+                            m.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_r.astype(k_nope.dtype)], axis=-1)
+    qk = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    o = sdpa(qk, k, v, causal=causal, scale=scale,
+                 kv_positions=kv_positions, q_positions=positions)
+    return jnp.einsum("bhse,hed->bsd", o, p["wo"])
+
+
+# -- KV caches ---------------------------------------------------------------
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": (batch, cfg.n_kv_heads, max_len, hd),
+        "v": (batch, cfg.n_kv_heads, max_len, hd),
+    }
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return {
+        "c_kv": (batch, max_len, cfg.mla.kv_lora_rank),
+        "k_rope": (batch, max_len, cfg.mla.qk_rope_dim),
+    }
+
+
+def cache_update(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
+                 axis: int) -> jnp.ndarray:
+    """Insert ``new`` (length-Sq slab) at ``pos`` along ``axis``.
+
+    ``pos`` may be a scalar (all batch rows aligned) or a (B,) vector for
+    continuous batching with heterogeneous slot positions — then the
+    update is vmapped over the leading batch dim."""
+    if getattr(pos, "ndim", 0) == 1:
+        def one(c, n, p):
+            idx = [0] * c.ndim
+            idx[axis - 1] = p           # axis shifts after vmap peels batch
+            return jax.lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                                tuple(idx))
+        return jax.vmap(one)(cache, new, pos)
+    idx = [0] * cache.ndim
+    idx[axis] = pos
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                        tuple(idx))

@@ -1,0 +1,328 @@
+"""Shared model components: norms, RoPE, embeddings, dense FFNs, attention.
+
+Pure functions over (params, activations); parameter shapes/axes declared by
+matching ``*_specs`` builders (see params.py).  Activation sharding hints go
+through :func:`repro.parallel.api.logical_sharding` at the call sites in the
+block stacks, keeping components mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+F32 = jnp.float32
+
+
+# -- norms -------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, with_bias: Optional[bool] = None) -> Dict:
+    bias = cfg.norm_type == "layernorm" if with_bias is None else with_bias
+    s = {"scale": ParamSpec((cfg.d_model,), F32, ("embed",), "ones")}
+    if bias:
+        s["bias"] = ParamSpec((cfg.d_model,), F32, ("embed",), "zeros")
+    return s
+
+
+def apply_norm(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(F32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+def head_norm_specs(dim: int) -> Dict:
+    """Per-head RMS norm (qk_norm)."""
+    return {"scale": ParamSpec((dim,), F32, (None,), "ones")}
+
+
+def apply_head_norm(p: Dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+# -- rotary embeddings -------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float,
+         frac: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, D) with positions (..., S) or (S,).  Partial rotary:
+    only the first ``frac·D`` channels rotate (stablelm)."""
+    D = x.shape[-1]
+    rot = int(D * frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    while cos.ndim < x1.ndim:                            # broadcast heads
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# -- embeddings --------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> Dict:
+    # embedding d_model is NOT FSDP-sharded ("embed" would map it to the
+    # data axis): with batch also on data, XLA resolves the logits einsum
+    # by all-gathering activations — 62 GiB/step observed.  vocab→model
+    # sharding alone keeps the table at ~65 MB/device and the logits local
+    # (EXPERIMENTS.md §Perf iteration 3b).
+    v = cfg.padded_vocab
+    s = {"tok": ParamSpec((v, cfg.d_model), jnp.float32,
+                          ("vocab", None), "embed_normal")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, v), jnp.float32,
+                                 (None, "vocab"), "normal")
+    return s
+
+
+def embed(p: Dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("...d,dv->...v", x.astype(F32), w.astype(F32))
+    if cfg.padded_vocab != cfg.vocab:   # mask pad columns out of softmax
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, F32))
+    return logits
+
+
+# -- dense FFN ---------------------------------------------------------------
+
+def ffn_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        return {
+            "wg": ParamSpec((cfg.d_model, d_ff), dt, ("embed", "mlp")),
+            "wu": ParamSpec((cfg.d_model, d_ff), dt, ("embed", "mlp")),
+            "wd": ParamSpec((d_ff, cfg.d_model), dt, ("mlp", "embed")),
+        }
+    return {
+        "wu": ParamSpec((cfg.d_model, d_ff), dt, ("embed", "mlp")),
+        "wd": ParamSpec((d_ff, cfg.d_model), dt, ("mlp", "embed")),
+    }
+
+
+def apply_ffn(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif cfg.ffn_type == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wu"], approximate=True)
+    return h @ p["wd"]
+
+
+# -- GQA attention -----------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig) -> Dict:
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    s = {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, hd), dt,
+                        ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), dt,
+                        ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), dt,
+                        ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, cfg.d_model), dt,
+                        ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((cfg.n_heads, hd), F32, ("heads", "head_dim"),
+                            "zeros")
+        s["bk"] = ParamSpec((cfg.n_kv_heads, hd), F32,
+                            ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = ParamSpec((cfg.n_kv_heads, hd), F32,
+                            ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        s["qnorm"] = head_norm_specs(hd)
+        s["knorm"] = head_norm_specs(hd)
+    return s
+
+
+def qkv_project(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray):
+    """x: (B, S, D) -> q (B, Hq, S, hd), k/v (B, Hkv, S, hd), roped."""
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bhse", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bhse", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, :, None, :].astype(q.dtype)
+        k = k + p["bk"][None, :, None, :].astype(k.dtype)
+        v = v + p["bv"][None, :, None, :].astype(v.dtype)
+    if cfg.qk_norm:
+        q = apply_head_norm(p["qnorm"], q, cfg.norm_eps)
+        k = apply_head_norm(p["knorm"], k, cfg.norm_eps)
+    q = rope(q, positions, theta=cfg.rope_theta, frac=cfg.rope_frac)
+    k = rope(k, positions, theta=cfg.rope_theta, frac=cfg.rope_frac)
+    return q, k, v
+
+
+def sdpa_xla(q, k, v, *, causal: bool, scale: Optional[float] = None,
+             window: int = 0, kv_positions=None, q_positions=None):
+    """XLA-path scaled dot-product attention with GQA broadcast.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  ``window`` > 0 applies a
+    sliding-window (local) mask.  kv_positions/q_positions enable decode
+    (Sq=1 against a cache) and masked caches."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(F32),
+                   k.astype(F32)) * scale
+    qpos = (q_positions if q_positions is not None
+            else jnp.arange(Sq))                       # (Sq,) or (B, Sq)
+    kpos = (kv_positions if kv_positions is not None
+            else jnp.arange(Skv))                      # (Skv,) or (B, Skv)
+    qp = qpos[..., :, None]                            # (..., Sq, 1)
+    kp = kpos[..., None, :]                            # (..., 1, Skv)
+    big_neg = jnp.asarray(-1e30, F32)
+    m = (qp >= kp) if causal else jnp.broadcast_to(kp >= 0,
+                                                   jnp.broadcast_shapes(
+                                                       qp.shape, kp.shape))
+    if window:
+        m = jnp.logical_and(m, qp - kp < window)
+    if m.ndim == 2:                                    # (Sq, Skv)
+        m = m[None]
+    m = m[:, None, None, :, :]                         # (B|1,1,1,Sq,Skv)
+    s = jnp.where(m, s, big_neg)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(F32))
+    Dv = v.shape[-1]                                   # may differ (MLA)
+    return out.reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
+def attn_out(p: Dict, o: jnp.ndarray) -> jnp.ndarray:
+    """o: (B, H, S, hd) -> (B, S, D)."""
+    return jnp.einsum("bhse,hed->bsd", o, p["wo"])
+
+
+# q-length above which full-score materialization is replaced by the
+# online-softmax KV-block scan (flash attention at the XLA level): the
+# S×S score tensors otherwise dominate the HBM roofline term at 4k+ and
+# exceed HBM outright at 32k (EXPERIMENTS.md §Perf iterations 1 & 4)
+FLASH_SDPA_THRESHOLD = 1024
+SDPA_KV_CHUNK = 512
+
+
+def sdpa_flash_xla(q, k, v, *, causal: bool, scale=None, window: int = 0,
+                   kv_positions=None, q_positions=None,
+                   kv_chunk: int = SDPA_KV_CHUNK):
+    """Flash-style attention in pure JAX: lax.scan over KV blocks carrying
+    the running (m, l, acc) — no (Sq, Skv) tensor ever materializes.  The
+    XLA twin of kernels/flash_attention (same online-softmax recurrence the
+    ARGUS accumulator-stability invariant governs)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    nkv = Skv // kv_chunk
+    assert Skv % kv_chunk == 0
+
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    qpos = q_positions if q_positions is not None else jnp.arange(Sq)
+    qp = qpos[..., :, None]                     # (Sq,1) or (B,Sq,1)
+    kpos = kv_positions if kv_positions is not None else jnp.arange(Skv)
+
+    kc = jnp.moveaxis(k.reshape(B, Hkv, nkv, kv_chunk, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nkv, kv_chunk, Dv), 2, 0)
+    if kpos.ndim == 1:
+        kpc = kpos.reshape(nkv, kv_chunk)
+    else:
+        kpc = jnp.moveaxis(kpos.reshape(-1, nkv, kv_chunk), 1, 0)
+
+    neg = jnp.asarray(-1e30, F32)
+    m0 = jnp.full((B, Hkv, g, Sq, 1), neg)
+    l0 = jnp.zeros((B, Hkv, g, Sq, 1), F32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, Dv), F32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, kpb = blk
+        # operands stay in their (bf16) storage dtype — the MXU accumulates
+        # in f32 via preferred_element_type; materializing f32 copies of
+        # q/k/v doubles the scan's HBM traffic (§Perf iteration 8)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
+                       preferred_element_type=F32) * scale
+        kp = kpb[..., None, :]                  # (1|B, 1, ckv)
+        valid = kp < _PAD_SENTINEL              # sentinel-padded KV slots
+        mask = jnp.logical_and(valid, (qp >= kp) if causal
+                               else jnp.broadcast_to(
+                                   kp >= 0, jnp.broadcast_shapes(
+                                       qp.shape, kp.shape)))
+        if window:
+            mask = jnp.logical_and(mask, qp - kp < window)
+        if mask.ndim == 2:
+            mask = mask[None]
+        mask = mask[:, None, None, :, :]
+        s = jnp.where(mask, s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=F32)
+        return (m_new, l_new, acc_new), ()
+
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (kc, vc, kpc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
+_PAD_SENTINEL = 1 << 30
+
+
+def sdpa(q, k, v, *, causal: bool, scale=None, window: int = 0,
+         kv_positions=None, q_positions=None):
+    """Dispatch: short sequences take the direct path; long full-sequence
+    attention takes the flash-style KV scan (KV padded to the chunk
+    quantum with sentinel positions that every mask rejects)."""
+    Sq, Skv = q.shape[2], k.shape[2]
+    if Sq < FLASH_SDPA_THRESHOLD:
+        return sdpa_xla(q, k, v, causal=causal, scale=scale, window=window,
+                        kv_positions=kv_positions, q_positions=q_positions)
+    pad = (-Skv) % SDPA_KV_CHUNK
+    if pad:
+        cfgs = [(0, 0)] * 4
+        cfgs[2] = (0, pad)
+        k = jnp.pad(k, cfgs)
+        v = jnp.pad(v, cfgs)
+        kp = kv_positions if kv_positions is not None else jnp.arange(Skv)
+        kv_positions = jnp.concatenate(
+            [jnp.broadcast_to(kp, kp.shape[:-1] + (Skv,)),
+             jnp.full(kp.shape[:-1] + (pad,), _PAD_SENTINEL, kp.dtype)],
+            axis=-1)
+    return sdpa_flash_xla(q, k, v, causal=causal, scale=scale,
+                          window=window, kv_positions=kv_positions,
+                          q_positions=q_positions)

@@ -1,0 +1,214 @@
+"""Encoder–decoder backbone (seamless-m4t family).
+
+The speech frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings ``(B, S_enc, d_model)`` (``input_specs`` in the
+arch config supplies them); the text decoder is a standard causal stack with
+cross-attention.  Decode caches: self-attn KV (growing) + cross-attn KV
+(computed once from the encoder output at prefill)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .components import (F32, apply_ffn, apply_norm, attn_out, embed,
+                         embed_specs, ffn_specs, norm_specs, qkv_project,
+                         sdpa, unembed)
+from .config import ModelConfig
+from .params import ParamSpec, abstract_params, axes_tree, init_params, \
+    param_count
+from .transformer import stack_specs
+
+
+def _xattn_specs(cfg: ModelConfig) -> Dict:
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, hd), dt,
+                        ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), dt,
+                        ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), dt,
+                        ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, cfg.d_model), dt,
+                        ("heads", "head_dim", "embed")),
+    }
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> Dict:
+    from .components import attention_specs
+    return {"ln_attn": norm_specs(cfg), "attn": attention_specs(cfg),
+            "ln_ffn": norm_specs(cfg), "ffn": ffn_specs(cfg)}
+
+
+def _dec_layer_specs(cfg: ModelConfig) -> Dict:
+    from .components import attention_specs
+    return {"ln_self": norm_specs(cfg), "self": attention_specs(cfg),
+            "ln_x": norm_specs(cfg), "xattn": _xattn_specs(cfg),
+            "ln_ffn": norm_specs(cfg), "ffn": ffn_specs(cfg)}
+
+
+def _cross_attention(p: Dict, x, enc_k, enc_v) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    o = sdpa(q, enc_k, enc_v, causal=False)
+    return attn_out(p, o)
+
+
+def _cross_kv(p: Dict, enc_out: jnp.ndarray):
+    k = jnp.einsum("bsd,dhe->bhse", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhe->bhse", enc_out, p["wv"])
+    return k, v
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs: Dict = {
+            "embed": embed_specs(cfg),
+            "enc": stack_specs(_enc_layer_specs(cfg), cfg.enc_layers),
+            "dec": stack_specs(_dec_layer_specs(cfg), cfg.n_layers),
+            "ln_enc": norm_specs(cfg),
+            "ln_f": norm_specs(cfg),
+        }
+        self.n_params = param_count(self.specs)
+        self.n_active_params = self.n_params
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params: Dict, enc_embeds: jnp.ndarray,
+               remat: bool = True) -> jnp.ndarray:
+        cfg = self.cfg
+        positions = jnp.arange(enc_embeds.shape[1])
+
+        from repro.parallel.api import constrain_activations
+
+        def body(x, p):
+            x = constrain_activations(x)
+            h = apply_norm(p["ln_attn"], x, cfg)
+            q, k, v = qkv_project(p["attn"], h, cfg, positions)
+            o = sdpa(q, k, v, causal=False)
+            x = x + attn_out(p["attn"], o)
+            h = apply_norm(p["ln_ffn"], x, cfg)
+            return x + apply_ffn(p["ffn"], h, cfg), ()
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, enc_embeds, params["enc"])
+        return apply_norm(params["ln_enc"], x, cfg)
+
+    # -- decoder ---------------------------------------------------------------
+    def _dec_layer(self, p: Dict, x, positions, enc_k, enc_v, cache, pos0):
+        cfg = self.cfg
+        h = apply_norm(p["ln_self"], x, cfg)
+        q, k, v = qkv_project(p["self"], h, cfg, positions)
+        if cache is not None:
+            cache = dict(cache)
+            cache["k"] = attn_mod.cache_update(cache["k"], k, pos0, 2)
+            cache["v"] = attn_mod.cache_update(cache["v"], v, pos0, 2)
+            k, v = cache["k"], cache["v"]
+            kv_pos = jnp.arange(k.shape[2])
+        else:
+            kv_pos = None
+        o = sdpa(q, k, v, causal=True, kv_positions=kv_pos,
+                     q_positions=positions)
+        x = x + attn_out(p["self"], o)
+        h = apply_norm(p["ln_x"], x, cfg)
+        x = x + _cross_attention(p["xattn"], h, enc_k, enc_v)
+        h = apply_norm(p["ln_ffn"], x, cfg)
+        return x + apply_ffn(p["ffn"], h, cfg), cache
+
+    def apply(self, params: Dict, tokens: jnp.ndarray, *,
+              enc_embeds: jnp.ndarray, positions=None, remat: bool = True):
+        """Teacher-forced decode over ``tokens`` given encoder inputs."""
+        cfg = self.cfg
+        enc_out = self.encode(params, enc_embeds, remat)
+        x = embed(params["embed"], tokens, cfg)
+        if positions is None:
+            positions = jnp.arange(x.shape[1])
+
+        from repro.parallel.api import constrain_activations
+
+        def body(x, p):
+            x = constrain_activations(x)
+            ek, ev = _cross_kv(p["xattn"], enc_out)
+            x, _ = self._dec_layer(p, x, positions, ek, ev, None, 0)
+            return x, ()
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), jnp.zeros((), F32)
+
+    # -- serving -----------------------------------------------------------------
+    def cache_shape(self, batch: int, max_len: int, enc_len: int = 0) -> Dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        L = cfg.n_layers
+        dt = jnp.dtype(cfg.dtype)
+        enc_len = enc_len or max_len
+        kv = (batch, cfg.n_kv_heads, max_len, hd)
+        xkv = (batch, cfg.n_kv_heads, enc_len, hd)
+        return {
+            "self": {"k": jax.ShapeDtypeStruct((L,) + kv, dt),
+                     "v": jax.ShapeDtypeStruct((L,) + kv, dt)},
+            "cross": {"k": jax.ShapeDtypeStruct((L,) + xkv, dt),
+                      "v": jax.ShapeDtypeStruct((L,) + xkv, dt)},
+        }
+
+    def cache_axes(self) -> Dict:
+        kv = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+        return {"self": {"k": kv, "v": kv},
+                "cross": {"k": kv, "v": kv}}
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0) -> Dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch, max_len, enc_len))
+
+    def prefill(self, params: Dict, enc_embeds: jnp.ndarray,
+                max_len: int) -> Dict:
+        """Encode + precompute per-layer cross KV."""
+        enc_out = self.encode(params, enc_embeds, remat=False)
+
+        def body(_, p):
+            return (), _cross_kv(p["xattn"], enc_out)
+
+        _, (xk, xv) = jax.lax.scan(body, (), params["dec"])
+        B = enc_embeds.shape[0]
+        cache = self.init_cache(B, max_len, enc_embeds.shape[1])
+        cache["cross"] = {"k": xk.astype(jnp.dtype(self.cfg.dtype)),
+                          "v": xv.astype(jnp.dtype(self.cfg.dtype))}
+        return cache
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jnp.ndarray,
+                    pos) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        positions = (pos[:, None] if getattr(pos, "ndim", 0) == 1
+                     else jnp.broadcast_to(pos, (x.shape[0], 1)))
+
+        def body(x, layer):
+            p, sc, xk, xv = layer
+            x, nc = self._dec_layer(p, x, positions, xk, xv, sc, pos)
+            return x, nc
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec"], cache["self"], cache["cross"]["k"],
+                      cache["cross"]["v"]))
+        x = apply_norm(params["ln_f"], x, cfg)
+        return (unembed(params["embed"], x, cfg),
+                {"self": new_self, "cross": cache["cross"]})
+
+    def scan_trips(self) -> int:
+        # enc and dec scans share the correction when depths match (24/24)
+        return max(self.cfg.n_layers, self.cfg.enc_layers)
+
+    def init(self, key):
+        return init_params(self.specs, key)
+
+    def abstract(self):
+        return abstract_params(self.specs)
+
+    def axes(self):
+        return axes_tree(self.specs)

@@ -1,0 +1,179 @@
+"""Hybrid LM (RecurrentGemma): (rec, rec, local-attn) pattern groups.
+
+Pattern groups are scanned (stacked params) for O(1) HLO size; the
+non-multiple remainder layers are unrolled.  Every layer is
+``x += mixer(norm(x)); x += ffn(norm(x))``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .components import (F32, apply_ffn, apply_norm, embed, embed_specs,
+                         ffn_specs, norm_specs, unembed)
+from .config import ModelConfig
+from .params import abstract_params, axes_tree, init_params, param_count
+from .recurrent import (apply_local_attn, apply_rglru_block,
+                        local_attn_cache_shape, local_attn_specs,
+                        rglru_block_specs, rglru_cache_shape)
+from .transformer import stack_specs
+
+
+def _layer_specs(cfg: ModelConfig, kind: str) -> Dict:
+    return {
+        "ln_mix": norm_specs(cfg),
+        "mix": (rglru_block_specs(cfg) if kind == "rec"
+                else local_attn_specs(cfg)),
+        "ln_ffn": norm_specs(cfg),
+        "ffn": ffn_specs(cfg),
+    }
+
+
+def _apply_layer(p: Dict, x, positions, cfg: ModelConfig, kind: str,
+                 cache, pos0):
+    h = apply_norm(p["ln_mix"], x, cfg)
+    if kind == "rec":
+        o, new_cache = apply_rglru_block(p["mix"], h, cfg, state=cache)
+    else:
+        o, new_cache = apply_local_attn(p["mix"], h, positions, cfg,
+                                        cache=cache, pos0=pos0)
+    x = x + o
+    h = apply_norm(p["ln_ffn"], x, cfg)
+    return x + apply_ffn(p["ffn"], h, cfg), new_cache
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        pat = cfg.recurrent.pattern
+        self.pattern = pat
+        self.n_groups = cfg.n_layers // len(pat)
+        self.rem = [pat[i] for i in range(cfg.n_layers
+                                          - self.n_groups * len(pat))]
+        group = {f"l{i}": _layer_specs(cfg, k) for i, k in enumerate(pat)}
+        self.specs: Dict = {"embed": embed_specs(cfg),
+                            "groups": stack_specs(group, self.n_groups)}
+        for i, k in enumerate(self.rem):
+            self.specs[f"rem_{i}"] = _layer_specs(cfg, k)
+        self.specs["ln_f"] = norm_specs(cfg)
+        self.n_params = param_count(self.specs)
+        self.n_active_params = self.n_params
+
+    def _group_apply(self, gp: Dict, x, positions, cfg, caches, pos0):
+        new_caches = {} if caches is not None else None
+        for i, kind in enumerate(self.pattern):
+            c = caches[f"l{i}"] if caches is not None else None
+            x, nc = _apply_layer(gp[f"l{i}"], x, positions, cfg, kind, c,
+                                 pos0)
+            if new_caches is not None:
+                new_caches[f"l{i}"] = nc
+        return x, new_caches
+
+    def apply(self, params: Dict, tokens=None, *, inputs_embeds=None,
+              positions=None, remat: bool = True, last_only: bool = False):
+        cfg = self.cfg
+        x = (embed(params["embed"], tokens, cfg)
+             if inputs_embeds is None else inputs_embeds)
+        if positions is None:
+            positions = jnp.arange(x.shape[1])
+
+        from repro.parallel.api import constrain_activations
+
+        def body(x, gp):
+            x = constrain_activations(x)
+            x, _ = self._group_apply(gp, x, positions, cfg, None, 0)
+            return x, ()
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["groups"])
+        for i, kind in enumerate(self.rem):
+            x, _ = _apply_layer(params[f"rem_{i}"], x, positions, cfg,
+                                kind, None, 0)
+        if last_only:
+            x = x[:, -1:]
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), jnp.zeros((), F32)
+
+    # -- serving ----------------------------------------------------------------
+    def _cache_shape_one(self, kind: str, batch: int):
+        return (rglru_cache_shape(self.cfg, batch) if kind == "rec"
+                else local_attn_cache_shape(self.cfg, batch))
+
+    def cache_shape(self, batch: int, max_len: int) -> Dict:
+        del max_len  # state size is context-free (the point of this arch)
+        out: Dict = {"groups": {}}
+        for i, kind in enumerate(self.pattern):
+            shapes = self._cache_shape_one(kind, batch)
+            out["groups"][f"l{i}"] = {
+                k: jax.ShapeDtypeStruct((self.n_groups,) + s, jnp.dtype(d))
+                for k, (s, d) in shapes.items()}
+        for i, kind in enumerate(self.rem):
+            out[f"rem_{i}"] = {
+                k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
+                for k, (s, d) in self._cache_shape_one(kind, batch).items()}
+        return out
+
+    def _cache_axes_one(self, kind: str):
+        if kind == "rec":
+            return {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+        return {"k": ("batch", "kv_heads", "kv_seq", "head_dim"),
+                "v": ("batch", "kv_heads", "kv_seq", "head_dim"),
+                "pos": ("batch", None)}
+
+    def cache_axes(self) -> Dict:
+        out: Dict = {"groups": {}}
+        for i, kind in enumerate(self.pattern):
+            out["groups"][f"l{i}"] = {
+                k: ("layers",) + v
+                for k, v in self._cache_axes_one(kind).items()}
+        for i, kind in enumerate(self.rem):
+            out[f"rem_{i}"] = self._cache_axes_one(kind)
+        return out
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch, max_len))
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        positions = (pos[:, None] if getattr(pos, "ndim", 0) == 1
+                     else jnp.broadcast_to(pos, (x.shape[0], 1)))
+
+        def body(x, layer):
+            gp, gc = layer
+            x, nc = self._group_apply(gp, x, positions, cfg, gc, pos)
+            return x, nc
+
+        x, new_groups = jax.lax.scan(body, x,
+                                     (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_groups}
+        for i, kind in enumerate(self.rem):
+            x, new_cache[f"rem_{i}"] = _apply_layer(
+                params[f"rem_{i}"], x, positions, cfg, kind,
+                cache[f"rem_{i}"], pos)
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), new_cache
+
+    def prefill(self, params, tokens, max_len: int):
+        # full-sequence run, then decode continues from states; for the
+        # dry-run and tests we expose the same API as TransformerLM
+        logits, _ = self.apply(params, tokens, remat=False,
+                               last_only=True)
+        cache = self.init_cache(tokens.shape[0], max_len)
+        return logits, cache
+
+    def scan_trips(self) -> int:
+        return max(self.n_groups, 1)
+
+    def init(self, key):
+        return init_params(self.specs, key)
+
+    def abstract(self):
+        return abstract_params(self.specs)
+
+    def axes(self):
+        return axes_tree(self.specs)

@@ -1,0 +1,159 @@
+"""Model facade: ``build(cfg)`` returns the family's LM object, all exposing
+the same protocol — specs/init/abstract/axes, apply, prefill, decode_step,
+cache_shape, n_params, n_active_params."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .components import F32, apply_norm, embed, embed_specs, norm_specs, \
+    unembed
+from .config import ModelConfig
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .params import abstract_params, axes_tree, init_params, param_count
+from .ssm import apply_ssm_block, ssm_block_specs, ssm_cache_shape
+from .transformer import TransformerLM, stack_specs
+
+
+class SSMLM:
+    """Pure Mamba-2 stack: x += mixer(norm(x)) per layer."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        layer = {"ln": norm_specs(cfg), "ssm": ssm_block_specs(cfg)}
+        self.specs: Dict = {
+            "embed": embed_specs(cfg),
+            "blocks": stack_specs(layer, cfg.n_layers),
+            "ln_f": norm_specs(cfg),
+        }
+        self.n_params = param_count(self.specs)
+        self.n_active_params = self.n_params
+
+    def apply(self, params: Dict, tokens=None, *, inputs_embeds=None,
+              positions=None, remat: bool = True, last_only: bool = False):
+        cfg = self.cfg
+        x = (embed(params["embed"], tokens, cfg)
+             if inputs_embeds is None else inputs_embeds)
+
+        from repro.parallel.api import constrain_activations
+
+        def body(x, p):
+            x = constrain_activations(x)
+            h = apply_norm(p["ln"], x, cfg)
+            o, _ = apply_ssm_block(p["ssm"], h, cfg)
+            return x + o, ()
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        if last_only:
+            x = x[:, -1:]
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), jnp.zeros((), F32)
+
+    def cache_shape(self, batch: int, max_len: int) -> Dict:
+        del max_len  # O(1)-in-context state (long_500k applicability)
+        shapes = ssm_cache_shape(self.cfg, batch)
+        return {"blocks": {
+            k: jax.ShapeDtypeStruct((self.cfg.n_layers,) + s, jnp.dtype(d))
+            for k, (s, d) in shapes.items()}}
+
+    def cache_axes(self) -> Dict:
+        return {"blocks": {
+            "ssm": ("layers", "batch", "heads", None, None),
+            "conv": ("layers", "batch", None, "mlp"),
+        }}
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch, max_len))
+
+    def decode_step(self, params: Dict, cache: Dict, tokens, pos):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+
+        def body(x, layer):
+            p, c = layer
+            h = apply_norm(p["ln"], x, cfg)
+            o, nc = apply_ssm_block(p["ssm"], h, cfg, state=c)
+            return x + o, nc
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), {"blocks": new_blocks}
+
+    def prefill(self, params: Dict, tokens, max_len: int):
+        logits, _ = self.apply(params, tokens, remat=False,
+                               last_only=True)
+        return logits, self.init_cache(tokens.shape[0], max_len)
+
+    def scan_trips(self) -> int:
+        return self.cfg.n_layers
+
+    def init(self, key):
+        return init_params(self.specs, key)
+
+    def abstract(self):
+        return abstract_params(self.specs)
+
+    def axes(self):
+        return axes_tree(self.specs)
+
+
+_BUILDERS = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "hybrid": HybridLM,
+    "ssm": SSMLM,
+    "encdec": EncDecLM,
+    "audio": EncDecLM,
+}
+
+_CACHE: Dict[str, object] = {}
+
+
+def build(cfg: ModelConfig):
+    key = cfg.name
+    got = _CACHE.get(key)
+    if got is None or got.cfg != cfg:  # type: ignore[attr-defined]
+        got = _BUILDERS[cfg.family](cfg)
+        _CACHE[key] = got
+    return got
+
+
+def lm_loss(model, params: Dict, batch: Dict, *,
+            aux_weight: float = 0.01, remat: bool = True):
+    """Next-token cross-entropy + MoE aux loss.  batch: {"tokens": (B,S)}
+    plus optional "enc_embeds"/"inputs_embeds"."""
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    kwargs = {}
+    if "enc_embeds" in batch:
+        logits, aux = model.apply(params, inp,
+                                  enc_embeds=batch["enc_embeds"],
+                                  remat=remat)
+    elif "inputs_embeds" in batch:
+        logits, aux = model.apply(
+            params, inputs_embeds=batch["inputs_embeds"][:, :-1],
+            remat=remat)
+    else:
+        logits, aux = model.apply(params, inp, remat=remat)
+    logits = logits.astype(F32)
+    # sharded-logits-friendly CE: reductions over the vocab axis stay
+    # local per shard (+ a tiny psum); a take_along_axis gather here would
+    # force an all-gather of the FULL logits tensor (~1 TB at 256k vocab,
+    # observed in the dry-run — EXPERIMENTS.md §Perf iteration 2)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    onehot = jax.nn.one_hot(tgt, logits.shape[-1], dtype=F32)
+    tgt_logit = jnp.sum(shifted * onehot, axis=-1)
+    ll = tgt_logit - lse
+    mask = batch.get("mask", jnp.ones_like(tgt, F32))
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}

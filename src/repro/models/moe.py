@@ -1,0 +1,145 @@
+"""MoE layer: router + shared experts + capacity-based routed experts.
+
+pjit-friendly formulation (DESIGN.md §5): the only data-dependent motion is
+an index-table scatter (E·C ints) and a row gather — the heavy math stays in
+dense per-expert einsums whose ``expert`` axis shards over the mesh's model
+axis (expert parallelism), letting SPMD insert the dispatch/combine
+all-to-alls.  Semantics match :mod:`repro.kernels.moe` (same
+``compute_dispatch``), so the Pallas fused kernel is a drop-in for the
+single-core compute."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .components import F32, apply_ffn, ffn_specs
+from .config import ModelConfig
+from .params import ParamSpec
+
+from repro.kernels.moe.moe import compute_dispatch
+
+
+def moe_specs(cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    dfe = m.d_ff_expert
+    s: Dict = {
+        "router": ParamSpec((cfg.d_model, m.n_experts), F32,
+                            ("embed", None), "normal"),
+        "wg": ParamSpec((m.n_experts, cfg.d_model, dfe), dt,
+                        ("expert", "embed", "mlp")),
+        "wu": ParamSpec((m.n_experts, cfg.d_model, dfe), dt,
+                        ("expert", "embed", "mlp")),
+        "wd": ParamSpec((m.n_experts, dfe, cfg.d_model), dt,
+                        ("expert", "mlp", "embed")),
+    }
+    if m.router_aux_free:
+        s["router_bias"] = ParamSpec((m.n_experts,), F32, (None,), "zeros")
+    if m.n_shared:
+        shared_cfg = cfg  # same ffn type, width n_shared * d_ff_expert
+        s["shared"] = ffn_specs(cfg, d_ff=m.n_shared * dfe)
+    return s
+
+
+def route(p: Dict, x: jnp.ndarray, cfg: ModelConfig
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (T, D) -> (gates (T,K) f32, idx (T,K) i32, aux_loss scalar)."""
+    m = cfg.moe
+    logits = (x.astype(F32) @ p["router"]).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    select_from = probs
+    if m.router_aux_free:
+        # DeepSeek aux-free: bias only affects selection, not gate values
+        select_from = probs + p["router_bias"][None, :]
+    _, idx = jax.lax.top_k(select_from, m.top_k)
+    gates = jnp.take_along_axis(probs, idx, axis=-1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux loss (reported even when aux-free)
+    E = m.n_experts
+    me = probs.mean(axis=0)                                    # (E,)
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=F32)           # top-1 share
+    ce = onehot.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates, idx.astype(jnp.int32), aux
+
+
+def routed_experts_grouped(p: Dict, x: jnp.ndarray, gates: jnp.ndarray,
+                           idx: jnp.ndarray, cfg: ModelConfig
+                           ) -> jnp.ndarray:
+    """GShard-style group-local capacity dispatch.  x: (G, S, D) with the
+    group dim = batch rows (data-sharded): every gather/scatter stays
+    *inside* a group, so no cross-shard token motion — a global-token
+    dispatch lowers to cross-shard masked selection costing ~500× the
+    useful FLOPs (EXPERIMENTS.md §Perf iteration 6)."""
+    m = cfg.moe
+    G, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(8, int(-(-S * K * m.capacity_factor // E) // 8 * 8))
+    dest, keep = jax.vmap(lambda i: compute_dispatch(i, E, C))(idx)
+    flat_dest = jnp.where(keep, dest, E * C).reshape(G, S * K)
+    tok_of_pair = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K), (G, S * K))
+
+    slot_tok = jnp.zeros((G, E * C), jnp.int32)
+    slot_tok = jax.vmap(lambda s, d, t: s.at[d].set(t, mode="drop")
+                        )(slot_tok, flat_dest, tok_of_pair)
+    slot_ok = jnp.zeros((G, E * C), bool)
+    slot_ok = jax.vmap(lambda s, d: s.at[d].set(True, mode="drop")
+                       )(slot_ok, flat_dest,
+                         )
+
+    xr = jnp.take_along_axis(x, slot_tok[..., None], axis=1)   # (G,E*C,D)
+    xr = xr * slot_ok[..., None].astype(x.dtype)
+    xr = xr.reshape(G, E, C, D)
+    hg = jnp.einsum("gecd,edf->gecf", xr, p["wg"])
+    hu = jnp.einsum("gecd,edf->gecf", xr, p["wu"])
+    if cfg.ffn_type == "geglu":
+        act = jax.nn.gelu(hg, approximate=True) * hu
+    else:
+        act = jax.nn.silu(hg) * hu
+    y = jnp.einsum("gecf,efd->gecd", act, p["wd"]).reshape(G, E * C, D)
+
+    pair = jnp.take_along_axis(
+        y, jnp.minimum(flat_dest, E * C - 1)[..., None], axis=1)
+    pair = pair * (keep.reshape(G, S * K)[..., None]
+                   * gates.reshape(G, S * K)[..., None]).astype(pair.dtype)
+    return pair.reshape(G, S, K, D).sum(axis=2).astype(x.dtype)
+
+
+def routed_experts_dense(p: Dict, x: jnp.ndarray, gates: jnp.ndarray,
+                         idx: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Decode path (S == 1): every token through every expert, masked
+    combine.  Decode MoE is weight-streaming bound — all expert weights
+    transit HBM regardless — so the extra MXU work is free and no
+    dispatch indices cross shards.  x: (T, D)."""
+    m = cfg.moe
+    xf = x.astype(F32)
+    hg = jnp.einsum("td,edf->etf", xf, p["wg"].astype(F32))
+    hu = jnp.einsum("td,edf->etf", xf, p["wu"].astype(F32))
+    if cfg.ffn_type == "geglu":
+        act = jax.nn.gelu(hg, approximate=True) * hu
+    else:
+        act = jax.nn.silu(hg) * hu
+    y = jnp.einsum("etf,efd->etd", act, p["wd"].astype(F32))
+    onehot = (idx[..., None] == jnp.arange(m.n_experts)).astype(F32)
+    w = (onehot * gates[..., None]).sum(axis=1)                # (T, E)
+    return jnp.einsum("te,etd->td", w, y).astype(x.dtype)
+
+
+def apply_moe(p: Dict, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    gates, idx, aux = route(p, xf, cfg)
+    if S == 1:
+        out = routed_experts_dense(p, xf, gates, idx, cfg)
+    else:
+        out = routed_experts_grouped(
+            p, x, gates.reshape(B, S, -1), idx.reshape(B, S, -1),
+            cfg).reshape(B * S, D)
+    if cfg.moe.n_shared:
+        out = out + apply_ffn(p["shared"], xf, cfg)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,121 @@
+"""Parameter descriptor system.
+
+Models declare parameters as :class:`ParamSpec` trees (shape, dtype, logical
+axes, initializer).  From one spec tree we derive:
+
+* concrete initialization (``init_params``) — for training on this host;
+* abstract parameters (``abstract_params``) — ``ShapeDtypeStruct`` stand-ins
+  for the multi-pod dry-run (no allocation; the 34B configs never own
+  memory on the CPU host);
+* logical-axis ➜ mesh PartitionSpecs (``partition_specs``) via the rules in
+  :mod:`repro.parallel.sharding`.
+
+Logical axis vocabulary (DESIGN.md §5): "vocab", "embed", "mlp", "heads",
+"kv_heads", "head_dim", "expert", "layers" (scan-stacked), "kv_lora",
+"state", "conv", None (replicated).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"          # normal | zeros | ones | embed_normal
+    scale: Optional[float] = None  # override fan-in scaling
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_paths(tree, prefix=()):
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaf_paths(tree[k], prefix + (k,))
+        return
+    raise TypeError(f"bad spec tree node {type(tree)} at {prefix}")
+
+
+def _fold_seed(key, path: Tuple[str, ...]):
+    h = 2166136261
+    for p in path:
+        for ch in str(p).encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return jax.random.fold_in(key, h & 0x7FFFFFFF)
+
+
+def _init_leaf(key, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed_normal":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    # fan-in scaled normal (truncated-free, fine for repro)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std
+            ).astype(spec.dtype)
+
+
+def init_params(specs, key) -> Dict:
+    """Materialize a spec tree into concrete parameters (deterministic in
+    the leaf path, so layout changes don't reshuffle streams)."""
+    out: Dict = {}
+    for path, spec in _leaf_paths(specs):
+        node = out
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = _init_leaf(_fold_seed(key, path), spec)
+    return out
+
+
+def abstract_params(specs) -> Dict:
+    """ShapeDtypeStruct tree for compile-only flows (dry-run)."""
+    out: Dict = {}
+    for path, spec in _leaf_paths(specs):
+        node = out
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = jax.ShapeDtypeStruct(spec.shape, spec.dtype)
+    return out
+
+
+def axes_tree(specs) -> Dict:
+    """Tree of logical-axis tuples congruent with the param tree."""
+    out: Dict = {}
+    for path, spec in _leaf_paths(specs):
+        node = out
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = spec.axes or (None,) * len(spec.shape)
+    return out
+
+
+def param_count(specs) -> int:
+    return sum(math.prod(s.shape) for _, s in _leaf_paths(specs))
+
+
+def param_bytes(specs) -> int:
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+               for _, s in _leaf_paths(specs))

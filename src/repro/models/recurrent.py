@@ -1,0 +1,153 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks interleaved with
+local (sliding-window, MQA) attention in a (rec, rec, attn) pattern.
+
+RG-LRU (arXiv:2402.19427):  with a = σ(Λ), r_t = σ(W_a x_t), i_t = σ(W_x x_t)
+    a_t = a^(c·r_t)          (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+Training/prefill uses an associative scan over time (log-depth); decode is a
+single fused state update — this is why the arch runs the ``long_500k`` cell
+(DESIGN.md §4): decode state is O(width), not O(context).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .components import (F32, apply_ffn, apply_norm, attn_out, ffn_specs,
+                         norm_specs, qkv_project, sdpa)
+from .config import ModelConfig
+from .params import ParamSpec
+
+C_EXP = 8.0
+
+
+def rglru_block_specs(cfg: ModelConfig) -> Dict:
+    W = cfg.recurrent.lru_width or cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    cw = cfg.recurrent.conv_width
+    return {
+        "w_main": ParamSpec((cfg.d_model, W), dt, ("embed", "mlp")),
+        "w_gate": ParamSpec((cfg.d_model, W), dt, ("embed", "mlp")),
+        "conv": ParamSpec((cw, W), F32, (None, "mlp"), "normal",
+                          1.0 / math.sqrt(cw)),
+        "conv_b": ParamSpec((W,), F32, ("mlp",), "zeros"),
+        "w_a": ParamSpec((W, W), dt, ("mlp", None)),
+        "w_x": ParamSpec((W, W), dt, ("mlp", None)),
+        "lambda": ParamSpec((W,), F32, (None,), "normal", 1.0),
+        "w_out": ParamSpec((W, cfg.d_model), dt, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  u: (B,S,W); w: (cw,W).  With ``state``
+    ((B, cw-1, W), decode) prepends it instead of zero padding; returns
+    (out, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)          # (B, S+cw-1, W)
+    out = jnp.zeros_like(u, dtype=F32)
+    for i in range(cw):
+        out = out + full[:, i:i + u.shape[1], :].astype(F32) * w[i]
+    out = out + b
+    new_state = full[:, -(cw - 1):, :] if cw > 1 else pad
+    return out.astype(u.dtype), new_state
+
+
+def rglru_scan(a: jnp.ndarray, bx: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t h_{t−1} + bx_t via associative scan.  a, bx: (B,S,W)."""
+    if h0 is not None:
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply_rglru_block(p: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                      state: Optional[Dict] = None
+                      ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B,S,D) -> (B,S,D).  ``state``: {"h": (B,W), "conv": (B,cw-1,W)}
+    for decode; None for full-sequence training."""
+    u = x @ p["w_main"]
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(F32), approximate=True)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv"], p["conv_b"], conv_state)
+
+    uf = u.astype(F32)
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(F32))
+    i = jax.nn.sigmoid((u @ p["w_x"]).astype(F32))
+    log_a_base = jax.nn.log_sigmoid(p["lambda"])      # log σ(Λ)  (W,)
+    log_a = C_EXP * r * log_a_base                    # (B,S,W), ≤ 0
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    if state is None:
+        h = rglru_scan(a, bx)
+        new_state = None
+    else:
+        h = a * state["h"][:, None, :] + bx           # S == 1 decode
+        new_state = {"h": h[:, -1, :], "conv": new_conv}
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"], new_state
+
+
+def local_attn_specs(cfg: ModelConfig) -> Dict:
+    from .components import attention_specs
+    return attention_specs(cfg)
+
+
+def apply_local_attn(p: Dict, x: jnp.ndarray, positions, cfg: ModelConfig,
+                     *, cache: Optional[Dict] = None, pos0=0
+                     ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Sliding-window MQA.  Decode uses a ring-buffer cache of size
+    ``window`` — old slots fall outside the window mask automatically."""
+    from . import attention as attn_mod
+    win = cfg.recurrent.window
+    q, k, v = qkv_project(p, x, cfg, positions)
+    if cache is None:
+        o = sdpa(q, k, v, causal=True, window=win,
+                     q_positions=positions)
+        return attn_out(p, o), None
+    slot = pos0 % win                       # scalar or (B,) vector
+    cache = dict(cache)
+    cache["k"] = attn_mod.cache_update(cache["k"], k, slot, 2)
+    cache["v"] = attn_mod.cache_update(cache["v"], v, slot, 2)
+    cache["pos"] = attn_mod.cache_update(
+        cache["pos"], jnp.broadcast_to(positions, cache["pos"].shape[:1] +
+                                       (1,)).astype(jnp.int32), slot, 1)
+    kv_pos = cache["pos"]                              # (B, win)
+    o = sdpa(q, cache["k"], cache["v"], causal=True, window=win,
+                 kv_positions=kv_pos, q_positions=positions)
+    return attn_out(p, o), cache
+
+
+def local_attn_cache_shape(cfg: ModelConfig, batch: int):
+    hd = cfg.resolved_head_dim
+    win = cfg.recurrent.window
+    return {
+        "k": ((batch, cfg.n_kv_heads, win, hd), cfg.dtype),
+        "v": ((batch, cfg.n_kv_heads, win, hd), cfg.dtype),
+        "pos": ((batch, win), "int32"),
+    }
+
+
+def rglru_cache_shape(cfg: ModelConfig, batch: int):
+    W = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv_width
+    return {
+        "h": ((batch, W), "float32"),
+        "conv": ((batch, cw - 1, W), cfg.dtype),
+    }

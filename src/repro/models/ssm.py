@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), attention-free.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk terms are
+"attention-like" masked matmuls (MXU-friendly — exactly the form the ARGUS
+GEMM invariants govern), across-chunk terms pass a (H, N, P) state through a
+sequential scan.  Decode is a single state update — hence this arch runs the
+``long_500k`` cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .components import F32, apply_norm, norm_specs
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def ssm_block_specs(cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    dt = jnp.dtype(cfg.dtype)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        # in_proj emits [z, x, B, C, dt]
+        "w_in": ParamSpec((cfg.d_model, 2 * d_inner + 2 * G * N + H), dt,
+                          ("embed", "mlp")),
+        "conv": ParamSpec((s.conv_width, conv_ch), F32, (None, "mlp"),
+                          "normal", 1.0 / math.sqrt(s.conv_width)),
+        "conv_b": ParamSpec((conv_ch,), F32, ("mlp",), "zeros"),
+        "a_log": ParamSpec((H,), F32, (None,), "zeros"),
+        "dt_bias": ParamSpec((H,), F32, (None,), "zeros"),
+        "d_skip": ParamSpec((H,), F32, (None,), "ones"),
+        "gate_norm": {"scale": ParamSpec((d_inner,), F32, ("mlp",), "ones")},
+        "w_out": ParamSpec((d_inner, cfg.d_model), dt, ("mlp", "embed")),
+    }
+
+
+def _segsum(da: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise decay sums.  da: (..., Q) ->
+    L[..., i, j] = Σ_{k∈(j, i]} da_k  for i ≥ j, −inf otherwise."""
+    Q = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh: jnp.ndarray, da: jnp.ndarray, Bm: jnp.ndarray,
+                Cm: jnp.ndarray, chunk: int,
+                state0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD core.  xh: (B,S,H,P); da: (B,S,H) log-decay (≤0);
+    Bm, Cm: (B,S,H,N) (groups already broadcast).  Returns (y, final_state)
+    with y: (B,S,H,P), state: (B,H,N,P)."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, "sequence must divide the SSD chunk"
+    q = chunk
+    xc = xh.reshape(Bsz, nc, q, H, P)
+    dac = da.reshape(Bsz, nc, q, H)
+    Bc = Bm.reshape(Bsz, nc, q, H, N)
+    Cc = Cm.reshape(Bsz, nc, q, H, N)
+
+    # 1) intra-chunk (dual "attention" form)
+    L = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))     # (B,nc,H,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)   # (B,nc,H,q,q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, xc)
+
+    # 2) chunk states: decay-to-end weighted outer products
+    dacs = jnp.cumsum(dac, axis=2)                      # (B,nc,q,H)
+    decay_to_end = jnp.exp(dacs[:, :, -1:, :] - dacs)   # (B,nc,q,H)
+    chunk_state = jnp.einsum("bckhn,bckh,bckhp->bchnp",
+                             Bc, decay_to_end, xc)      # (B,nc,H,N,P)
+
+    # 3) inter-chunk sequential state pass
+    chunk_decay = jnp.exp(dacs[:, :, -1, :])            # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, N, P), F32) if state0 is None
+          else state0.astype(F32))
+
+    def step(s_prev, inp):
+        cs, cd = inp                                    # (B,H,N,P), (B,H)
+        s_new = cd[..., None, None] * s_prev + cs
+        return s_new, s_prev
+
+    final_state, s_prevs = jax.lax.scan(
+        step, s0, (chunk_state.swapaxes(0, 1).astype(F32),
+                   chunk_decay.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                    # (B,nc,H,N,P)
+
+    # 4) contribution of the carried state into each chunk
+    state_decay = jnp.exp(dacs)                         # (B,nc,q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                         Cc, state_decay, s_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def ssd_via_kernel(xh, da, Bh, Ch, chunk: int, interpret: bool = True):
+    """Route the SSD core through the validated Pallas kernel
+    (kernels/ssd).  xh: (B,S,H,P); da: (B,S,H); Bh, Ch: (B,S,H,N)."""
+    from repro.kernels.ssd import ssd as ssd_kernel
+    from repro.core.invariants import SSDConfig
+    B_, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    fold = lambda t: jnp.moveaxis(t, 2, 1).reshape(B_ * H, S,
+                                                   *t.shape[3:])
+    y = ssd_kernel(fold(xh), jnp.moveaxis(da, 2, 1).reshape(B_ * H, S),
+                   fold(Bh), fold(Ch), cfg=SSDConfig(chunk=chunk),
+                   interpret=interpret)
+    return jnp.moveaxis(y.reshape(B_, H, S, P), 1, 2)
+
+
+def apply_ssm_block(p: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                    state: Optional[Dict] = None
+                    ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full Mamba-2 mixer.  ``state``: {"ssm": (B,H,N,P), "conv":
+    (B,cw-1,conv_ch)} for decode (S==1)."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    P, G, N = s.head_dim, s.n_groups, s.d_state
+    B_, S, _ = x.shape
+
+    zxbcdt = x @ p["w_in"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+                 2 * d_inner + 2 * G * N], axis=-1)
+
+    # causal depthwise conv over [x, B, C]
+    from .recurrent import _causal_conv
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["a_log"])                                # (H,)
+    da = dtf * A                                            # log decay
+
+    xh = (xin.reshape(B_, S, H, P).astype(F32)
+          * dtf[..., None])                                 # dt-scaled input
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B_, S, G, N), rep, axis=2).astype(F32)
+    Ch = jnp.repeat(Cm.reshape(B_, S, G, N), rep, axis=2).astype(F32)
+
+    if state is None:
+        q = min(cfg.ssm.chunk, S)
+        pad = (-S) % q
+        if pad:
+            # zero-pad to a chunk multiple: padded steps have x=0 (no state
+            # contribution) and da=0 (decay 1), so the state is unaffected
+            padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) +
+                                     ((0, 0),) * (t.ndim - 2))
+            y, _ = ssd_chunked(padf(xh), padf(da), padf(Bh), padf(Ch), q)
+            y = y[:, :S]
+        else:
+            y, _ = ssd_chunked(xh, da, Bh, Ch, q)
+        new_state = None
+    else:
+        a_t = jnp.exp(da)[:, 0]                             # (B,H)
+        s_new = (a_t[..., None, None] * state["ssm"].astype(F32)
+                 + jnp.einsum("bhn,bhp->bhnp", Bh[:, 0], xh[:, 0]))
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, 0], s_new)[:, None]
+        new_state = {"ssm": s_new, "conv": new_conv}
+
+    y = y + xh * p["d_skip"][:, None]                       # D skip
+    y = y.reshape(B_, S, d_inner)
+    # gated RMS norm (mamba2)
+    zf = jax.nn.silu(z.astype(F32))
+    yn = y * zf
+    var = (yn * yn).mean(-1, keepdims=True)
+    yn = yn * jax.lax.rsqrt(var + cfg.norm_eps) * p["gate_norm"]["scale"]
+    return yn.astype(x.dtype) @ p["w_out"], new_state
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "ssm": ((batch, H, s.d_state, s.head_dim), "float32"),
+        "conv": ((batch, s.conv_width - 1, conv_ch), cfg.dtype),
+    }

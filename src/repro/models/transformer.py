@@ -1,0 +1,280 @@
+"""Decoder-only transformer stack (dense / MoE / MLA / VLM families).
+
+Layers are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` so the lowered HLO is O(1) in depth — essential for the
+512-device dry-run compiles (DESIGN.md §7) — with per-block rematerialization
+for memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .components import (F32, apply_ffn, apply_norm, attn_out, embed,
+                         embed_specs, ffn_specs, norm_specs, qkv_project,
+                         sdpa, unembed)
+from .config import ModelConfig
+from .moe import apply_moe, moe_specs
+from .params import ParamSpec, abstract_params, axes_tree, init_params, \
+    param_count
+
+
+def stack_specs(specs: Dict, n: int) -> Dict:
+    """Add a leading stacked-layers axis to every leaf spec."""
+    if isinstance(specs, ParamSpec):
+        return ParamSpec((n,) + specs.shape, specs.dtype,
+                         ("layers",) + (specs.axes or
+                                        (None,) * len(specs.shape)),
+                         specs.init, specs.scale)
+    return {k: stack_specs(v, n) for k, v in specs.items()}
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict:
+    if cfg.attn_type == "mla":
+        return attn_mod.mla_specs(cfg)
+    from .components import attention_specs
+    return attention_specs(cfg)
+
+
+def block_specs(cfg: ModelConfig, *, moe_layer: bool) -> Dict:
+    s = {
+        "ln_attn": norm_specs(cfg),
+        "attn": _attn_specs(cfg),
+        "ln_ffn": norm_specs(cfg),
+    }
+    if moe_layer:
+        s["moe"] = moe_specs(cfg)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.first_dense_layers:
+            d_ff = cfg.moe.dense_d_ff or cfg.d_ff
+        s["ffn"] = ffn_specs(cfg, d_ff=d_ff)
+    return s
+
+
+def _self_attention(p: Dict, x: jnp.ndarray, positions, cfg: ModelConfig,
+                    cache: Optional[Dict], pos0) -> Tuple[jnp.ndarray,
+                                                          Optional[Dict]]:
+    """Returns (attn output (B,S,D), updated cache)."""
+    if cfg.attn_type == "mla":
+        c_kv, k_r = attn_mod.mla_latents(p, x, positions, cfg)
+        if cache is not None:
+            cache = dict(cache)
+            cache["c_kv"] = attn_mod.cache_update(cache["c_kv"], c_kv,
+                                                  pos0, 1)
+            cache["k_rope"] = attn_mod.cache_update(cache["k_rope"], k_r,
+                                                    pos0, 1)
+            c_all, kr_all = cache["c_kv"], cache["k_rope"]
+            kv_pos = jnp.arange(c_all.shape[1])
+        else:
+            c_all, kr_all, kv_pos = c_kv, k_r, None
+        o = attn_mod.mla_attention(p, x, c_all, kr_all, positions, cfg,
+                                   kv_positions=kv_pos)
+        return o, cache
+    q, k, v = qkv_project(p, x, cfg, positions)
+    if cache is not None:
+        cache = dict(cache)
+        cache["k"] = attn_mod.cache_update(cache["k"], k, pos0, 2)
+        cache["v"] = attn_mod.cache_update(cache["v"], v, pos0, 2)
+        k_all, v_all = cache["k"], cache["v"]
+        kv_pos = jnp.arange(k_all.shape[2])
+    else:
+        k_all, v_all, kv_pos = k, v, None
+    o = sdpa(q, k_all, v_all, causal=True, kv_positions=kv_pos,
+                 q_positions=positions)
+    return attn_out(p, o), cache
+
+
+def apply_block(p: Dict, x: jnp.ndarray, positions, cfg: ModelConfig, *,
+                moe_layer: bool, cache: Optional[Dict] = None,
+                pos0=0) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    h = apply_norm(p["ln_attn"], x, cfg)
+    o, cache = _self_attention(p["attn"], h, positions, cfg, cache, pos0)
+    x = x + o
+    h = apply_norm(p["ln_ffn"], x, cfg)
+    aux = jnp.zeros((), F32)
+    if moe_layer:
+        f, aux = apply_moe(p["moe"], h, cfg)
+    else:
+        f = apply_ffn(p["ffn"], h, cfg)
+    return x + f, aux, cache
+
+
+class TransformerLM:
+    """Decoder-only LM facade (families: dense, moe, vlm)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        m = cfg.moe
+        self.n_dense_front = m.first_dense_layers if m else 0
+        self.n_scanned = cfg.n_layers - self.n_dense_front
+        self.specs: Dict = {"embed": embed_specs(cfg)}
+        for i in range(self.n_dense_front):
+            self.specs[f"front_{i}"] = block_specs(cfg, moe_layer=False)
+        self.specs["blocks"] = stack_specs(
+            block_specs(cfg, moe_layer=m is not None), self.n_scanned)
+        self.specs["ln_f"] = norm_specs(cfg)
+        self.n_params = param_count(self.specs)
+        self.n_active_params = self._active_params()
+
+    def _active_params(self) -> int:
+        cfg = self.cfg
+        m = cfg.moe
+        if m is None:
+            return self.n_params
+        per_expert = param_count(moe_specs(cfg)) - param_count(
+            {"r": ParamSpec((cfg.d_model, m.n_experts), F32)})
+        shared = (param_count(ffn_specs(cfg, m.n_shared * m.d_ff_expert))
+                  if m.n_shared else 0)
+        routed_all = per_expert - shared
+        routed_active = routed_all * m.top_k // m.n_experts
+        inactive = (routed_all - routed_active) * self.n_scanned
+        return self.n_params - inactive
+
+    # -- forward -------------------------------------------------------------
+    def apply(self, params: Dict, tokens: Optional[jnp.ndarray] = None, *,
+              inputs_embeds: Optional[jnp.ndarray] = None,
+              positions: Optional[jnp.ndarray] = None,
+              remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (logits (B,S,V) f32, aux_loss)."""
+        cfg = self.cfg
+        x = (embed(params["embed"], tokens, cfg)
+             if inputs_embeds is None else inputs_embeds)
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)
+        aux_total = jnp.zeros((), F32)
+        for i in range(self.n_dense_front):
+            x, aux, _ = apply_block(params[f"front_{i}"], x, positions, cfg,
+                                    moe_layer=False)
+            aux_total += aux
+
+        is_moe = cfg.moe is not None
+
+        from repro.parallel.api import constrain_activations
+
+        def body(carry, layer_params):
+            x, aux_total = carry
+            x = constrain_activations(x)
+            x, aux, _ = apply_block(layer_params, x, positions, cfg,
+                                    moe_layer=is_moe)
+            return (x, aux_total + aux), ()
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["blocks"])
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), aux_total
+
+    # -- serving -------------------------------------------------------------
+    def cache_shape(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        shp = (attn_mod.mla_cache_shape(cfg, batch, max_len)
+               if cfg.attn_type == "mla"
+               else attn_mod.gqa_cache_shape(cfg, batch, max_len))
+        out: Dict = {}
+        for i in range(self.n_dense_front):
+            out[f"front_{i}"] = {k: jax.ShapeDtypeStruct(v, jnp.dtype(
+                cfg.dtype)) for k, v in shp.items()}
+        out["blocks"] = {k: jax.ShapeDtypeStruct((self.n_scanned,) + v,
+                                                 jnp.dtype(cfg.dtype))
+                         for k, v in shp.items()}
+        return out
+
+    def cache_axes(self) -> Dict:
+        cfg = self.cfg
+        if cfg.attn_type == "mla":
+            ax = {"c_kv": ("batch", "kv_seq", "kv_lora"),
+                  "k_rope": ("batch", "kv_seq", None)}
+        else:
+            ax = {"k": ("batch", "kv_heads", "kv_seq", "head_dim"),
+                  "v": ("batch", "kv_heads", "kv_seq", "head_dim")}
+        out: Dict = {}
+        for i in range(self.n_dense_front):
+            out[f"front_{i}"] = dict(ax)
+        out["blocks"] = {k: ("layers",) + v for k, v in ax.items()}
+        return out
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch, max_len))
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jnp.ndarray,
+                    pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """tokens: (B, 1); pos: scalar int32, or (B,) int32 per-slot
+        write offsets (continuous batching with heterogeneous prompt
+        lengths).  Returns (logits (B,1,V), updated cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        B = x.shape[0]
+        positions = (pos[:, None] if getattr(pos, "ndim", 0) == 1
+                     else jnp.broadcast_to(pos, (B, 1)))
+        new_cache: Dict = dict(cache)
+        for i in range(self.n_dense_front):
+            x, _, new_cache[f"front_{i}"] = apply_block(
+                params[f"front_{i}"], x, positions, cfg, moe_layer=False,
+                cache=cache[f"front_{i}"], pos0=pos)
+
+        is_moe = cfg.moe is not None
+
+        def body(x, layer):
+            layer_params, layer_cache = layer
+            x, _, new_c = apply_block(layer_params, x, positions, cfg,
+                                      moe_layer=is_moe, cache=layer_cache,
+                                      pos0=pos)
+            return x, new_c
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), new_cache
+
+    def prefill(self, params: Dict, tokens: jnp.ndarray, max_len: int
+                ) -> Tuple[jnp.ndarray, Dict]:
+        """Run the prompt, building the cache.  tokens: (B, S)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        cache = self.init_cache(B, max_len)
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(S)
+        new_cache: Dict = dict(cache)
+        for i in range(self.n_dense_front):
+            x, _, new_cache[f"front_{i}"] = apply_block(
+                params[f"front_{i}"], x, positions, cfg, moe_layer=False,
+                cache=cache[f"front_{i}"], pos0=0)
+
+        is_moe = cfg.moe is not None
+
+        def body(x, layer):
+            layer_params, layer_cache = layer
+            x, _, new_c = apply_block(layer_params, x, positions, cfg,
+                                      moe_layer=is_moe, cache=layer_cache,
+                                      pos0=0)
+            return x, new_c
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+        x = apply_norm(params["ln_f"], x[:, -1:], cfg)
+        # last-position logits only: full-sequence logits are (B,S,V) —
+        # hundreds of GB at 32k prefill (EXPERIMENTS.md §Perf)
+        return unembed(params["embed"], x, cfg), new_cache
+
+    def scan_trips(self) -> int:
+        return max(self.n_scanned, 1)
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key) -> Dict:
+        return init_params(self.specs, key)
+
+    def abstract(self) -> Dict:
+        return abstract_params(self.specs)
+
+    def axes(self) -> Dict:
+        return axes_tree(self.specs)

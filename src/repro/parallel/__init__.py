@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, batch_spec, data_shardings,
+                       default_rules, param_shardings, spec_for)
+
+__all__ = ["ShardingRules", "default_rules", "spec_for", "param_shardings",
+           "data_shardings", "batch_spec"]

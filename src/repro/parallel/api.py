@@ -1,0 +1,39 @@
+"""Activation-sharding context.
+
+XLA's sharding propagation through ``while`` (scan) bodies can settle on a
+batch-replicated layout for the carried activations — observed as
+global-batch tensors inside the layer scan and a 62 GiB logits all-gather
+(EXPERIMENTS.md §Perf iteration 5).  The launchers install the batch spec
+here; model scan bodies call :func:`constrain_activations` on their
+carries, pinning (batch, seq, embed) layouts exactly like MaxText's
+logical-axis constraints.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_SPEC: Optional[P] = None
+
+
+def set_activation_spec(spec: Optional[P]) -> None:
+    """Install the (batch, seq, embed) PartitionSpec used for scan-carried
+    activations; None disables constraints (single-host training)."""
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def activation_spec() -> Optional[P]:
+    return _ACT_SPEC
+
+
+def constrain_activations(x):
+    """Pin a (B, S, D) activation to the installed spec (no-op outside a
+    distributed launch)."""
+    if _ACT_SPEC is None:
+        return x
+    if x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SPEC)

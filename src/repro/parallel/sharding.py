@@ -1,0 +1,152 @@
+"""Logical-axis ➜ mesh-axis sharding rules (DESIGN.md §5).
+
+Parameters/activations carry *logical* axis names (models/params.py); the
+rules here bind them to mesh axes with divisibility fallback (an axis that
+does not divide its mesh extent is replicated — e.g. MQA's single KV head
+never shards over a 16-way model axis).
+
+Default layout on the production meshes:
+  (16, 16)   ("data", "model")          — single pod
+  (2, 16, 16)("pod", "data", "model")   — two pods; batch shards over
+                                          ("pod", "data")
+
+* tensor-parallel ("model"): heads / kv_heads / mlp / expert / vocab
+* FSDP ("data"): the "embed" axis of weight matrices — XLA all-gathers
+  per-layer inside the scan (ZeRO-3-style weight sharding)
+* optimizer state: same specs as params (ZeRO-1 comes for free since the
+  "embed" axis is already data-sharded; see repro/optim)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    def lookup(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True) -> ShardingRules:
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rules = [
+        ("vocab", "model"),
+        ("embed", "data" if fsdp else None),
+        ("mlp", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("head_dim", None),
+        ("expert", "model"),
+        ("kv_lora", None),
+        ("layers", None),
+        ("state", None),
+        ("conv", None),
+        ("batch", batch),            # activation/cache batch dim
+        ("seq", None),               # sequence stays local by default
+        # KV-cache seq dim: claims the model axis ONLY when kv_heads could
+        # not (spec_for processes dims in order and never reuses an axis) —
+        # sequence-parallel KV for MQA/low-kv-head archs, whose replicated
+        # caches otherwise cost ~100 s of collectives per decode step
+        ("kv_seq", "model"),
+    ]
+    return ShardingRules(tuple(rules), batch)
+
+
+def _mesh_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: ShardingRules, mesh: Mesh) -> P:
+    """PartitionSpec for one array, with divisibility fallback."""
+    entries = []
+    used: set = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axes = rules.lookup(logical)
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        names = (mesh_axes,) if isinstance(mesh_axes, str) else mesh_axes
+        names = tuple(a for a in names if a not in used)
+        if not names or dim % _mesh_size(mesh, names) != 0:
+            entries.append(None)
+            continue
+        used.update(names)
+        entries.append(names[0] if len(names) == 1 else names)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(axes_tree, specs_tree, rules: ShardingRules,
+                    mesh: Mesh):
+    """NamedSharding tree congruent with the param tree.  ``axes_tree`` is
+    the logical-axes tree, ``specs_tree`` the abstract/concrete params
+    (leaves expose .shape)."""
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape), tuple(axes),
+                                            rules, mesh))
+    return jax.tree.map(one, axes_tree, specs_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(axes_tree, shape_tree, rules: ShardingRules, mesh: Mesh):
+    """Shardings for any (axes tree, shape tree) pair — used for KV caches
+    and other activation state whose logical axes the model declares."""
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape), tuple(axes),
+                                            rules, mesh))
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=is_axes_leaf)
+
+
+def batch_spec(rules: ShardingRules) -> P:
+    b = rules.batch_axes
+    return P(b if len(b) > 1 else b[0])
+
+
+def data_shardings(tree, rules: ShardingRules, mesh: Mesh):
+    """Shard every input leaf's leading (batch) dim over the batch axes;
+    scalars replicate.  KV caches additionally shard kv-head dims when the
+    leaf looks like (B, H, S, D) and H divides the model axis."""
+    bspec = batch_spec(rules)
+    model_n = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        batch_n = _mesh_size(mesh, rules.batch_axes)
+        lead = bspec[0] if shape[0] % batch_n == 0 else None
+        rest = [None] * (len(shape) - 1)
+        if (len(shape) == 4 and shape[1] % model_n == 0 and shape[1] > 1):
+            rest[0] = "model"   # (B, H, S, D) caches: heads over model
+        return NamedSharding(mesh, P(lead, *rest))
+
+    return jax.tree.map(one, tree)

@@ -1,0 +1,3 @@
+from .step import TrainState, abstract_opt_state, make_train_step
+
+__all__ = ["make_train_step", "TrainState", "abstract_opt_state"]

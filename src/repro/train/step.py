@@ -1,0 +1,99 @@
+"""Train-step factory: grad, microbatch accumulation, clipping, AdamW.
+
+Distributed-optimization knobs (DESIGN.md §5):
+  * ``grad_accum``  — lax.scan microbatching; each microbatch's backward
+    overlaps with the deferred accumulation (XLA schedules the adds against
+    the next microbatch's compute).
+  * ``compress_grads`` — accumulate/reduce gradients in bf16 instead of
+    f32: halves the DP all-reduce bytes.  The final optimizer math is f32.
+  * remat — per-block rematerialization inside the model's scan.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import lm_loss
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def abstract_opt_state(abstract_params):
+    """ShapeDtypeStruct AdamW state congruent with abstract params (for the
+    dry-run — no allocation)."""
+    from repro.optim.adamw import AdamWState
+    mu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, F32),
+                      abstract_params)
+    nu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, F32),
+                      abstract_params)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), mu, nu)
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    def re(x):
+        b = x.shape[0]
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def make_train_step(model, *, lr_fn: Callable, grad_accum: int = 1,
+                    clip_norm: float = 1.0, aux_weight: float = 0.01,
+                    compress_grads: Optional[str] = "bf16",
+                    remat: bool = True):
+    acc_dtype = jnp.bfloat16 if compress_grads == "bf16" else F32
+
+    def loss_fn(params, mb):
+        loss, metrics = lm_loss(model, params, mb, aux_weight=aux_weight,
+                                remat=remat)
+        return loss, metrics
+
+    def train_step(params, opt, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, grad_accum)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(acc_dtype), acc, g)
+                return (acc, loss_sum + loss), ()
+
+            (grads, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = {"ce": loss, "aux": jnp.zeros((), F32)}
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(opt.step)
+        params, opt = adamw_update(grads, opt, params, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, gnorm=gnorm, lr=lr)
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return serve_step
+
+
+def make_prefill_step(model, max_len: int):
+    def prefill_step(params, tokens):
+        return model.prefill(params, tokens, max_len)
+    return prefill_step

@@ -1,0 +1,147 @@
+"""Property tests over the kernel-config space (hypothesis):
+
+* soundness   — every *valid* config passes invariant validation
+                (no false rejections blocking the optimizer), and
+* completeness over the modeled fault space — every injected bug class is
+                caught for every sampled config.
+
+These are the system-level statements behind the paper's Table 3: the
+static layer's verdicts are trustworthy enough to act as dense rewards.
+"""
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.invariants import (FlashAttentionConfig,
+                                   FlashAttentionProblem, GemmConfig,
+                                   GemmProblem, MoEConfig, MoEProblem,
+                                   SSDConfig, SSDProblem, verify_gemm,
+                                   verify_flash_attention, verify_moe,
+                                   verify_ssd)
+
+pow2 = lambda lo, hi: st.sampled_from(
+    [2 ** i for i in range(lo, hi + 1)])
+
+
+@st.composite
+def gemm_cases(draw):
+    cfg = GemmConfig(bm=draw(pow2(4, 9)), bn=draw(pow2(4, 9)),
+                     bk=draw(pow2(5, 9)),
+                     split_k=draw(st.sampled_from([1, 1, 2, 4])),
+                     stagger_k=draw(st.booleans()))
+    m = draw(pow2(9, 12))
+    n = draw(pow2(9, 12))
+    k = draw(pow2(9, 12))
+    assume(cfg.split_k == 1 or (k // cfg.bk) % cfg.split_k == 0)
+    assume(k >= cfg.bk * cfg.split_k)
+    if cfg.split_k > 1:
+        cfg = GemmConfig(cfg.bm, cfg.bn, cfg.bk, cfg.split_k, False)
+    return cfg, GemmProblem(m, n, k, "bf16")
+
+
+@given(gemm_cases())
+@settings(max_examples=25, deadline=None)
+def test_valid_gemm_configs_never_rejected(case):
+    cfg, prob = case
+    assert verify_gemm(cfg, prob).hard_ok
+
+
+@given(gemm_cases(), st.sampled_from(
+    ["swap_b_index", "acc_depends_k", "grid_short", "missing_init"]))
+@settings(max_examples=20, deadline=None)
+def test_gemm_bugs_always_caught(case, bug):
+    cfg, prob = case
+    assume(not (bug == "grid_short" and prob.m <= cfg.bm))
+    # a single-step reduction has no carried accumulator dependence — the
+    # bug is vacuous at nk == 1 (hypothesis-discovered edge)
+    assume(not (bug == "acc_depends_k"
+                and prob.k // (cfg.bk * cfg.split_k) < 2))
+    assert not verify_gemm(cfg, prob, inject_bug=bug).hard_ok
+
+
+@st.composite
+def fa_cases(draw):
+    hkv = draw(st.sampled_from([1, 2, 4]))
+    group = draw(st.sampled_from([1, 2, 4]))
+    cfg = FlashAttentionConfig(block_q=draw(pow2(4, 9)),
+                               block_kv=draw(pow2(4, 8)),
+                               causal_block_skip=draw(st.booleans()))
+    prob = FlashAttentionProblem(
+        batch=draw(st.sampled_from([1, 4, 16])), q_heads=hkv * group,
+        kv_heads=hkv, seq_q=draw(pow2(10, 13)), seq_kv=draw(pow2(10, 13)),
+        head_dim=draw(st.sampled_from([64, 128, 256])), causal=True,
+        dtype="bf16")
+    return cfg, prob
+
+
+@given(fa_cases())
+@settings(max_examples=25, deadline=None)
+def test_valid_fa_configs_never_rejected(case):
+    cfg, prob = case
+    assert verify_flash_attention(cfg, prob).hard_ok
+
+
+@given(fa_cases(), st.sampled_from(["wrong_kv_head", "m_depends_kv",
+                                    "q_block_offset"]))
+@settings(max_examples=20, deadline=None)
+def test_fa_bugs_always_caught(case, bug):
+    cfg, prob = case
+    assume(not (bug == "wrong_kv_head" and prob.q_heads == prob.kv_heads))
+    assert not verify_flash_attention(cfg, prob, inject_bug=bug).hard_ok
+
+
+@st.composite
+def moe_cases(draw):
+    cfg = MoEConfig(block_t=draw(pow2(3, 8)), block_f=draw(pow2(7, 10)),
+                    fuse_gate=draw(st.booleans()))
+    d_ff = cfg.block_f * draw(st.sampled_from([1, 2, 4]))
+    prob = MoEProblem(tokens=draw(pow2(10, 14)),
+                      d_model=draw(st.sampled_from([512, 1024, 4096])),
+                      d_ff=d_ff,
+                      n_experts=draw(st.sampled_from([8, 16, 64])),
+                      top_k=draw(st.sampled_from([1, 2, 6, 8])),
+                      dtype="bf16")
+    return cfg, prob
+
+
+@given(moe_cases())
+@settings(max_examples=20, deadline=None)
+def test_valid_moe_configs_never_rejected(case):
+    cfg, prob = case
+    assert verify_moe(cfg, prob).hard_ok
+
+
+@given(moe_cases(), st.sampled_from(
+    ["w_by_block_index", "combine_other_table", "gate_unpermuted",
+     "down_f_offset", "y_depends_f"]))
+@settings(max_examples=20, deadline=None)
+def test_moe_bugs_always_caught(case, bug):
+    cfg, prob = case
+    # an unfused gate has no in-kernel gate gather to corrupt
+    assume(not (bug == "gate_unpermuted" and not cfg.fuse_gate))
+    assert not verify_moe(cfg, prob, inject_bug=bug).hard_ok
+
+
+@st.composite
+def ssd_cases(draw):
+    q = draw(st.sampled_from([32, 64, 128, 256]))
+    prob = SSDProblem(batch_heads=draw(st.sampled_from([8, 64, 384])),
+                      seq=q * draw(st.sampled_from([2, 8, 32])),
+                      head_dim=draw(st.sampled_from([32, 64, 128])),
+                      d_state=draw(st.sampled_from([64, 128])))
+    return SSDConfig(chunk=q), prob
+
+
+@given(ssd_cases())
+@settings(max_examples=15, deadline=None)
+def test_valid_ssd_configs_never_rejected(case):
+    cfg, prob = case
+    assert verify_ssd(cfg, prob).hard_ok
+
+
+@given(ssd_cases(), st.sampled_from(["b_chunk_offset", "state_depends_c",
+                                     "xb_mismatch"]))
+@settings(max_examples=15, deadline=None)
+def test_ssd_bugs_always_caught(case, bug):
+    cfg, prob = case
+    assume(prob.seq // cfg.chunk >= 2)
+    assert not verify_ssd(cfg, prob, inject_bug=bug).hard_ok

@@ -1,0 +1,92 @@
+"""Layout algebra: property tests against brute-force oracles."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (Layout, brute_force_equal, logical_divide,
+                               make_contiguous, view)
+
+
+def small_layouts():
+    shapes = st.lists(st.integers(1, 6), min_size=1, max_size=3)
+
+    @st.composite
+    def layout(draw):
+        shp = tuple(draw(shapes))
+        std = tuple(draw(st.integers(0, 12)) for _ in shp)
+        return Layout(shp if len(shp) > 1 else shp[0],
+                      std if len(std) > 1 else std[0])
+    return layout()
+
+
+@given(small_layouts())
+@settings(max_examples=200, deadline=None)
+def test_coalesce_preserves_function(l):
+    assert brute_force_equal(l, l.coalesce())
+
+
+@given(small_layouts())
+@settings(max_examples=200, deadline=None)
+def test_flat_preserves_function(l):
+    assert brute_force_equal(l, l.flat())
+
+
+@given(small_layouts())
+@settings(max_examples=200, deadline=None)
+def test_injectivity_matches_brute_force(l):
+    claimed = l.is_injective()
+    offsets = list(l.offsets())
+    actual = len(set(offsets)) == len(offsets)
+    # is_injective is allowed to be conservative (False on injective
+    # layouts), never unsound (True on non-injective ones)
+    if claimed:
+        assert actual
+
+
+def test_contiguous_row_major():
+    l = make_contiguous((2, 3, 4))
+    assert l((0, 0, 1)) == 1
+    assert l((0, 1, 0)) == 4
+    assert l((1, 0, 0)) == 12
+    assert l.cosize == 24
+
+
+def test_view_reshape_matches_numpy_colex():
+    """The algebra's flat ordering is colexicographic (CuTe convention,
+    paper ref [11]) — view() therefore matches Fortran-order reshape."""
+    import numpy as np
+    a = np.arange(24).reshape(4, 6, order="F")
+    l = make_contiguous((4, 6), row_major=False)
+    v = view(l, (2, 12), row_major=False)
+    b = a.reshape(2, 12, order="F")
+    flat = a.reshape(-1, order="F")
+    for i in range(2):
+        for j in range(12):
+            assert flat[v((i, j))] == b[i, j]
+
+
+def test_view_size_mismatch_rejected():
+    with pytest.raises(ValueError):
+        view(make_contiguous((4, 6)), (5, 5))
+
+
+def test_logical_divide_tiles():
+    l = make_contiguous((8, 8))
+    t = logical_divide(l, (4, 4))
+    # inner coordinate (1,1) within tile + outer tile (1,0)
+    assert t(((1, 1), (0, 0))) == l((1, 1))
+    assert t(((0, 0), (1, 0))) == l((4, 0))
+    assert t(((2, 3), (1, 1))) == l((6, 7))
+
+
+def test_right_inverse_roundtrip():
+    l = Layout((4, 8), (8, 1))  # row-major 4x8
+    r = l.right_inverse()
+    for off in range(l.cosize):
+        assert l(r(off)) == off
+
+
+def test_nested_layout_wraps():
+    # ((2,2),(…)) nested mode: flat index wraps around sub-extents
+    l = Layout(((2, 2),), ((1, 4),))
+    got = [l(i) for i in range(4)]
+    assert got == [0, 1, 4, 5]

@@ -1,0 +1,157 @@
+"""Substrate: data determinism/resume, checkpoint manager, fault tolerance,
+sharding rules, optimizer."""
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import make_dataset
+from repro.ft import PreemptionHandler, StragglerMonitor
+from repro.models import build
+from repro import configs
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.parallel import default_rules, spec_for
+from repro.launch.mesh import make_host_mesh
+
+
+class TestData:
+    def test_deterministic_in_step(self):
+        cfg = configs.get_reduced("qwen3-1.7b")
+        d1 = make_dataset(cfg, seq_len=32, global_batch=4, seed=7)
+        d2 = make_dataset(cfg, seq_len=32, global_batch=4, seed=7)
+        for _ in range(3):
+            b1, b2 = next(d1), next(d2)
+            np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_resume_matches_uninterrupted(self):
+        cfg = configs.get_reduced("qwen3-1.7b")
+        ref = make_dataset(cfg, seq_len=16, global_batch=2, seed=3)
+        stream = [next(ref)["tokens"] for _ in range(6)]
+        d = make_dataset(cfg, seq_len=16, global_batch=2, seed=3)
+        next(d), next(d)
+        state = d.state()
+        d2 = make_dataset(cfg, seq_len=16, global_batch=2, seed=3)
+        d2.restore(state)
+        np.testing.assert_array_equal(next(d2)["tokens"], stream[2])
+
+    def test_seed_mismatch_rejected(self):
+        cfg = configs.get_reduced("qwen3-1.7b")
+        d = make_dataset(cfg, seq_len=16, global_batch=2, seed=1)
+        with pytest.raises(ValueError):
+            d.restore({"step": 0, "seed": 2})
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        save_pytree(tree, tmp_path / "ck")
+        back = load_pytree(tree, tmp_path / "ck")
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree["a"]))
+        assert back["b"]["c"].dtype == jnp.bfloat16
+
+    def test_manager_atomic_keep_latest(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+        for step in (10, 20, 30):
+            mgr.save(step, {"params": {"w": jnp.full((2,), step)},
+                            "meta": {"step": step}})
+        assert mgr.latest_step() == 30
+        kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+        assert len(kept) == 2                      # keep-K GC
+        back = mgr.restore({"params": {"w": jnp.zeros((2,))}})
+        assert float(back["params"]["w"][0]) == 30
+        assert back["meta"]["step"] == 30
+
+    def test_async_save_then_wait(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+        mgr.save(1, {"params": {"w": jnp.ones((8,))}, "meta": {}})
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_elastic_template_restore(self, tmp_path):
+        """Checkpoints are logical: restore into a template regardless of
+        how the runtime would shard it afterwards."""
+        cfg = configs.get_reduced("gemma-7b")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        mgr = CheckpointManager(tmp_path, async_save=False)
+        mgr.save(5, {"params": params, "meta": {"step": 5}})
+        back = mgr.restore({"params": model.abstract()})
+        flat1 = jax.tree_util.tree_leaves(params)
+        flat2 = jax.tree_util.tree_leaves(back["params"])
+        assert all(a.shape == b.shape for a, b in zip(flat1, flat2))
+
+
+class TestFaultTolerance:
+    def test_straggler_flagged(self):
+        mon = StragglerMonitor(min_samples=4, threshold=1.5)
+        for i in range(10):
+            for h in ("h0", "h1", "h2", "h3"):
+                mon.record(h, 1.0 if h != "h2" else 2.5)
+        assert mon.check() == ["h2"]
+
+    def test_no_false_positives(self):
+        mon = StragglerMonitor(min_samples=4)
+        for i in range(10):
+            for h in ("h0", "h1"):
+                mon.record(h, 1.0 + 0.01 * i)
+        assert mon.check() == []
+
+    def test_preemption_flag(self):
+        h = PreemptionHandler(signals=())
+        assert not h.preempted
+        h._on_signal(None, None)
+        assert h.preempted
+
+
+class TestShardingRules:
+    def _mesh(self):
+        from jax.sharding import AbstractMesh
+        return AbstractMesh((16, 16), ("data", "model"))
+
+    def test_divisibility_fallback(self):
+        mesh = self._mesh()
+        rules = default_rules(mesh)
+        # kv_heads=1 can't shard over a 16-way model axis: replicated
+        spec = spec_for((64, 1, 128, 64),
+                        ("batch", "kv_heads", "seq", "head_dim"),
+                        rules, mesh)
+        assert len(spec) < 2 or spec[1] is None
+        # 16 kv heads do shard
+        spec = spec_for((64, 16, 128, 64),
+                        ("batch", "kv_heads", "seq", "head_dim"),
+                        rules, mesh)
+        assert spec[1] == "model"
+
+    def test_no_double_axis_use(self):
+        mesh = self._mesh()
+        rules = default_rules(mesh, fsdp=True)
+        # embed->data and batch->data in one spec: second use must drop
+        spec = spec_for((32, 64), ("batch", "embed"), rules, mesh)
+        flat = [s for s in spec if s is not None]
+        names = []
+        for s in flat:
+            names.extend(s if isinstance(s, tuple) else (s,))
+        assert len(names) == len(set(names))
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        opt = adamw_init(params)
+        for _ in range(200):
+            g = {"w": 2 * params["w"]}
+            params, opt = adamw_update(g, opt, params, lr=5e-2,
+                                       weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.2
+
+    def test_clip(self):
+        g = {"w": jnp.asarray([300.0, 400.0])}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert abs(float(norm) - 500.0) < 1e-3
+        assert abs(float(jnp.linalg.norm(clipped["w"])) - 1.0) < 1e-5
