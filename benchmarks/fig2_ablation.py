@@ -12,61 +12,96 @@ its ladder (DESIGN.md §2):
 Times are cost-model v5e estimates; every level's config passes invariant
 validation before being scored (a level that broke pairing would be
 rejected with a counterexample, not mis-benchmarked).
+
+The second section reports the VerificationEngine's cache effect on the
+L5 hillclimb: verify calls, solver discharges performed vs. the
+assertion-count × steps worst case (discharges avoided), and wall-clock
+with the normalized-constraint memo cache on vs. off.
 """
 from __future__ import annotations
 
 import sys
+import time
 
 sys.path.insert(0, "src")
 
-from dataclasses import replace  # noqa: E402
-
+from repro.core.families import get_family  # noqa: E402
 from repro.core.harness import (KernelState, Planner, Selector, Validator,
                                 optimize_kernel)  # noqa: E402
 from repro.core.harness.costmodel import estimate  # noqa: E402
-from repro.core.invariants import (FlashAttentionConfig,
-                                   FlashAttentionProblem,
-                                   verify_flash_attention)  # noqa: E402
+from repro.core.verify_engine import VerificationEngine  # noqa: E402
 
-PROB = FlashAttentionProblem(batch=16, q_heads=8, kv_heads=1, seq_q=8192,
-                             seq_kv=8192, head_dim=128, causal=True,
-                             dtype="bf16")
+FA = get_family("flash_attention")
+
+PROB = FA.problem_cls(batch=16, q_heads=8, kv_heads=1, seq_q=8192,
+                      seq_kv=8192, head_dim=128, causal=True,
+                      dtype="bf16")
 
 LEVELS = [
-    ("L0_naive", FlashAttentionConfig(block_q=8, block_kv=128,
-                                      causal_block_skip=False)),
-    ("L1_aligned_tiles", FlashAttentionConfig(block_q=128, block_kv=128,
-                                              causal_block_skip=False)),
-    ("L2_transv", FlashAttentionConfig(block_q=128, block_kv=128,
+    ("L0_naive", FA.config_cls(block_q=8, block_kv=128,
+                               causal_block_skip=False)),
+    ("L1_aligned_tiles", FA.config_cls(block_q=128, block_kv=128,
+                                       causal_block_skip=False)),
+    ("L2_transv", FA.config_cls(block_q=128, block_kv=128,
+                                v_transposed_staging=True,
+                                causal_block_skip=False)),
+    ("L3_deep_pipeline", FA.config_cls(block_q=128, block_kv=512,
                                        v_transposed_staging=True,
                                        causal_block_skip=False)),
-    ("L3_deep_pipeline", FlashAttentionConfig(block_q=128, block_kv=512,
-                                              v_transposed_staging=True,
-                                              causal_block_skip=False)),
-    ("L4_causal_skip", FlashAttentionConfig(block_q=128, block_kv=512,
-                                            v_transposed_staging=True,
-                                            causal_block_skip=True)),
+    ("L4_causal_skip", FA.config_cls(block_q=128, block_kv=512,
+                                     v_transposed_staging=True,
+                                     causal_block_skip=True)),
 ]
+
+
+def _hillclimb(use_cache: bool, iterations: int = 24):
+    engine = VerificationEngine(use_cache=use_cache)
+    st = KernelState("flash_attention", LEVELS[0][1], PROB).refresh()
+    t0 = time.perf_counter()
+    res = optimize_kernel(st, planner=Planner(),
+                          selector=Selector(temperature=0.1, seed=3),
+                          validator=Validator(engine=engine),
+                          iterations=iterations)
+    wall = time.perf_counter() - t0
+    return res, engine, wall
 
 
 def main():
     print("name,us_per_call,derived")
     base = None
+    engine = VerificationEngine()
     for name, cfg in LEVELS:
-        ver = verify_flash_attention(cfg, PROB)
+        ver = engine.verify("flash_attention", cfg, PROB)
         assert ver.hard_ok, f"{name} failed invariants:\n{ver.render()}"
         est = estimate("flash_attention", cfg, PROB)
         base = base or est.time_s
         print(f"{name},{est.time_s*1e6:.1f},"
               f"speedup={base/est.time_s:.2f}x;bound={est.bound}",
               flush=True)
-    st = KernelState("flash_attention", LEVELS[0][1], PROB).refresh()
-    res = optimize_kernel(st, planner=Planner(),
-                          selector=Selector(temperature=0.1, seed=3),
-                          validator=Validator(), iterations=24)
+    res, eng, wall_cached = _hillclimb(use_cache=True)
     est = res.best_state.est
     print(f"L5_argus_tuned,{est.time_s*1e6:.1f},"
           f"speedup={base/est.time_s:.2f}x;cfg={res.best_state.cfg.name()}")
+
+    # --- VerificationEngine cache effect on the L5 hillclimb ---------------
+    stats = res.verify_stats
+    prog = FA.build_program(LEVELS[0][1], PROB)
+    n_assert = sum(1 for op in prog.ops
+                   if type(op).__name__.startswith("Assert"))
+    worst = stats["verify_calls"] * n_assert
+    _, _, wall_cold = _hillclimb(use_cache=False)
+    print("\nverify_cache_report")
+    print("metric,value")
+    print(f"verify_calls,{stats['verify_calls']}")
+    print(f"result_cache_hits,{stats['result_hits']}")
+    print(f"constraint_lookups,{stats['constraint_lookups']}")
+    print(f"constraint_hits,{stats['constraint_hits']}")
+    print(f"solver_discharges,{stats['solver_discharges']}")
+    print(f"worst_case_discharges,{worst}")
+    print(f"discharges_avoided,{worst - stats['solver_discharges']}")
+    print(f"wall_s_cached,{wall_cached:.3f}")
+    print(f"wall_s_uncached,{wall_cold:.3f}")
+    print(f"verify_speedup,{wall_cold / max(wall_cached, 1e-9):.2f}x")
 
 
 if __name__ == "__main__":

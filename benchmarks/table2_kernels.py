@@ -24,14 +24,11 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.core.families import get_family  # noqa: E402
 from repro.core.harness import (KernelState, Planner, Selector, Validator,
                                 optimize_kernel)  # noqa: E402
 from repro.core.harness.costmodel import (HBM_BW, PEAK_FLOPS,
                                           estimate)  # noqa: E402
-from repro.core.invariants import (FlashAttentionConfig,
-                                   FlashAttentionProblem, GemmConfig,
-                                   GemmProblem, MoEConfig,
-                                   MoEProblem)  # noqa: E402
 
 from .common import time_jitted  # noqa: E402
 
@@ -52,9 +49,10 @@ def _tune(family, cfg, prob, iters=24, seed=0):
 
 
 def gemm_rows():
+    fam = get_family("gemm")
     for size in (1024, 2048, 4096, 8192, 16384):
-        prob = GemmProblem(size, size, size, "bf16")
-        naive = GemmConfig(bm=128, bn=128, bk=128)
+        prob = fam.problem_cls(size, size, size, "bf16")
+        naive = fam.config_cls(bm=128, bn=128, bk=128)
         base = estimate("gemm", naive, prob)
         res = _tune("gemm", naive, prob)
         tuned = res.best_state.est
@@ -80,12 +78,13 @@ def gemm_rows():
 
 
 def fa_rows():
+    fam = get_family("flash_attention")
     for seq in (1024, 2048, 4096, 8192, 16384):
-        prob = FlashAttentionProblem(batch=16, q_heads=8, kv_heads=1,
-                                     seq_q=seq, seq_kv=seq, head_dim=128,
-                                     causal=True, dtype="bf16")
-        naive = FlashAttentionConfig(block_q=8, block_kv=128,
-                                     causal_block_skip=False)
+        prob = fam.problem_cls(batch=16, q_heads=8, kv_heads=1,
+                               seq_q=seq, seq_kv=seq, head_dim=128,
+                               causal=True, dtype="bf16")
+        naive = fam.config_cls(block_q=8, block_kv=128,
+                               causal_block_skip=False)
         base = estimate("flash_attention", naive, prob)
         res = _tune("flash_attention", naive, prob)
         tuned = res.best_state.est
@@ -112,10 +111,11 @@ def fa_rows():
 
 def moe_rows():
     # DeepSeek-V3-ish deployment slice: dim 7168, inter 2048, 32 experts/chip
+    fam = get_family("moe")
     for seq in (1024, 2048, 4096, 8192, 16384):
-        prob = MoEProblem(tokens=seq, d_model=7168, d_ff=2048,
-                          n_experts=32, top_k=8, dtype="bf16")
-        naive = MoEConfig(block_t=8, block_f=2048)
+        prob = fam.problem_cls(tokens=seq, d_model=7168, d_ff=2048,
+                               n_experts=32, top_k=8, dtype="bf16")
+        naive = fam.config_cls(block_t=8, block_f=2048)
         base = estimate("moe", naive, prob)
         res = _tune("moe", naive, prob)
         tuned = res.best_state.est

@@ -22,13 +22,16 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.core.families import get_family  # noqa: E402
 from repro.core.harness import (KernelState, LoweringAgent, Planner,
                                 Selector, Validator,
                                 optimize_kernel)  # noqa: E402
-from repro.core.invariants import (FlashAttentionConfig,
-                                   FlashAttentionProblem, GemmConfig,
-                                   GemmProblem, MoEConfig,
-                                   MoEProblem)  # noqa: E402
+
+
+def _task(family: str, *prob_args, **prob_kwargs) -> KernelState:
+    fam = get_family(family)
+    return KernelState(family, fam.config_cls(),
+                       fam.problem_cls(*prob_args, **prob_kwargs))
 
 
 def build_suite():
@@ -47,8 +50,7 @@ def build_suite():
                     (512, 16384, 512), (2048, 8192, 2048),
                     (8192, 2048, 8192), (4096, 512, 4096),
                     (512, 4096, 512)]:
-        tasks.append(KernelState("gemm", GemmConfig(),
-                                 GemmProblem(m, n, k, "bf16")))
+        tasks.append(_task("gemm", m, n, k, "bf16"))
     # 20 attention problems
     for b, hq, hkv, s, d in [(16, 8, 1, 1024, 128), (16, 8, 1, 4096, 128),
                              (16, 8, 1, 16384, 128), (8, 16, 4, 2048, 128),
@@ -60,9 +62,8 @@ def build_suite():
                              (64, 8, 1, 512, 128), (8, 8, 1, 8192, 128),
                              (8, 4, 1, 4096, 128), (4, 16, 2, 16384, 128),
                              (16, 32, 4, 2048, 64), (8, 64, 8, 1024, 128)]:
-        tasks.append(KernelState(
-            "flash_attention", FlashAttentionConfig(),
-            FlashAttentionProblem(b, hq, hkv, s, s, d, True, "bf16")))
+        tasks.append(_task("flash_attention", b, hq, hkv, s, s, d, True,
+                           "bf16"))
     # 15 MoE problems
     for t, dm, df, e, k in [(4096, 1024, 2048, 16, 2),
                             (8192, 2048, 1408, 64, 6),
@@ -79,8 +80,7 @@ def build_suite():
                             (8192, 2048, 4096, 8, 2),
                             (2048, 2048, 1024, 16, 8),
                             (4096, 4096, 512, 64, 4)]:
-        tasks.append(KernelState("moe", MoEConfig(),
-                                 MoEProblem(t, dm, df, e, k, "bf16")))
+        tasks.append(_task("moe", t, dm, df, e, k, "bf16"))
     return tasks
 
 

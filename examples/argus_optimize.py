@@ -4,11 +4,14 @@
         --iterations 20 [--run-kernels]
 
 Runs the agentic harness (planner -> selector -> lowering -> validator,
-invariant-gated) on each kernel family's production problem, printing the
-trajectory and writing the winning configs to ``tuning_cache.json`` — the
-file the training/serving launchers consult for kernel configs.
-``--run-kernels`` additionally executes every accepted candidate in Pallas
-interpret mode against the jnp oracle (slow; CI uses small shapes).
+invariant-gated) on each registered kernel family's production problem,
+printing the trajectory and writing the winning configs to
+``tuning_cache.json`` — the file the training/serving launchers consult
+for kernel configs.  Families come straight from the registry
+(:mod:`repro.core.families`): registering a new family makes it tunable
+here with no changes to this script.  ``--run-kernels`` additionally
+executes every accepted candidate in Pallas interpret mode against the
+jnp oracle (slow; CI uses small shapes).
 """
 import argparse
 import dataclasses
@@ -18,48 +21,40 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
+from repro.core.families import all_families, get_family  # noqa: E402
 from repro.core.harness import (KernelState, LoweringAgent, Planner,
                                 Selector, Validator,
                                 optimize_kernel)  # noqa: E402
-from repro.core.invariants import (FlashAttentionConfig,
-                                   FlashAttentionProblem, GemmConfig,
-                                   GemmProblem, MoEConfig,
-                                   MoEProblem)  # noqa: E402
-
-PROBLEMS = {
-    "gemm": (GemmConfig(), GemmProblem(8192, 8192, 8192, "bf16")),
-    "flash_attention": (FlashAttentionConfig(block_q=8,
-                                             causal_block_skip=False),
-                        FlashAttentionProblem(16, 8, 1, 8192, 8192, 128,
-                                              True, "bf16")),
-    "moe": (MoEConfig(block_t=8), MoEProblem(16384, 7168, 2048, 32, 8,
-                                             "bf16")),
-}
+from repro.core.verify_engine import VerificationEngine  # noqa: E402
 
 
 def main():
+    names = [f.name for f in all_families() if f.example is not None]
     ap = argparse.ArgumentParser()
-    ap.add_argument("--family", default="all",
-                    choices=["all", "gemm", "flash_attention", "moe"])
+    ap.add_argument("--family", default="all", choices=["all"] + names)
     ap.add_argument("--iterations", type=int, default=20)
     ap.add_argument("--run-kernels", action="store_true")
     ap.add_argument("--out", default="tuning_cache.json")
     args = ap.parse_args()
 
-    fams = list(PROBLEMS) if args.family == "all" else [args.family]
+    fams = names if args.family == "all" else [args.family]
     cache = {}
     if Path(args.out).exists():
         cache = json.loads(Path(args.out).read_text())
 
-    for fam in fams:
-        cfg, prob = PROBLEMS[fam]
-        st = KernelState(fam, cfg, prob).refresh()
-        print(f"\n=== {fam}: baseline {st.est.time_s*1e3:.3f} ms "
+    # one engine across families: repeat configs revalidate for free
+    engine = VerificationEngine()
+    for fam_name in fams:
+        fam = get_family(fam_name)
+        cfg, prob = fam.example()
+        st = KernelState(fam_name, cfg, prob).refresh()
+        print(f"\n=== {fam_name}: baseline {st.est.time_s*1e3:.3f} ms "
               f"({st.est.bound}-bound, {st.est.tflops():.0f} TFLOPS)")
         res = optimize_kernel(
             st, planner=Planner(), selector=Selector(temperature=0.15),
             lowering=LoweringAgent(fault_model=False),
-            validator=Validator(run_kernels=args.run_kernels),
+            validator=Validator(run_kernels=args.run_kernels,
+                                engine=engine),
             iterations=args.iterations)
         for r in res.history:
             mark = "✓" if r.accepted else ("·" if r.verdict.ok else "✗")
@@ -70,10 +65,15 @@ def main():
         best = res.best_state
         print(f"  best: {best.cfg.name()}  {res.best_time_s*1e3:.3f} ms "
               f"({res.speedup:.2f}x, {best.est.tflops():.0f} TFLOPS)")
-        cache[fam] = {"problem": dataclasses.asdict(prob),
-                      "config": dataclasses.asdict(best.cfg),
-                      "est_ms": res.best_time_s * 1e3,
-                      "speedup": res.speedup}
+        vs = res.verify_stats
+        print(f"  verify: {vs.get('verify_calls', 0)} calls, "
+              f"{vs.get('result_hits', 0)} result hits, "
+              f"{vs.get('constraint_hits', 0)} constraint hits, "
+              f"{vs.get('solver_discharges', 0)} solver discharges")
+        cache[fam_name] = {"problem": dataclasses.asdict(prob),
+                           "config": dataclasses.asdict(best.cfg),
+                           "est_ms": res.best_time_s * 1e3,
+                           "speedup": res.speedup}
     Path(args.out).write_text(json.dumps(cache, indent=2))
     print(f"\nwrote {args.out}")
 

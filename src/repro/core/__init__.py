@@ -1,18 +1,26 @@
 """ARGUS core: the paper's contribution as a composable JAX-side library.
 
 Layers (DESIGN.md §3):
-  layout    — CuTe-style layout algebra (shapes/strides, nesting, division)
-  tags      — symbolic tags + quasi-affine expression engine (⊥ < t < ⊤)
-  dsl       — the tile IR: grids, loads/stores, compute ops, tag assertions
-  analysis  — flow-sensitive, path-insensitive tag propagation
-  solver    — decision layer with concrete counterexamples
-  invariants— per-kernel-family templates (GEMM / flash attention / MoE)
-  kernelspec— TPU structural checks (alignment, VMEM fit, masking)
-  harness   — the agentic optimization loop (knowledge base, planner,
-              selector, lowering, validator, ICRL)
+  layout       — CuTe-style layout algebra (shapes/strides, nesting, division)
+  tags         — symbolic tags + quasi-affine expression engine (⊥ < t < ⊤)
+  dsl          — the tile IR: grids, loads/stores, compute ops, tag assertions
+  analysis     — flow-sensitive, path-insensitive tag propagation
+  solver       — decision layer with concrete counterexamples
+  families     — the kernel-family registry: per-family invariant
+                 templates, cost hooks, skills, fault menus (one
+                 self-registering module per family; invariants.py is the
+                 legacy re-export shim)
+  verify_engine— staged verification (structural → tags → solver) with a
+                 normalized-constraint memo cache + structured Feedback
+  kernelspec   — TPU structural checks (alignment, VMEM fit, masking)
+  costs        — v5e cost-model constants and shared helpers
+  harness      — the agentic optimization loop (knowledge base, planner,
+                 selector, lowering, validator, ICRL)
 """
 from .analysis import CheckReport, check
 from .dsl import TileProgram
+from .families import (KernelFamily, all_families, family_names,
+                       get_family)
 from .invariants import (FlashAttentionConfig, FlashAttentionProblem,
                          GemmConfig, GemmProblem, MoEConfig, MoEProblem,
                          SSDConfig, SSDProblem,
@@ -23,9 +31,12 @@ from .invariants import (FlashAttentionConfig, FlashAttentionProblem,
 from .kernelspec import VerifyResult
 from .solver import ProofResult, Status
 from .tags import BOT, TOP, Expr, Var, app, make_tag
+from .verify_engine import Feedback, VerificationEngine
 
 __all__ = [
     "CheckReport", "check", "TileProgram",
+    "KernelFamily", "get_family", "family_names", "all_families",
+    "VerificationEngine", "Feedback",
     "GemmConfig", "GemmProblem", "FlashAttentionConfig",
     "FlashAttentionProblem", "MoEConfig", "MoEProblem",
     "build_gemm_program", "build_flash_attention_program",

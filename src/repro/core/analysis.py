@@ -10,8 +10,18 @@ This is the paper's §5 compiler analysis, adapted to the TPU tile IR of
   their stores across iterations — a carried tag that depends on the carried
   axis collapses to ⊤ unless the buffer is reset each step (paper §5's
   shared-memory segment reuse);
-* assertions are discharged by :mod:`repro.core.solver`, yielding concrete
-  counterexamples on violation.
+* assertions are discharged through a pluggable :class:`Discharger` (by
+  default straight into :mod:`repro.core.solver`), yielding concrete
+  counterexamples on violation.  The staged engine in
+  :mod:`repro.core.verify_engine` substitutes a caching discharger that
+  memoizes verdicts on the canonical normal form of each assertion's
+  difference expressions — re-verifying a mutated config then only
+  re-proves the assertions whose tag expressions actually changed.
+
+Variable naming is deterministic *per analyzer run* (an instance counter,
+not a process-global one): analyzing the same program twice produces
+syntactically identical constraint expressions, which is what makes the
+normal-form memoization sound and effective.
 
 Zero runtime overhead: everything here happens before any compilation of the
 actual kernel; tags never materialize at runtime.
@@ -74,20 +84,41 @@ class CheckReport:
         return "\n".join(lines)
 
 
-_CTR = itertools.count()
+class Discharger:
+    """Proof-obligation sink.  The default implementation forwards every
+    obligation straight to the solver; :mod:`repro.core.verify_engine`
+    substitutes a caching one."""
 
+    def tags_equal(self, lhs: TagValue, rhs: TagValue, *,
+                   program_point: str = "") -> ProofResult:
+        return prove_tags_equal(lhs, rhs, program_point=program_point)
 
-def _fresh_locals(shape: Sequence[int], tag_name: str) -> Tuple[Var, ...]:
-    n = next(_CTR)
-    return tuple(Var(f"l{n}_{tag_name}_{d}", int(s))
-                 for d, s in enumerate(shape))
+    def tags_distinct(self, lhs: TagValue, rhs: TagValue, *,
+                      program_point: str = "") -> ProofResult:
+        return prove_tags_distinct(lhs, rhs, program_point=program_point)
+
+    def zero(self, diffs: Sequence[Expr], *,
+             program_point: str = "") -> ProofResult:
+        return prove_zero(diffs, program_point=program_point)
+
+    def injective(self, expr: Expr, over: Sequence[Var], *,
+                  program_point: str = "") -> ProofResult:
+        return prove_injective(expr, over, program_point=program_point)
+
+    def check_block(self, kind: str, key: tuple, thunk) -> ProofResult:
+        """Write-set obligations (disjointness / coverage).  ``key`` is a
+        hashable canonical description of everything the verdict depends
+        on; the default discharger ignores it and just runs the check."""
+        return thunk()
 
 
 class Analyzer:
     """One-pass abstract interpreter over a :class:`dsl.TileProgram`."""
 
-    def __init__(self, prog: dsl.TileProgram):
+    def __init__(self, prog: dsl.TileProgram,
+                 discharger: Optional[Discharger] = None):
         self.prog = prog
+        self.solve = discharger or Discharger()
         self.state: Dict[str, TileState] = {}
         self.scratch: Dict[str, bool] = {}       # tile name -> reset-per-step?
         self.writes: Dict[str, List[WriteDesc]] = {}
@@ -95,8 +126,17 @@ class Analyzer:
         self._arb_axes = {prog.grid_var(a.name) for a in prog.grid
                           if a.semantics == "arbitrary"}
         self._axis_var = {a.name: prog.grid_var(a.name) for a in prog.grid}
+        # deterministic per-run naming: same program -> same constraint
+        # expressions (the cache-key property; see module docstring)
+        self._ctr = itertools.count()
 
     # -- helpers -------------------------------------------------------------
+    def _fresh_locals(self, shape: Sequence[int],
+                      tag_name: str) -> Tuple[Var, ...]:
+        n = next(self._ctr)
+        return tuple(Var(f"l{n}_{tag_name}_{d}", int(s))
+                     for d, s in enumerate(shape))
+
     def _default_tag(self, decl: dsl.TensorDecl,
                      coords: Sequence[Expr]) -> TagValue:
         if decl.tag_fn is not None:
@@ -125,10 +165,13 @@ class Analyzer:
 
     def _retag_state(self, tile: dsl.TileVal, retag, fallback: TagValue
                      ) -> TileState:
-        lv = _fresh_locals(tile.shape, tile.name)
+        lv = self._fresh_locals(tile.shape, tile.name)
         if retag is not None:
             return TileState(lv, retag(*lv))
         return TileState(lv, fallback)
+
+    def _grid_sig(self) -> tuple:
+        return tuple((a.name, a.extent, a.semantics) for a in self.prog.grid)
 
     # -- interpretation ----------------------------------------------------------
     def run(self) -> CheckReport:
@@ -141,7 +184,7 @@ class Analyzer:
 
     def _op_Load(self, op: dsl.Load) -> None:
         decl = self.prog.tensors[op.src]
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         # unit-extent block dims contribute a constant 0 local coordinate —
         # keeps proofs symbolic instead of enumerating extent-1 vars.
         coords = tuple(
@@ -152,7 +195,7 @@ class Analyzer:
 
     def _op_Squeeze(self, op: dsl.Squeeze) -> None:
         src_st = self._tile_state(op.src)
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         sub: Dict[Var, object] = {}
         it = iter(lv)
         for d, s in enumerate(op.src.shape):
@@ -173,7 +216,7 @@ class Analyzer:
             WriteDesc(op.origin, shape, st.tag, op.label))
 
     def _op_AllocScratch(self, op: dsl.AllocScratch) -> None:
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         self.state[op.dst.name] = TileState(
             lv, BOT if op.zero_init else TOP)
         self.scratch[op.dst.name] = False
@@ -185,7 +228,7 @@ class Analyzer:
 
     def _op_Elementwise(self, op: dsl.Elementwise) -> None:
         from .tags import merge
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         is_scratch_update = op.dst.name in self.scratch
         if op.retag is not None:
             tag: TagValue = op.retag(*lv)
@@ -207,7 +250,6 @@ class Analyzer:
     def _op_Matmul(self, op: dsl.Matmul) -> None:
         # contraction-pairing correctness is asserted explicitly via
         # AssertConform; here we only produce the result tag.
-        fallback: TagValue = TOP if op.retag is None else None  # type: ignore
         st = self._retag_state(op.dst, op.retag, TOP)
         tag = st.tag
         if op.accumulate and op.dst.name in self.state:
@@ -222,7 +264,7 @@ class Analyzer:
 
     def _op_Reduce(self, op: dsl.Reduce) -> None:
         src_st = self._tile_state(op.src)
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         if op.retag is not None:
             self.state[op.dst.name] = TileState(lv, op.retag(*lv))
             return
@@ -241,7 +283,7 @@ class Analyzer:
 
     def _op_Transpose(self, op: dsl.Transpose) -> None:
         src_st = self._tile_state(op.src)
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         # dst[l] = src[l permuted back]: dst local d corresponds to src dim
         # perm[d], so substitute src var perm[d] -> lv[d].
         sub = {src_st.local_vars[p]: lv[d] for d, p in enumerate(op.perm)}
@@ -249,7 +291,7 @@ class Analyzer:
 
     def _op_GatherRows(self, op: dsl.GatherRows) -> None:
         decl = self.prog.tensors[op.src]
-        lv = _fresh_locals(op.dst.shape, op.dst.name)
+        lv = self._fresh_locals(op.dst.shape, op.dst.name)
         if op.retag is not None:
             self.state[op.dst.name] = TileState(lv, op.retag(*lv))
             return
@@ -264,18 +306,20 @@ class Analyzer:
         if op.conform_component is not None:
             # dispatch/combine identity: the element's routed-row tag must
             # equal the row it is scattered back to.
-            if st.tag is TOP or st.tag is BOT:
-                res = prove_tags_equal(st.tag, st.tag,
-                                       program_point=op.label) \
-                    if st.tag is BOT else ProofResult(
-                        Status.VIOLATED,
-                        Counterexample({}, TOP, None,
-                                       detail="⊤ reached combine scatter",
-                                       program_point=op.label))
+            if st.tag is TOP:
+                res = ProofResult(
+                    Status.VIOLATED,
+                    Counterexample({}, TOP, None,
+                                   detail="⊤ reached combine scatter",
+                                   program_point=op.label))
+            elif st.tag is BOT:
+                res = self.solve.tags_equal(st.tag, st.tag,
+                                            program_point=op.label)
             else:
                 lhs = (st.tag[op.conform_component],)
                 rhs = (op.row_expr(st.local_vars[0]),)
-                res = prove_tags_equal(lhs, rhs, program_point=op.label)
+                res = self.solve.tags_equal(lhs, rhs,
+                                            program_point=op.label)
             self.report.results.append((op.label, res))
         # record the write (non-affine rows: coverage/disjointness of the
         # scatter is a runtime precondition of the routing tables, validated
@@ -291,7 +335,7 @@ class Analyzer:
 
     def _op_AssertNonConform(self, op: dsl.AssertNonConform) -> None:
         ta, tb = self._paired_tags(op.a, op.b, op.bind)
-        res = prove_tags_distinct(ta, tb, program_point=op.label)
+        res = self.solve.tags_distinct(ta, tb, program_point=op.label)
         self.report.results.append((op.label, res))
 
     def _paired_tags(self, a: dsl.TileVal, b: dsl.TileVal,
@@ -305,7 +349,7 @@ class Analyzer:
                 raise ValueError(
                     f"bound dims disagree: {a.name}[{da}]={ea} vs "
                     f"{b.name}[{db}]={eb}")
-            shared = Var(f"k{next(_CTR)}", ea)
+            shared = Var(f"k{next(self._ctr)}", ea)
             env_a[sa.local_vars[da]] = shared
             env_b[sb.local_vars[db]] = shared
         ta = tag_subs(sa.tag, env_a)
@@ -319,7 +363,7 @@ class Analyzer:
             ca, cb = components
             ta = tuple(ta[i] for i in ca)
             tb = tuple(tb[i] for i in cb)
-        return prove_tags_equal(ta, tb, program_point="conform")
+        return self.solve.tags_equal(ta, tb, program_point="conform")
 
     def _op_AssertStable(self, op: dsl.AssertStable) -> None:
         st = self._tile_state(op.tile)
@@ -339,7 +383,7 @@ class Analyzer:
         g2 = Var(f"{g.name}__alt", g.extent)
         diffs = [e - e.subs({g: g2}) for e in st.tag]
         self.report.results.append(
-            (label, prove_zero(diffs, program_point=label)))
+            (label, self.solve.zero(diffs, program_point=label)))
 
     def _op_AssertDisjointWrites(self, op: dsl.AssertDisjointWrites) -> None:
         """Origin-lattice disjointness: enumerate the requested (parallel)
@@ -349,14 +393,22 @@ class Analyzer:
         a store that moves along a reduction axis clobbers partial data)."""
         label = op.label
         writes = self.writes.get(op.tensor, [])
-        if not writes:
-            self.report.results.append((label, ProofResult(
-                Status.VIOLATED,
-                Counterexample({}, None, None, detail="no writes recorded",
-                               program_point=label))))
-            return
+        decl = self.prog.tensors[op.tensor]
         axes = op.axes or tuple(a.name for a in self.prog.grid
                                 if a.semantics == "parallel")
+        key = ("disjoint", tuple(decl.shape), axes, self._grid_sig(),
+               tuple((w.origin, tuple(w.shape)) for w in writes))
+        res = self.solve.check_block(
+            "disjoint", key,
+            lambda: self._disjoint_verdict(writes, decl, axes, label))
+        self.report.results.append((label, res))
+
+    def _disjoint_verdict(self, writes, decl, axes, label) -> ProofResult:
+        if not writes:
+            return ProofResult(
+                Status.VIOLATED,
+                Counterexample({}, None, None, detail="no writes recorded",
+                               program_point=label))
         used: set = set()
         for w in writes:
             for o in w.origin:
@@ -366,30 +418,25 @@ class Analyzer:
         for a in axes:
             v = self._axis_var[a]
             if v.extent > 1 and v not in used:
-                self.report.results.append((label, ProofResult(
+                return ProofResult(
                     Status.VIOLATED,
                     Counterexample({v: 0}, None, None,
                                    detail=f"parallel axis {a} does not "
                                           f"distinguish the write origin",
-                                   program_point=label))))
-                return
+                                   program_point=label))
         over = [self._axis_var[a] for a in axes
                 if self._axis_var[a] in used]
         others = [self._axis_var[a.name] for a in self.prog.grid
                   if a.name not in axes]
         # symbolic fast path (partition ⇒ disjoint) when the distinguishing
         # axes cover every var the origins mention
-        decl = self.prog.tensors[op.tensor]
         if (len(writes) == 1 and used <= set(over)
                 and _symbolic_partition(writes[0], decl.shape)):
-            self.report.results.append((label, ProofResult(
-                Status.PROVEN, note="mixed-radix lattice")))
-            return
+            return ProofResult(Status.PROVEN, note="mixed-radix lattice")
         total = prod(v.extent for v in over) if over else 1
         if total > 200_000:
-            self.report.results.append((label, ProofResult(
-                Status.UNKNOWN, note=f"axis domain too large ({total})")))
-            return
+            return ProofResult(
+                Status.UNKNOWN, note=f"axis domain too large ({total})")
         # (c) constancy along non-enumerated axes
         for w in writes:
             for g in others:
@@ -404,13 +451,12 @@ class Analyzer:
                 except KeyError:
                     o0, o1 = None, ()
                 if o0 != o1:
-                    self.report.results.append((label, ProofResult(
+                    return ProofResult(
                         Status.VIOLATED,
                         Counterexample(env1, o1, o0,
                                        detail=f"store origin varies along "
                                               f"sequential axis {g.name}",
-                                       program_point=w.label))))
-                    return
+                                       program_point=w.label))
         seen: Dict[tuple, tuple] = {}
         base_others = {v: 0 for v in others}
         for point in itertools.product(*[range(v.extent) for v in over]):
@@ -420,50 +466,53 @@ class Analyzer:
                 org = tuple(o.evaluate(env) for o in w.origin)
                 for o, b in zip(org, w.shape):
                     if o % b != 0:
-                        self.report.results.append((label, ProofResult(
+                        return ProofResult(
                             Status.VIOLATED,
                             Counterexample(env, org, None,
                                            detail="origin not aligned to "
                                                   "block lattice",
-                                           program_point=w.label))))
-                        return
+                                           program_point=w.label))
                 key = org
                 if key in seen and seen[key] != (wi,) + point:
-                    self.report.results.append((label, ProofResult(
+                    return ProofResult(
                         Status.VIOLATED,
                         Counterexample(env, key, seen[key],
                                        detail="two parallel steps write the "
                                               "same block",
-                                       program_point=w.label))))
-                    return
+                                       program_point=w.label))
                 seen[key] = (wi,) + point
-        self.report.results.append((label, ProofResult(
-            Status.PROVEN, note=f"{len(seen)} distinct block origins")))
+        return ProofResult(
+            Status.PROVEN, note=f"{len(seen)} distinct block origins")
 
     def _op_AssertInjective(self, op: dsl.AssertInjective) -> None:
         over = [self._axis_var[a] for a in op.axes]
         self.report.results.append(
-            (op.label, prove_injective(op.expr, over,
-                                       program_point=op.label)))
+            (op.label, self.solve.injective(op.expr, over,
+                                            program_point=op.label)))
 
     def _op_AssertCoverage(self, op: dsl.AssertCoverage) -> None:
         label = op.label
         decl = self.prog.tensors[op.tensor]
         writes = self.writes.get(op.tensor, [])
+        key = ("coverage", tuple(decl.shape), self._grid_sig(),
+               tuple((w.origin, tuple(w.shape)) for w in writes))
+        res = self.solve.check_block(
+            "coverage", key,
+            lambda: self._coverage_verdict(writes, decl, label))
+        self.report.results.append((label, res))
+
+    def _coverage_verdict(self, writes, decl, label) -> ProofResult:
         if not writes:
-            self.report.results.append((label, ProofResult(
+            return ProofResult(
                 Status.VIOLATED,
                 Counterexample({}, None, None, detail="no writes recorded",
-                               program_point=label))))
-            return
+                               program_point=label))
         # symbolic fast path: a single affine write site whose origins form
         # a contiguous mixed-radix lattice is a proven partition at any
         # grid size (tiny tiles × huge grids exceed any enumeration cap)
         if len(writes) == 1 and _symbolic_partition(writes[0],
                                                     decl.shape):
-            self.report.results.append((label, ProofResult(
-                Status.PROVEN, note="mixed-radix lattice")))
-            return
+            return ProofResult(Status.PROVEN, note="mixed-radix lattice")
         # enumerate only grid vars the origins actually mention — reduction
         # axes with origin-constant stores would otherwise explode the box
         used: set = set()
@@ -474,16 +523,13 @@ class Analyzer:
                  if self._axis_var[a.name] in used]
         total = prod(v.extent for v in gvars) if gvars else 1
         if total > 200_000:
-            self.report.results.append((label, ProofResult(
-                Status.UNKNOWN, note=f"grid too large to enumerate ({total})")))
-            return
+            return ProofResult(
+                Status.UNKNOWN, note=f"grid too large to enumerate ({total})")
         seen = set()
         shape0 = writes[0].shape
         for w in writes:
             if tuple(w.shape) != tuple(shape0):
-                self.report.results.append((label, ProofResult(
-                    Status.UNKNOWN, note="mixed block shapes")))
-                return
+                return ProofResult(Status.UNKNOWN, note="mixed block shapes")
         for point in itertools.product(*[range(v.extent) for v in gvars]):
             env = dict(zip(gvars, point))
             for w in writes:
@@ -494,24 +540,21 @@ class Analyzer:
         missing = expected - seen
         if missing:
             miss = sorted(missing)[0]
-            self.report.results.append((label, ProofResult(
+            return ProofResult(
                 Status.VIOLATED,
                 Counterexample({}, sorted(seen)[:4], miss,
                                detail=f"{len(missing)} uncovered block(s), "
                                       f"first at origin {miss}",
-                               program_point=label))))
-            return
+                               program_point=label))
         extra = seen - expected
         if extra:
-            self.report.results.append((label, ProofResult(
+            return ProofResult(
                 Status.VIOLATED,
                 Counterexample({}, sorted(extra)[0], None,
                                detail="write outside block lattice",
-                               program_point=label))))
-            return
-        self.report.results.append(
-            (label, ProofResult(Status.PROVEN,
-                                note=f"{len(expected)} blocks covered")))
+                               program_point=label))
+        return ProofResult(Status.PROVEN,
+                           note=f"{len(expected)} blocks covered")
 
 
 def _symbolic_partition(write: "WriteDesc", decl_shape: Sequence[int]
@@ -562,7 +605,9 @@ def _row_major_strides(shape: Sequence[int]) -> Tuple[int, ...]:
     return tuple(reversed(out))
 
 
-def check(prog: dsl.TileProgram) -> CheckReport:
+def check(prog: dsl.TileProgram,
+          discharger: Optional[Discharger] = None) -> CheckReport:
     """Validate every assertion in ``prog``; the entry point used by kernel
-    specs, tests and the agentic validator."""
-    return Analyzer(prog).run()
+    specs, tests and the agentic validator.  ``discharger`` intercepts the
+    proof obligations (see :class:`Discharger`)."""
+    return Analyzer(prog, discharger=discharger).run()

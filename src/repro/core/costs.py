@@ -1,0 +1,58 @@
+"""Analytic v5e cost-model primitives — shared by every kernel family.
+
+On this CPU-only host there is no TPU wall-clock; the harness' "runtime
+profile" is napkin math: ``time = max(compute term, HBM term)``.  The
+family-specific estimators live with their families in
+:mod:`repro.core.families`; this module holds the hardware model constants
+and the shared utilization/occupancy helpers, so family modules depend only
+on :mod:`repro.core` (no harness import cycle).
+
+All constants are model parameters (documented, deterministic), not
+measurements — they give the planner a landscape with real trade-offs and
+the same extremal structure as the hardware.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .kernelspec import LANE, SUBLANE, cdiv
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+N_CORES = 1            # per-chip modeling; distribution handled upstream
+STAGGER_DERATE = 0.75  # unstaggered streaming keeps ~75% of HBM bw
+OCCUPANCY_GRID = 512   # grid steps needed to hide pipeline latency
+
+
+def mxu_util(bm: int, bn: int, bk: int, dtype: str) -> float:
+    """Fraction of MXU issue slots doing useful work for one tile matmul."""
+    pad = lambda x, q: x / (cdiv(x, q) * q)
+    util = pad(bm, 8) * pad(bn, LANE) * pad(bk, LANE)
+    sub = SUBLANE.get(dtype, 8)
+    if bm % sub:
+        util *= 0.7          # relayout copies on the sublane dim
+    return max(util, 0.05)
+
+
+def occupancy(grid_steps: int) -> float:
+    return min(1.0, grid_steps / OCCUPANCY_GRID) * 0.2 + 0.8 \
+        if grid_steps < OCCUPANCY_GRID else 1.0
+
+
+@dataclass
+class CostEstimate:
+    compute_s: float
+    memory_s: float
+    flops: float
+    hbm_bytes: float
+
+    @property
+    def time_s(self) -> float:
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+    def tflops(self) -> float:
+        return self.flops / self.time_s / 1e12 if self.time_s else 0.0

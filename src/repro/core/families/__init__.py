@@ -1,0 +1,24 @@
+"""Kernel-family registry: one module per family, self-registering.
+
+``from repro.core.families import get_family`` is the single dispatch
+point replacing the old hardcoded ``if family == "gemm": ...`` chains in
+the validator, planner, lowering agent, cost model, benchmarks and
+examples.  See docs/families.md for how to add a family.
+"""
+from .base import (GENERIC_SKILLS, KernelFamily, Skill, all_families,
+                   family_for_config, family_names, generic_skill,
+                   get_family, register)
+
+# importing a family module registers it (order fixes registry iteration
+# order, which benchmarks/examples rely on for stable output)
+from . import gemm              # noqa: E402,F401
+from . import flash_attention   # noqa: E402,F401
+from . import flash_decode      # noqa: E402,F401
+from . import moe               # noqa: E402,F401
+from . import ssd               # noqa: E402,F401
+
+__all__ = [
+    "KernelFamily", "Skill", "GENERIC_SKILLS", "generic_skill",
+    "register", "get_family", "family_names", "all_families",
+    "family_for_config",
+]

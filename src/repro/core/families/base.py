@@ -1,0 +1,177 @@
+"""Kernel-family registry — the uniform per-family interface.
+
+Every kernel family (GEMM, flash attention, flash decode, fused MoE, SSD)
+registers one :class:`KernelFamily` describing everything the rest of the
+system needs to drive it:
+
+* ``config_cls`` / ``problem_cls`` — the harness' action space and the
+  operand shapes/semantics;
+* ``build_program`` — the ARGUS tile program instantiating the family's tag
+  functions + tag assertions for a (config, problem);
+* ``structural`` — TPU structural obligations (alignment / VMEM / masking,
+  :mod:`repro.core.kernelspec`);
+* ``cost`` — the analytic v5e estimate (:mod:`repro.core.costs`);
+* ``skills`` — the knowledge-base entries (config rewrites + the invariant
+  templates that must hold after each, paper §6);
+* ``injectable_bugs`` / ``compatible_bugs`` — the fault model's latent-bug
+  menu (every entry must be caught by the family's invariants);
+* ``reference_check`` — interpret-mode execution against the jnp oracle;
+* ``lower`` — the validated Pallas entry point (resolved lazily so family
+  modules never import :mod:`repro.kernels` at module scope);
+* ``example`` — the family's production tuning problem (examples/benches).
+
+Adding a sixth family is one module that builds a :class:`KernelFamily`
+and calls :func:`register` — no edits to the validator, planner, lowering
+agent, cost model, benchmarks, or examples (see docs/families.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..kernelspec import VerifyResult, verify_program
+
+# ---------------------------------------------------------------------------
+# Skills (knowledge-base entries, paper §6 / Table 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Skill:
+    """One knowledge-base entry: the transformation (a concrete config
+    rewrite in the family config space), the data-flow invariants that must
+    hold afterwards, its Table-1 tier, and a context enumerator
+    ``contexts(cfg, prob) -> [(context_label, new_cfg), ...]``."""
+
+    name: str
+    tier: str                      # "global" | "local" | "isa"  (Table 1)
+    families: Tuple[str, ...]
+    description: str
+    invariants: str                # which invariant templates guard it
+    contexts: Callable
+
+
+# Shared metadata for skills that appear in several families (one source of
+# truth for Table 1; each family binds its own context enumerator).
+GENERIC_SKILLS: Dict[str, Tuple[str, str, str]] = {
+    "retile": (
+        "global",
+        "Change VMEM block shapes: trades operand re-streaming (HBM "
+        "revisits) against VMEM footprint and MXU grain.",
+        "MXU pairing + coverage + accumulator stability re-proven per "
+        "retile"),
+    "software_pipelining": (
+        "global",
+        "HBM->VMEM double buffering across grid steps (always on via "
+        "the Pallas pipeline; block shapes set the stage depth).",
+        "carried-scratch stability across 'arbitrary' axes"),
+    "vectorized_io": (
+        "local",
+        "Keep last-dim blocks 128-lane aligned so copies vectorize "
+        "(structural alignment check enforces).",
+        "alignment structural invariant"),
+    "f32_vmem_accumulate": (
+        "isa",
+        "Accumulate in f32 VMEM scratch (the AGPR-pool analogue).",
+        "accumulator ⊤-freedom + init-at-first-step"),
+    "oob_guarded_loads": (
+        "isa",
+        "Zero-padded block loads with masked tails (buffer_load OOB "
+        "guard analogue).",
+        "masking obligation for non-divisible dims"),
+}
+
+
+def _no_contexts(cfg, prob):
+    return []
+
+
+def generic_skill(name: str, family: str,
+                  contexts: Optional[Callable] = None) -> Skill:
+    """Instantiate one of the shared skills for a single family."""
+    tier, desc, inv = GENERIC_SKILLS[name]
+    return Skill(name, tier, (family,), desc, inv,
+                 contexts or _no_contexts)
+
+
+# ---------------------------------------------------------------------------
+# The family protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelFamily:
+    """Uniform per-family interface (see module docstring)."""
+
+    name: str
+    config_cls: type
+    problem_cls: type
+    # (cfg, prob, *, inject_bug=None) -> dsl.TileProgram
+    build_program: Callable
+    # (cfg, prob) -> List[StructuralIssue]
+    structural: Callable
+    # (cfg, prob) -> costs.CostEstimate
+    cost: Callable
+    skills: Tuple[Skill, ...] = ()
+    injectable_bugs: Tuple[str, ...] = ()
+    # (cfg, prob) -> List[str]; defaults to the full injectable menu
+    compatible_bugs: Optional[Callable] = None
+    # (cfg, prob) -> bool — interpret-mode run against the jnp oracle
+    reference_check: Optional[Callable] = None
+    # () -> module with the family's validated public entry points
+    lower: Optional[Callable] = None
+    # () -> (cfg, prob): the family's production tuning problem
+    example: Optional[Callable] = None
+
+    def verify(self, cfg, prob, *, inject_bug: Optional[str] = None
+               ) -> VerifyResult:
+        """Build + analyze + structural checks in one (uncached) call —
+        the legacy ``verify_<family>`` entry point.  The staged, caching
+        path is :class:`repro.core.verify_engine.VerificationEngine`."""
+        prog = self.build_program(cfg, prob, inject_bug=inject_bug)
+        return verify_program(prog, self.structural(cfg, prob))
+
+    def bugs_for(self, cfg, prob) -> List[str]:
+        if self.compatible_bugs is not None:
+            return list(self.compatible_bugs(cfg, prob))
+        return list(self.injectable_bugs)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, KernelFamily] = {}
+
+
+def register(family: KernelFamily) -> KernelFamily:
+    if family.name in _REGISTRY:
+        raise ValueError(f"kernel family {family.name!r} already registered")
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> KernelFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel family {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def family_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def all_families() -> Tuple[KernelFamily, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def family_for_config(cfg) -> KernelFamily:
+    """Resolve a family from a config instance (replaces isinstance
+    dispatch chains)."""
+    for fam in _REGISTRY.values():
+        if isinstance(cfg, fam.config_cls):
+            return fam
+    raise KeyError(f"no registered family for config {type(cfg).__name__}")

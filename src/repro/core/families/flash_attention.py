@@ -1,0 +1,304 @@
+"""Flash-attention kernel family (GQA, causal, online softmax).
+
+O = softmax(QKᵀ)·V — the paper's Figure-1 program on TPU tiles.  Tag
+functions fold the GQA head-group mapping; invariants cover QKᵀ/PV pairing
+conformity, retag honesty (declared score coordinates match the operands'
+actual positions), online-softmax running-stat stability across the KV
+axis, and disjoint/covering output writes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from .. import dsl
+from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
+from ..kernelspec import (DTYPE_BYTES, LANE, StructuralIssue, cdiv,
+                          check_alignment, check_masking, check_vmem)
+from ..tags import make_tag
+from .base import KernelFamily, Skill, generic_skill, register
+
+
+@dataclass(frozen=True)
+class FlashAttentionProblem:
+    batch: int
+    q_heads: int
+    kv_heads: int
+    seq_q: int
+    seq_kv: int
+    head_dim: int
+    causal: bool = True
+    dtype: str = "bf16"
+
+    @property
+    def group(self) -> int:
+        return self.q_heads // self.kv_heads
+
+
+@dataclass(frozen=True)
+class FlashAttentionConfig:
+    block_q: int = 256
+    block_kv: int = 128
+    v_transposed_staging: bool = False   # paper's TransV analogue
+    causal_block_skip: bool = True       # skip fully-masked kv blocks
+    applies_mask: bool = True            # in-kernel causal mask present
+
+    def name(self) -> str:
+        s = f"fa[{self.block_q}x{self.block_kv}]"
+        if self.v_transposed_staging:
+            s += "+transv"
+        if self.causal_block_skip:
+            s += "+skip"
+        return s
+
+
+def build_flash_attention_program(cfg: FlashAttentionConfig,
+                                  prob: FlashAttentionProblem,
+                                  *, inject_bug: Optional[str] = None
+                                  ) -> dsl.TileProgram:
+    """O = softmax(QKᵀ)·V — the paper's Figure-1 program on TPU tiles.
+
+    Tag functions (paper §4, adapted):
+      T_Q(r, c) = (batch, kv_group_of_head, q_pos, c)
+      T_K(r, c) = (batch, kv_head,          kv_pos, c)
+      T_V(r, c) = (batch, kv_head,          kv_pos, c)
+    Injectable bugs: "wrong_kv_head" (load K with the raw q-head index),
+    "missing_transpose" (staged-transposed V consumed untransposed),
+    "m_depends_kv" (running max tagged with the kv step),
+    "q_block_offset" (off-by-one-block Q origin).
+    """
+    p = dsl.TileProgram(cfg.name())
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    SQ, SKV, D = prob.seq_q, prob.seq_kv, prob.head_dim
+    G = prob.group
+    bq, bkv = cfg.block_q, cfg.block_kv
+
+    bh = p.add_grid("bh", B * H, "parallel")
+    qi = p.add_grid("qi", cdiv(SQ, bq), "parallel")
+    kv = p.add_grid("kv", cdiv(SKV, bkv), "arbitrary")
+
+    # logical rank-4 operands; tag functions per the paper (T_Q folds the
+    # GQA head-group mapping, like the paper's h_q/gqa component):
+    def tag_q(b_, h_, r, c):
+        return make_tag(b_, h_ // G, r, c)
+
+    p.tensor("Q", (B, H, SQ, D), prob.dtype, tag_fn=tag_q)
+    p.tensor("K", (B, HK, SKV, D), prob.dtype)   # identity tags
+    p.tensor("V", (B, HK, SKV, D), prob.dtype)
+    p.tensor("O", (B, H, SQ, D), prob.dtype, kind="output")
+
+    b = bh // H
+    h = bh % H
+    hk = (bh % H) // G if inject_bug != "wrong_kv_head" else (bh % H)
+    if inject_bug == "wrong_kv_head" and H == HK:
+        raise ValueError("wrong_kv_head bug requires GQA (H != HK)")
+
+    q_pos = (qi + (1 if inject_bug == "q_block_offset" else 0)) * bq
+
+    q = p.squeeze(p.load("Q", (b, h, q_pos, 0), (1, 1, bq, D)))
+    k = p.squeeze(p.load("K", (b, hk, kv * bkv, 0), (1, 1, bkv, D)))
+
+    # S = Q Kᵀ : contraction over the head dim (bind Q.1 with K.1 — Kᵀ),
+    # conformity on (batch, kv-head-group, head-dim coordinate).
+    p.assert_conform(q, k, bind=((1, 1),), components=((0, 1, 3), (0, 1, 3)))
+    s_tag = lambda li, lj: make_tag(b, hk, qi * bq + li, kv * bkv + lj)
+    s = p.matmul(q, p.transpose(k), retag=s_tag)
+    # retag honesty: the declared S coordinates must match the operands'
+    # actual positions (catches off-by-one-block origins)
+    p.assert_conform(q, s, bind=((0, 0),), components=((2,), (2,)))
+    p.assert_conform(k, s, bind=((0, 1),), components=((2,), (3,)))
+
+    if prob.causal and cfg.applies_mask:
+        s = p.elementwise("causal_mask", s, retag=s_tag)
+
+    # online softmax running stats (carried scratch)
+    m_tag = ((lambda li: make_tag(b, hk, qi * bq + li, kv))
+             if inject_bug == "m_depends_kv"
+             else (lambda li: make_tag(b, hk, qi * bq + li)))
+    m_new = p.reduce(s, axis=1, kind="max", retag=m_tag)
+    m_acc = p.alloc((bq,), "f32")
+    p.update(m_acc, m_new, fn="max", retag=m_tag)
+    p.assert_stable(m_acc, "kv")
+
+    pt = p.elementwise("exp_sub_m", s, retag=s_tag)
+    l_new = p.reduce(pt, axis=1, kind="sum",
+                     retag=lambda li: make_tag(b, hk, qi * bq + li))
+    l_acc = p.alloc((bq,), "f32")
+    p.update(l_acc, l_new, fn="rescale_add",
+             retag=lambda li: make_tag(b, hk, qi * bq + li))
+    p.assert_stable(l_acc, "kv")
+
+    v = p.squeeze(p.load("V", (b, hk, kv * bkv, 0), (1, 1, bkv, D)))
+    if cfg.v_transposed_staging:
+        vt = p.transpose(v)           # staged (D, bkv), the TransV analogue
+        v_used = vt if inject_bug == "missing_transpose" else p.transpose(vt)
+        if inject_bug == "missing_transpose" and D != bkv:
+            raise ValueError("missing_transpose bug requires D == block_kv")
+    else:
+        v_used = v
+
+    # O += P·V : contraction over kv positions; conformity on
+    # (batch, kv-head, kv position).
+    p.assert_conform(pt, v_used, bind=((1, 0),),
+                     components=((0, 1, 3), (0, 1, 2)))
+    o_tag = lambda li, lc: make_tag(b, hk, qi * bq + li, lc)
+    acc_o = p.alloc((bq, D), "f32")
+    p.update(acc_o, fn="rescale", retag=o_tag)   # exp(m_old - m_new) scale
+    p.matmul(pt, v_used, accumulate=True, acc=acc_o, retag=o_tag)
+    p.assert_stable(acc_o, "kv")
+
+    p.store("O", acc_o, (b, h, qi * bq, 0))
+    p.assert_disjoint_writes("O")
+    p.assert_coverage("O")
+    return p
+
+
+def structural_flash_attention(cfg: FlashAttentionConfig,
+                               prob: FlashAttentionProblem):
+    issues = []
+    issues += check_alignment("Q", (cfg.block_q, prob.head_dim), prob.dtype)
+    issues += check_alignment("K", (cfg.block_kv, prob.head_dim), prob.dtype)
+    issues += check_vmem(
+        {"Q": ((cfg.block_q, prob.head_dim), prob.dtype),
+         "K": ((cfg.block_kv, prob.head_dim), prob.dtype),
+         "V": ((cfg.block_kv, prob.head_dim), prob.dtype),
+         "O": ((cfg.block_q, prob.head_dim), prob.dtype)},
+        scratch={"S": ((cfg.block_q, cfg.block_kv), "f32"),
+                 "acc": ((cfg.block_q, prob.head_dim), "f32"),
+                 "stats": ((2 * cfg.block_q,), "f32")})
+    issues += check_masking("KV", (prob.seq_kv,), (cfg.block_kv,),
+                            masked_dims=(0,))
+    if prob.causal and not cfg.applies_mask:
+        issues.append(StructuralIssue(
+            "masking", "causal problem lowered without an in-kernel mask"))
+    if cfg.causal_block_skip and not prob.causal:
+        issues.append(StructuralIssue(
+            "masking", "causal block-skip enabled on a non-causal problem"))
+    return issues
+
+
+def flash_attention_cost(cfg: FlashAttentionConfig,
+                         prob: FlashAttentionProblem) -> CostEstimate:
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    SQ, SKV, D = prob.seq_q, prob.seq_kv, prob.head_dim
+    nq = cdiv(SQ, cfg.block_q)
+    causal_frac = 0.5 if (prob.causal and cfg.causal_block_skip) else 1.0
+    flops = 4.0 * B * H * SQ * SKV * D * causal_frac
+    q_bytes = B * H * SQ * D * sz
+    kv_revisits = nq * causal_frac      # K/V streamed once per q block
+    kv_bytes = 2 * B * HK * SKV * D * sz * max(kv_revisits, 1.0) * \
+        (H / HK if cfg.block_q > SQ else 1.0)
+    o_bytes = B * H * SQ * D * sz
+    util = mxu_util(cfg.block_q, cfg.block_kv, D, prob.dtype) \
+        * occupancy(B * H * nq)
+    if cfg.v_transposed_staging and D % LANE:
+        util *= 1.1          # recovered lane alignment on short heads
+    return CostEstimate(
+        compute_s=flops / (PEAK_FLOPS * util),
+        memory_s=(q_bytes + kv_bytes + o_bytes) / HBM_BW,
+        flops=flops, hbm_bytes=q_bytes + kv_bytes + o_bytes)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _block_steps(cfg: FlashAttentionConfig, prob):
+    out = []
+    for field, cur in (("block_q", cfg.block_q), ("block_kv",
+                                                  cfg.block_kv)):
+        for nxt in (cur * 2, cur // 2):
+            if 16 <= nxt <= 2048:
+                out.append((f"{field}={nxt}", replace(cfg, **{field: nxt})))
+    return out
+
+
+def _skip(cfg: FlashAttentionConfig, prob):
+    if not prob.causal:
+        return []
+    return [(f"causal_block_skip={not cfg.causal_block_skip}",
+             replace(cfg, causal_block_skip=not cfg.causal_block_skip))]
+
+
+def _transv(cfg: FlashAttentionConfig, prob):
+    return [(f"v_transposed_staging={not cfg.v_transposed_staging}",
+             replace(cfg, v_transposed_staging=not cfg.v_transposed_staging
+                     ))]
+
+
+SKILLS = (
+    generic_skill("retile", "flash_attention", _block_steps),
+    generic_skill("software_pipelining", "flash_attention"),
+    Skill("transpose_v_staging", "global", ("flash_attention",),
+          "Stage V transposed during the copy so the PV matmul reads "
+          "lane-aligned operands (paper's TransV).",
+          "PV pairing conformity through the transpose", _transv),
+    Skill("causal_block_skip", "local", ("flash_attention",),
+          "Skip fully-masked KV blocks in the causal triangle.",
+          "skipped blocks provably fully masked (structural)", _skip),
+    generic_skill("vectorized_io", "flash_attention"),
+    generic_skill("oob_guarded_loads", "flash_attention"),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("wrong_kv_head", "m_depends_kv", "q_block_offset")
+
+
+def compatible_bugs(cfg: FlashAttentionConfig, prob: FlashAttentionProblem):
+    menu = list(INJECTABLE_BUGS)
+    if prob.q_heads == prob.kv_heads:
+        menu.remove("wrong_kv_head")
+    return menu
+
+
+# -- reference execution ----------------------------------------------------
+
+def reference_check(cfg: FlashAttentionConfig,
+                    prob: FlashAttentionProblem) -> bool:
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import mha, mha_ref
+    rng = np.random.default_rng(0)
+    sq = min(2 * cfg.block_q, 256)
+    skv = min(2 * cfg.block_kv, 256)
+    d = min(prob.head_dim, 64)
+    q = jnp.asarray(rng.normal(size=(1, 2, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, skv, d)), jnp.float32)
+    o = mha(q, k, v, cfg=cfg, causal=prob.causal, interpret=True)
+    w = mha_ref(q, k, v, causal=prob.causal)
+    return bool(np.allclose(np.asarray(o), np.asarray(w),
+                            rtol=2e-3, atol=2e-3))
+
+
+def _lower():
+    from repro.kernels import flash_attention
+    return flash_attention
+
+
+def _example():
+    return (FlashAttentionConfig(block_q=8, causal_block_skip=False),
+            FlashAttentionProblem(16, 8, 1, 8192, 8192, 128, True, "bf16"))
+
+
+FAMILY = register(KernelFamily(
+    name="flash_attention",
+    config_cls=FlashAttentionConfig,
+    problem_cls=FlashAttentionProblem,
+    build_program=build_flash_attention_program,
+    structural=structural_flash_attention,
+    cost=flash_attention_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    compatible_bugs=compatible_bugs,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_flash_attention(cfg: FlashAttentionConfig,
+                           prob: FlashAttentionProblem,
+                           *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

@@ -1,0 +1,231 @@
+"""Flash-decode kernel family (split-KV serving attention) — beyond-paper
+extension of the flash-attention family (FlashDecoding-style).
+
+Each grid step (bh, s) reduces its KV span to a partial (m, l, o); the XLA
+epilogue merges partials.  Invariants: GQA head mapping, KV-range partition
+(the spans read across splits must tile the cache exactly once), and
+partial-output honesty (each split's partial carries its own KV-span tag).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .. import dsl
+from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, occupancy
+from ..kernelspec import (DTYPE_BYTES, StructuralIssue, cdiv,
+                          check_alignment, check_vmem)
+from ..tags import Expr, make_tag
+from .base import KernelFamily, generic_skill, register
+
+
+@dataclass(frozen=True)
+class FlashDecodeProblem:
+    batch: int
+    q_heads: int
+    kv_heads: int
+    seq_kv: int            # cache length
+    head_dim: int
+    dtype: str = "bf16"
+
+    @property
+    def group(self) -> int:
+        return self.q_heads // self.kv_heads
+
+
+@dataclass(frozen=True)
+class FlashDecodeConfig:
+    kv_splits: int = 8     # parallel KV partitions (occupancy for Sq=1)
+
+    def name(self) -> str:
+        return f"fdec[s={self.kv_splits}]"
+
+
+def build_flash_decode_program(cfg: FlashDecodeConfig,
+                               prob: FlashDecodeProblem,
+                               *, inject_bug: Optional[str] = None
+                               ) -> dsl.TileProgram:
+    """Split-KV decode: each grid step (bh, s) reduces its KV span to a
+    partial (m, l, o); the XLA epilogue merges partials.
+
+    Invariants: GQA head mapping (as in the prefill family), **KV-range
+    partition** — the spans read across splits must tile the cache exactly
+    once (modeled by staging each span into a read-marker tensor and
+    reusing the coverage/disjointness machinery), and partial-output
+    honesty (each split's partial carries its own KV-span tag).
+    Injectable bugs: "wrong_kv_head", "split_overlap" (half-stride spans
+    double-read the head of the cache), "partial_mislabel" (partial stored
+    at a different split index)."""
+    p = dsl.TileProgram(cfg.name())
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    S, D = prob.seq_kv, prob.head_dim
+    G = prob.group
+    ns = cfg.kv_splits
+    span = cdiv(S, ns)
+
+    bh = p.add_grid("bh", B * H, "parallel")
+    s = p.add_grid("s", ns, "parallel")
+
+    p.tensor("Q", (B, H, 1, D), prob.dtype,
+             tag_fn=lambda b, h, r, c: make_tag(b, h // G, r, c))
+    p.tensor("K", (B, HK, S, D), prob.dtype)
+    p.tensor("V", (B, HK, S, D), prob.dtype)
+    # read-marker: records which cache rows each split consumed
+    p.tensor("KV_READ", (B * H, S, D), prob.dtype, kind="output")
+    p.tensor("O_PART", (B * H, ns, D), "f32", kind="output")
+
+    b = bh // H
+    h = bh % H
+    hk = (bh % H) if inject_bug == "wrong_kv_head" else (bh % H) // G
+    if inject_bug == "wrong_kv_head" and H == HK:
+        raise ValueError("wrong_kv_head requires GQA")
+
+    k0 = s * (span // 2) if inject_bug == "split_overlap" else s * span
+
+    q = p.squeeze(p.load("Q", (b, h, 0, 0), (1, 1, 1, D)), keep=(2,))
+    k = p.squeeze(p.load("K", (b, hk, k0, 0), (1, 1, span, D)))
+    v = p.squeeze(p.load("V", (b, hk, k0, 0), (1, 1, span, D)))
+
+    # GQA pairing (components: batch, kv-group, head-dim coordinate)
+    p.assert_conform(q, k, bind=((1, 1),), components=((0, 1, 3),
+                                                       (0, 1, 3)))
+    # KV-range partition: the spans must tile the cache exactly once
+    p.store("KV_READ", k, (bh, k0, 0))
+    p.assert_disjoint_writes("KV_READ", axes=("bh", "s"))
+    p.assert_coverage("KV_READ")
+
+    st = p.matmul(q, p.transpose(k),
+                  retag=lambda i, j: make_tag(b, hk, k0 + j))
+    pt = p.elementwise("exp_sub_m", st,
+                       retag=lambda i, j: make_tag(b, hk, k0 + j))
+    p.assert_conform(pt, v, bind=((1, 0),), components=((0, 1, 2),
+                                                        (0, 1, 2)))
+    o_tag = lambda i, c: make_tag(bh, Expr.of(s), c)
+    o = p.matmul(pt, v, retag=o_tag)
+    s_out = ((s + 1) % ns) if inject_bug == "partial_mislabel" else s
+    p.store("O_PART", o, (bh, s_out, 0))
+    # store-slot honesty: a permuted slot assignment is still disjoint AND
+    # covering, so coverage alone cannot catch it — the value's split tag
+    # must equal the slot it lands in (the combine reads slot s expecting
+    # split s's statistics)
+    slot = p.elementwise("slot_id", o,
+                         retag=lambda i, c: make_tag(bh, Expr.of(s_out), c))
+    p.assert_conform(o, slot, bind=((0, 0), (1, 1)),
+                     components=((0, 1), (0, 1)))
+    p.assert_disjoint_writes("O_PART", axes=("bh", "s"))
+    p.assert_coverage("O_PART")
+    return p
+
+
+def structural_flash_decode(cfg: FlashDecodeConfig,
+                            prob: FlashDecodeProblem):
+    span = cdiv(prob.seq_kv, cfg.kv_splits)
+    issues = []
+    if span * cfg.kv_splits != prob.seq_kv:
+        issues.append(StructuralIssue(
+            "masking", f"kv_splits {cfg.kv_splits} does not tile the "
+                       f"cache ({prob.seq_kv}) — tail span must be masked"))
+    issues += check_alignment("K", (span, prob.head_dim), prob.dtype)
+    issues += check_vmem(
+        {"K": ((span, prob.head_dim), prob.dtype),
+         "V": ((span, prob.head_dim), prob.dtype)},
+        scratch={"o": ((8, prob.head_dim), "f32")})
+    return issues
+
+
+def flash_decode_cost(cfg: FlashDecodeConfig,
+                      prob: FlashDecodeProblem) -> CostEstimate:
+    """Split-KV decode: memory-bound on cache streaming; splits buy
+    occupancy (parallel grid steps) at the cost of the partial-combine
+    epilogue — the kv_splits knob the harness tunes."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    S, D = prob.seq_kv, prob.head_dim
+    ns = cfg.kv_splits
+    flops = 4.0 * B * H * S * D
+    kv_bytes = 2 * B * HK * S * D * sz
+    part_bytes = B * H * ns * (D + 2) * 4 * 2     # partials write+read
+    util = occupancy(B * H * ns) * 0.6            # Sq=1: MXU underfed
+    return CostEstimate(
+        compute_s=flops / (PEAK_FLOPS * util),
+        memory_s=(kv_bytes + part_bytes) / HBM_BW,
+        flops=flops, hbm_bytes=kv_bytes + part_bytes)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _split_steps(cfg: FlashDecodeConfig, prob: FlashDecodeProblem):
+    out = []
+    for nxt in (cfg.kv_splits * 2, cfg.kv_splits // 2):
+        if 1 <= nxt <= 64 and prob.seq_kv % nxt == 0:
+            out.append((f"kv_splits={nxt}", FlashDecodeConfig(kv_splits=nxt)))
+    return out
+
+
+SKILLS = (
+    generic_skill("retile", "flash_decode", _split_steps),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("wrong_kv_head", "split_overlap", "partial_mislabel")
+
+
+def compatible_bugs(cfg: FlashDecodeConfig, prob: FlashDecodeProblem):
+    menu = list(INJECTABLE_BUGS)
+    if prob.q_heads == prob.kv_heads:
+        menu.remove("wrong_kv_head")
+    return menu
+
+
+# -- reference execution ----------------------------------------------------
+
+def reference_check(cfg: FlashDecodeConfig,
+                    prob: FlashDecodeProblem) -> bool:
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import mha_decode, mha_ref
+    rng = np.random.default_rng(0)
+    S = min(prob.seq_kv, 512)
+    while S % cfg.kv_splits:
+        S += 1
+    d = min(prob.head_dim, 64)
+    q = jnp.asarray(rng.normal(size=(1, 2, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, S, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, S, d)), jnp.float32)
+    o = mha_decode(q, k, v, jnp.int32(S), cfg=cfg, interpret=True)
+    w = mha_ref(q, k, v, causal=False)
+    return bool(np.allclose(np.asarray(o), np.asarray(w),
+                            rtol=2e-3, atol=2e-3))
+
+
+def _lower():
+    from repro.kernels import flash_attention
+    return flash_attention
+
+
+def _example():
+    return (FlashDecodeConfig(kv_splits=8),
+            FlashDecodeProblem(32, 8, 1, 8192, 128, "bf16"))
+
+
+FAMILY = register(KernelFamily(
+    name="flash_decode",
+    config_cls=FlashDecodeConfig,
+    problem_cls=FlashDecodeProblem,
+    build_program=build_flash_decode_program,
+    structural=structural_flash_decode,
+    cost=flash_decode_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    compatible_bugs=compatible_bugs,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_flash_decode(cfg: FlashDecodeConfig, prob: FlashDecodeProblem,
+                        *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

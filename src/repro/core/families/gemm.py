@@ -1,0 +1,271 @@
+"""GEMM kernel family (paper §6): invariants, cost hooks, skills, bugs.
+
+C = A @ B on the MXU with retiling, split-K and stagger-K policies.  The
+invariant templates record what must hold after every rewrite: MXU pairing
+(contraction coordinates agree), reduction completeness (stagger-K stays a
+bijection of the K range), accumulator stability across the reduction axis,
+and disjoint/covering output writes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from .. import dsl
+from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, STAGGER_DERATE,
+                     mxu_util, occupancy)
+from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
+                          check_vmem)
+from ..tags import Expr, make_tag
+from .base import KernelFamily, Skill, generic_skill, register
+
+
+@dataclass(frozen=True)
+class GemmProblem:
+    m: int
+    n: int
+    k: int
+    dtype: str = "bf16"
+
+
+@dataclass(frozen=True)
+class GemmConfig:
+    """Tunable knobs (the harness' action space for this family)."""
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+    split_k: int = 1          # >1: partition K across parallel grid steps
+    stagger_k: bool = False   # rotate K start per (i,j) to spread HBM load
+    precision: str = "f32"    # accumulator type
+
+    def name(self) -> str:
+        s = f"gemm[{self.bm}x{self.bn}x{self.bk}]"
+        if self.split_k > 1:
+            s += f"+splitk{self.split_k}"
+        if self.stagger_k:
+            s += "+stagger"
+        return s
+
+
+def build_gemm_program(cfg: GemmConfig, prob: GemmProblem,
+                       *, inject_bug: Optional[str] = None
+                       ) -> dsl.TileProgram:
+    """C = A @ B with the family invariants.
+
+    ``inject_bug`` deliberately mis-lowers one aspect; used by tests and the
+    Table-3 benchmark to measure the analysis' bug-catching power.
+    Supported: "swap_b_index", "stagger_mismatch", "acc_depends_k",
+    "grid_short", "missing_init".
+    """
+    p = dsl.TileProgram(cfg.name())
+    mi = cdiv(prob.m, cfg.bm)
+    nj = cdiv(prob.n, cfg.bn)
+    nk_total = cdiv(prob.k, cfg.bk)
+    if cfg.split_k > 1 and nk_total % cfg.split_k != 0:
+        raise ValueError("split_k must divide the K block count")
+    nk = nk_total // cfg.split_k
+
+    if inject_bug == "grid_short":
+        mi = max(1, mi - 1)
+
+    i = p.add_grid("i", mi, "parallel")
+    j = p.add_grid("j", nj, "parallel")
+    s = p.add_grid("s", cfg.split_k, "parallel") if cfg.split_k > 1 else None
+    k = p.add_grid("k", nk, "arbitrary")
+
+    p.tensor("A", (prob.m, prob.k), prob.dtype)
+    p.tensor("B", (prob.k, prob.n), prob.dtype)
+    out_rows = prob.m * (cfg.split_k if cfg.split_k > 1 else 1)
+    p.tensor("C", (out_rows, prob.n), prob.dtype, kind="output")
+
+    k_base = (Expr.of(s) * nk + k) if s is not None else Expr.of(k)
+    if cfg.stagger_k:
+        k_idx = (k_base + i + j) % nk_total
+        if inject_bug == "stagger_mismatch":
+            k_idx_b = (k_base + i) % nk_total   # phase mismatch on B's path
+        else:
+            k_idx_b = k_idx
+    else:
+        k_idx = k_idx_b = k_base
+
+    a = p.load("A", (i * cfg.bm, k_idx * cfg.bk), (cfg.bm, cfg.bk))
+    if inject_bug == "swap_b_index":
+        b = p.load("B", (j * cfg.bk, k_idx_b * cfg.bn), (cfg.bk, cfg.bn))
+    else:
+        b = p.load("B", (k_idx_b * cfg.bk, j * cfg.bn), (cfg.bk, cfg.bn))
+
+    # invariant 1 — MXU pairing: contraction coordinates must agree
+    p.assert_contraction(a, b, components=((1,), (0,)))
+    # invariant 1b — reduction completeness: each K block consumed once
+    # (stagger-K must remain a bijection of the reduction range)
+    p.assert_injective(k_idx, ("k",) if s is None else ("k", "s"))
+
+    acc = p.alloc((cfg.bm, cfg.bn), cfg.precision,
+                  zero_init=(inject_bug != "missing_init"))
+    if inject_bug == "acc_depends_k":
+        retag = lambda li, lj: make_tag(k_idx * cfg.bk + li, j * cfg.bn + lj)
+    else:
+        retag = lambda li, lj: make_tag(i * cfg.bm + li, j * cfg.bn + lj)
+    p.matmul(a, b, accumulate=True, acc=acc, retag=retag)
+
+    # invariant 2 — accumulator consistency across the reduction axis
+    p.assert_stable(acc, "k")
+    # invariant 2b — a never-initialized accumulator is ⊤ from the start
+    p.assert_conform(acc, acc, bind=((0, 0), (1, 1)))
+
+    row0 = (s * prob.m + i * cfg.bm) if s is not None else i * cfg.bm
+    p.store("C", acc, (row0, j * cfg.bn))
+    # invariants 3/4 — no clobber across parallel steps; full coverage
+    p.assert_disjoint_writes("C")
+    p.assert_coverage("C")
+    return p
+
+
+def structural_gemm(cfg: GemmConfig, prob: GemmProblem):
+    issues = []
+    issues += check_alignment("A", (cfg.bm, cfg.bk), prob.dtype,
+                              full_shape=(prob.m, prob.k))
+    issues += check_alignment("B", (cfg.bk, cfg.bn), prob.dtype,
+                              full_shape=(prob.k, prob.n))
+    issues += check_alignment("C", (cfg.bm, cfg.bn), prob.dtype,
+                              full_shape=(prob.m, prob.n))
+    issues += check_vmem(
+        {"A": ((cfg.bm, cfg.bk), prob.dtype),
+         "B": ((cfg.bk, cfg.bn), prob.dtype),
+         "C": ((cfg.bm, cfg.bn), prob.dtype)},
+        scratch={"acc": ((cfg.bm, cfg.bn), cfg.precision)})
+    issues += check_masking("A", (prob.m, prob.k), (cfg.bm, cfg.bk),
+                            masked_dims=(0, 1))
+    return issues
+
+
+def gemm_cost(cfg: GemmConfig, prob: GemmProblem) -> CostEstimate:
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    m, n, k = prob.m, prob.n, prob.k
+    mi, nj = cdiv(m, cfg.bm), cdiv(n, cfg.bn)
+    flops = 2.0 * m * n * k
+    # block revisit traffic
+    a_bytes = nj * m * k * sz
+    b_bytes = mi * k * n * sz
+    c_bytes = m * n * sz
+    if cfg.split_k > 1:
+        c_bytes = (2 * cfg.split_k + 1) * m * n * 4   # partials f32 w+r
+    bw = HBM_BW if (cfg.stagger_k or nj * mi < 8) else HBM_BW * \
+        STAGGER_DERATE
+    grid = mi * nj * cdiv(k, cfg.bk)
+    util = mxu_util(cfg.bm, cfg.bn, cfg.bk, prob.dtype) \
+        * occupancy(grid * (cfg.split_k if cfg.split_k > 1 else 1))
+    return CostEstimate(
+        compute_s=flops / (PEAK_FLOPS * util),
+        memory_s=(a_bytes + b_bytes + c_bytes) / bw,
+        flops=flops, hbm_bytes=a_bytes + b_bytes + c_bytes)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _block_steps(cfg: GemmConfig, prob: GemmProblem):
+    out = []
+    for field, cur in (("bm", cfg.bm), ("bn", cfg.bn), ("bk", cfg.bk)):
+        for nxt in (cur * 2, cur // 2):
+            if 8 <= nxt <= 1024:
+                out.append((f"{field}={nxt}",
+                            replace(cfg, **{field: nxt})))
+    return out
+
+
+def _split_k(cfg: GemmConfig, prob: GemmProblem):
+    if cfg.split_k > 1:
+        return [("split_k=1", replace(cfg, split_k=1))]
+    out = []
+    nk = max(prob.k // cfg.bk, 1)
+    for s in (2, 4, 8):
+        if nk % s == 0:
+            out.append((f"split_k={s}", replace(cfg, split_k=s,
+                                                stagger_k=False)))
+    return out
+
+
+def _stagger(cfg: GemmConfig, prob: GemmProblem):
+    if cfg.split_k > 1:
+        return []
+    return [(f"stagger_k={not cfg.stagger_k}",
+             replace(cfg, stagger_k=not cfg.stagger_k))]
+
+
+SKILLS = (
+    generic_skill("retile", "gemm", _block_steps),
+    Skill("split_k", "global", ("gemm",),
+          "Partition the reduction across parallel grid steps with an "
+          "f32 partial-sum epilogue; recovers occupancy for skinny C.",
+          "disjoint partial writes; reduction completeness", _split_k),
+    Skill("stagger_k", "global", ("gemm",),
+          "Rotate each (i,j) block's K start so parallel cores stream "
+          "different HBM stripes (controller hotspot mitigation).",
+          "reduction-completeness bijection (assert_injective)", _stagger),
+    generic_skill("software_pipelining", "gemm"),
+    generic_skill("vectorized_io", "gemm"),
+    generic_skill("f32_vmem_accumulate", "gemm"),
+    generic_skill("oob_guarded_loads", "gemm"),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("swap_b_index", "acc_depends_k", "grid_short",
+                   "missing_init", "stagger_mismatch")
+
+
+def compatible_bugs(cfg: GemmConfig, prob: GemmProblem):
+    menu = list(INJECTABLE_BUGS)
+    if not cfg.stagger_k:
+        menu.remove("stagger_mismatch")
+    return menu
+
+
+# -- reference execution (interpret mode vs the jnp oracle) -----------------
+
+def reference_check(cfg: GemmConfig, prob: GemmProblem) -> bool:
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.gemm import matmul, matmul_ref
+    rng = np.random.default_rng(0)
+    m = min(2 * cfg.bm, 512)
+    n = min(2 * cfg.bn, 512)
+    k = min(2 * cfg.bk * max(cfg.split_k, 1), 1024)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    o = matmul(a, b, cfg=cfg, interpret=True)
+    w = matmul_ref(a, b)
+    return bool(np.allclose(np.asarray(o), np.asarray(w),
+                            rtol=1e-3, atol=1e-3))
+
+
+def _lower():
+    from repro.kernels import gemm
+    return gemm
+
+
+def _example():
+    return GemmConfig(), GemmProblem(8192, 8192, 8192, "bf16")
+
+
+FAMILY = register(KernelFamily(
+    name="gemm",
+    config_cls=GemmConfig,
+    problem_cls=GemmProblem,
+    build_program=build_gemm_program,
+    structural=structural_gemm,
+    cost=gemm_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    compatible_bugs=compatible_bugs,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_gemm(cfg: GemmConfig, prob: GemmProblem,
+                *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

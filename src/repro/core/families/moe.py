@@ -1,0 +1,276 @@
+"""Fused-MoE kernel family (dispatch → grouped GEMM ×2 + SwiGLU → combine).
+
+Sort-based fused MoE on TPU (megablocks-style grouped GEMM) with
+uninterpreted routing tables (runtime routing data, paper §9.1).
+Invariants: dispatch/combine identity (gather and scatter compose to the
+identity on routed rows), expert-weight pairing (both GEMMs use grp(t),
+never the raw block index), d_model/d_ff contraction conformity, and
+down-proj accumulator stability across f-blocks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from .. import dsl
+from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
+from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
+                          check_vmem)
+from ..tags import Expr, app, make_tag
+from .base import KernelFamily, Skill, generic_skill, register
+
+
+@dataclass(frozen=True)
+class MoEProblem:
+    tokens: int               # tokens reaching the layer (B·S)
+    d_model: int
+    d_ff: int                 # per-expert hidden width
+    n_experts: int
+    top_k: int
+    dtype: str = "bf16"
+
+    @property
+    def routed_rows(self) -> int:
+        return self.tokens * self.top_k
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    block_t: int = 128        # token-block rows per grid step
+    block_f: int = 512        # d_ff block (reduction axis of down-proj)
+    fuse_gate: bool = True    # apply router gate inside the kernel
+
+    def name(self) -> str:
+        return f"moe[{self.block_t}x{self.block_f}]" + \
+            ("+fusedgate" if self.fuse_gate else "")
+
+
+def build_moe_program(cfg: MoEConfig, prob: MoEProblem,
+                      *, inject_bug: Optional[str] = None
+                      ) -> dsl.TileProgram:
+    """Sort-based fused MoE on TPU (megablocks-style grouped GEMM).
+
+    Uninterpreted tables (runtime routing data, paper §9.1):
+      perm(r)  — routed slot (token·top_k + slot) of sorted row r
+      grp(t)   — expert owning token-block t (group map from the sort)
+
+    Invariants: dispatch/combine identity (gather and scatter compose to the
+    identity on routed rows), expert-weight pairing (both GEMMs use grp(t),
+    never the raw block index), d_model/d_ff contraction conformity, and
+    down-proj accumulator stability across f-blocks.
+    Injectable bugs: "w_by_block_index", "combine_other_table",
+    "gate_unpermuted", "down_f_offset", "y_depends_f".
+    """
+    p = dsl.TileProgram(cfg.name())
+    R = prob.routed_rows
+    E, DM, DF = prob.n_experts, prob.d_model, prob.d_ff
+    bt, bf = cfg.block_t, cfg.block_f
+    nt = cdiv(R, bt)
+    nf = cdiv(DF, bf)
+
+    t = p.add_grid("t", nt, "parallel")
+    f = p.add_grid("f", nf, "arbitrary")
+
+    # X is the *unsorted* token activation buffer (routed slots):
+    p.tensor("X", (R, DM), prob.dtype)
+    p.tensor("Wg", (E * DM, DF), prob.dtype)   # gate proj, flattened experts
+    p.tensor("Wu", (E * DM, DF), prob.dtype)   # up proj
+    p.tensor("Wd", (E * DF, DM), prob.dtype)   # down proj
+    p.tensor("G", (R, 1), "f32")               # router gate per routed slot
+    p.tensor("Y", (R, DM), prob.dtype, kind="output")
+
+    grp = lambda blk: app("grp", blk, E)
+    perm = lambda r: app("perm", r, R)
+    perm_bad = lambda r: app("perm2", r, R)
+
+    # up/gate weight tag fn: (within-expert row, expert, col)
+    def w_up_tag(r, c):
+        return make_tag(r % DM, r // DM, c)
+    p.tensors["Wg"].tag_fn = w_up_tag
+    p.tensors["Wu"].tag_fn = w_up_tag
+
+    # dispatch: gather sorted rows through perm.  The retag declares the
+    # sort precondition (tokens of block t belong to expert grp(t)) as the
+    # tile's semantics: (routed slot, expert group, d_model coordinate).
+    x = p.gather_rows(
+        "X", lambda lr: perm(t * bt + lr), 0, bt, DM,
+        retag=lambda lr, lc: make_tag(perm(t * bt + lr), grp(t), lc))
+
+    # expert weights for this block's group
+    g_of_t = Expr.of(t) if inject_bug == "w_by_block_index" else grp(t)
+    wg = p.load("Wg", (g_of_t * DM, f * bf), (DM, bf))
+    wu = p.load("Wu", (g_of_t * DM, f * bf), (DM, bf))
+
+    # contraction + expert pairing over d_model:
+    # X's (d_model coord, expert) must match W's (within-expert row, expert)
+    p.assert_contraction(x, wg, components=((2, 1), (0, 1)))
+    p.assert_contraction(x, wu, components=((2, 1), (0, 1)))
+
+    h_tag = lambda lr, lc: make_tag(perm(t * bt + lr), grp(t), f * bf + lc)
+    hg = p.matmul(x, wg, retag=h_tag)
+    hu = p.matmul(x, wu, retag=h_tag)
+    act = p.elementwise("swiglu", hg, hu)       # tags merge (equal) -> keep
+
+    # expert pairing of the down projection
+    f_row = (f * bf + bf // 2) if inject_bug == "down_f_offset" else f * bf
+    wd = p.load("Wd", (grp(t) * DF + f_row, 0), (bf, DM))
+    # bind act's f coordinate with Wd's within-expert row; compare the
+    # (f coordinate, expert) pair — catches both offset and group bugs.
+    def wd_tag(r, c):  # explicit tag fn: (within-expert row, expert, col)
+        return make_tag(r % DF, r // DF, c)
+    p.tensors["Wd"].tag_fn = wd_tag
+    p.assert_conform(act, wd, bind=((1, 0),),
+                     components=((2, 1), (0, 1)))
+
+    if inject_bug == "y_depends_f":
+        y_tag = lambda lr, lc: make_tag(perm(t * bt + lr), Expr.of(f), lc)
+    else:
+        y_tag = lambda lr, lc: make_tag(perm(t * bt + lr), lc)
+    y = p.alloc((bt, DM), "f32")
+    p.matmul(act, wd, accumulate=True, acc=y, retag=y_tag)
+    p.assert_stable(y, "f")
+
+    if cfg.fuse_gate:
+        gperm = perm_bad if inject_bug == "gate_unpermuted" else perm
+        gt = p.gather_rows("G", lambda lr: gperm(t * bt + lr), 0, bt, 1,
+                           dtype="f32")
+        # gate row must be the same routed slot as the activation row
+        p.assert_conform(gt, y, bind=((0, 0),), components=((0,), (0,)))
+        p.update(y, gt, fn="scale_by_gate", retag=y_tag)
+
+    # combine: scatter back through the SAME permutation; component 0 of the
+    # value's tag must equal the destination row (identity invariant)
+    out_perm = perm_bad if inject_bug == "combine_other_table" else perm
+    p.scatter_rows("Y", y, lambda lr: out_perm(t * bt + lr), 0,
+                   conform_component=0)
+    return p
+
+
+def structural_moe(cfg: MoEConfig, prob: MoEProblem):
+    issues = []
+    issues += check_alignment("X", (cfg.block_t, prob.d_model), prob.dtype)
+    issues += check_alignment("W", (prob.d_model, cfg.block_f), prob.dtype)
+    issues += check_vmem(
+        {"X": ((cfg.block_t, prob.d_model), prob.dtype),
+         "Wg": ((prob.d_model, cfg.block_f), prob.dtype),
+         "Wu": ((prob.d_model, cfg.block_f), prob.dtype),
+         "Wd": ((cfg.block_f, prob.d_model), prob.dtype)},
+        scratch={"h": ((cfg.block_t, cfg.block_f), "f32"),
+                 "y": ((cfg.block_t, prob.d_model), "f32")})
+    issues += check_masking("routed", (prob.routed_rows,),
+                            (cfg.block_t,), masked_dims=(0,))
+    return issues
+
+
+def moe_cost(cfg: MoEConfig, prob: MoEProblem) -> CostEstimate:
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    R, DM, DF, E = prob.routed_rows, prob.d_model, prob.d_ff, prob.n_experts
+    flops = R * (2 * DM * DF * 2 + 2 * DF * DM)      # gate+up, down
+    nt = cdiv(R, cfg.block_t)
+    nf = cdiv(DF, cfg.block_f)
+    x_bytes = nf * R * DM * sz                       # x re-streamed per f
+    w_bytes = (2 * E * DM * DF + E * DF * DM) * sz * \
+        max(1.0, nt / max(E, 1) / 4)
+    y_bytes = R * DM * (sz if cfg.fuse_gate else sz + 4)
+    util = mxu_util(cfg.block_t, cfg.block_f, DM, prob.dtype) \
+        * occupancy(E * nt * nf)
+    return CostEstimate(
+        compute_s=flops / (PEAK_FLOPS * util),
+        memory_s=(x_bytes + w_bytes + y_bytes) / HBM_BW,
+        flops=flops, hbm_bytes=x_bytes + w_bytes + y_bytes)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _block_steps(cfg: MoEConfig, prob: MoEProblem):
+    out = []
+    for field, cur in (("block_t", cfg.block_t), ("block_f", cfg.block_f)):
+        for nxt in (cur * 2, cur // 2):
+            if 8 <= nxt <= 4096 and (field != "block_f"
+                                     or prob.d_ff % nxt == 0):
+                out.append((f"{field}={nxt}", replace(cfg, **{field: nxt})))
+    return out
+
+
+def _fuse_gate(cfg: MoEConfig, prob):
+    return [(f"fuse_gate={not cfg.fuse_gate}",
+             replace(cfg, fuse_gate=not cfg.fuse_gate))]
+
+
+SKILLS = (
+    generic_skill("retile", "moe", _block_steps),
+    generic_skill("software_pipelining", "moe"),
+    Skill("fused_gate_epilogue", "local", ("moe",),
+          "Apply the router gate inside the kernel epilogue instead of a "
+          "separate combine pass.",
+          "gate-row/activation-row conformity via the shared perm table",
+          _fuse_gate),
+    generic_skill("vectorized_io", "moe"),
+    generic_skill("f32_vmem_accumulate", "moe"),
+    generic_skill("oob_guarded_loads", "moe"),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("w_by_block_index", "combine_other_table",
+                   "gate_unpermuted", "down_f_offset", "y_depends_f")
+
+
+def compatible_bugs(cfg: MoEConfig, prob: MoEProblem):
+    menu = list(INJECTABLE_BUGS)
+    if not cfg.fuse_gate:
+        menu.remove("gate_unpermuted")
+    return menu
+
+
+# -- reference execution ----------------------------------------------------
+
+def reference_check(cfg: MoEConfig, prob: MoEProblem) -> bool:
+    import numpy as np
+    import jax.numpy as jnp
+    from dataclasses import replace as dc_replace
+    from repro.kernels.moe import grouped_ffn, grouped_ffn_ref
+    rng = np.random.default_rng(0)
+    E, C = 2, max(cfg.block_t, 8)
+    DM, DF = 64, max(cfg.block_f, 64)
+    x = jnp.asarray(rng.normal(size=(E, C, DM)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, DM, DF)) * .05, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(E, DM, DF)) * .05, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(E, DF, DM)) * .05, jnp.float32)
+    small = dc_replace(cfg, block_f=min(cfg.block_f, DF))
+    o = grouped_ffn(x, wg, wu, wd, cfg=small, interpret=True)
+    w = grouped_ffn_ref(x, wg, wu, wd)
+    return bool(np.allclose(np.asarray(o), np.asarray(w),
+                            rtol=2e-3, atol=2e-3))
+
+
+def _lower():
+    from repro.kernels import moe
+    return moe
+
+
+def _example():
+    return (MoEConfig(block_t=8),
+            MoEProblem(16384, 7168, 2048, 32, 8, "bf16"))
+
+
+FAMILY = register(KernelFamily(
+    name="moe",
+    config_cls=MoEConfig,
+    problem_cls=MoEProblem,
+    build_program=build_moe_program,
+    structural=structural_moe,
+    cost=moe_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    compatible_bugs=compatible_bugs,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_moe(cfg: MoEConfig, prob: MoEProblem,
+               *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

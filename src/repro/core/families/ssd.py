@@ -1,0 +1,207 @@
+"""SSD kernel family (Mamba-2 state-space dual) — beyond-paper extension.
+
+One (bh, c) grid step of the SSD chunk scan.  Invariants: the
+dual-attention contraction pairs C and B rows of the SAME chunk
+(intra-chunk conformity over (bh, position, state-dim)); the carried
+(N, P) state must be stable across the sequential chunk axis; y coverage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .. import dsl
+from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
+from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
+                          check_vmem)
+from ..tags import Expr, make_tag
+from .base import KernelFamily, generic_skill, register
+
+
+@dataclass(frozen=True)
+class SSDProblem:
+    batch_heads: int          # B · H
+    seq: int
+    head_dim: int             # P
+    d_state: int              # N
+    dtype: str = "f32"
+
+
+@dataclass(frozen=True)
+class SSDConfig:
+    chunk: int = 128
+
+    def name(self) -> str:
+        return f"ssd[q={self.chunk}]"
+
+
+def build_ssd_program(cfg: SSDConfig, prob: SSDProblem,
+                      *, inject_bug: Optional[str] = None
+                      ) -> dsl.TileProgram:
+    """One (bh, c) grid step of the SSD chunk scan.
+
+    Invariants: the dual-attention contraction pairs C and B rows of the
+    SAME chunk (intra-chunk conformity over (bh, position, state-dim));
+    the carried (N, P) state must be stable across the sequential chunk
+    axis; y coverage.  Injectable bugs: "b_chunk_offset" (B read from the
+    neighboring chunk), "state_depends_c" (carried state tagged with the
+    chunk index), "xb_mismatch" (x rows from a different chunk than B).
+    """
+    p = dsl.TileProgram(cfg.name())
+    BH, S, P, N = prob.batch_heads, prob.seq, prob.head_dim, prob.d_state
+    q = cfg.chunk
+    nc = cdiv(S, q)
+
+    bh = p.add_grid("bh", BH, "parallel")
+    c = p.add_grid("c", nc, "arbitrary")
+
+    p.tensor("X", (BH, S, P), prob.dtype)
+    p.tensor("DA", (BH, S), prob.dtype)
+    p.tensor("B", (BH, S, N), prob.dtype)
+    p.tensor("C", (BH, S, N), prob.dtype)
+    p.tensor("Y", (BH, S, P), prob.dtype, kind="output")
+
+    c_b = (c + 1) % nc if inject_bug == "b_chunk_offset" else c
+    c_x = (c + 1) % nc if inject_bug == "xb_mismatch" else c
+
+    xt = p.squeeze(p.load("X", (bh, c_x * q, 0), (1, q, P)))
+    bt = p.squeeze(p.load("B", (bh, c_b * q, 0), (1, q, N)))
+    ct = p.squeeze(p.load("C", (bh, c * q, 0), (1, q, N)))
+
+    # dual-attention pairing: scores = C·Bᵀ contracts the state dim; the
+    # operands must agree on (bh, state coordinate) — identity tags are
+    # (bh, pos, n), bind n, compare components (0, 2)
+    p.assert_conform(ct, bt, bind=((1, 1),), components=((0, 2), (0, 2)))
+    s_tag = lambda i, j: make_tag(bh, c * q + i, c_b * q + j)
+    s = p.matmul(ct, p.transpose(bt), retag=s_tag)
+    # retag honesty: declared score columns must be B's actual positions
+    p.assert_conform(bt, s, bind=((0, 1),), components=((1,), (2,)))
+    # chunk locality: score columns must be the SAME chunk as the x rows
+    # they multiply (the SSD intra-chunk contraction)
+    p.assert_conform(s, xt, bind=((1, 0),), components=((2,), (1,)))
+    y_tag = lambda i, pp: make_tag(bh, c * q + i, pp)
+    y = p.matmul(s, xt, retag=y_tag)
+
+    # carried state: (N, P) scratch, stable across the chunk axis
+    state = p.alloc((N, P), "f32")
+    if inject_bug == "state_depends_c":
+        st_tag = lambda n, pp: make_tag(bh, Expr.of(c), n, pp)
+    else:
+        st_tag = lambda n, pp: make_tag(bh, n, pp)
+    p.update(state, fn="decay_accumulate", retag=st_tag)
+    p.assert_stable(state, "c")
+
+    p.store("Y", y, (bh, c * q, 0))
+    # streaming output: the sequential chunk axis legitimately partitions Y
+    # (unlike an accumulated GEMM output) — include it as distinguishing
+    p.assert_disjoint_writes("Y", axes=("bh", "c"))
+    p.assert_coverage("Y")
+    return p
+
+
+def structural_ssd(cfg: SSDConfig, prob: SSDProblem):
+    issues = []
+    issues += check_alignment("X", (cfg.chunk, prob.head_dim), prob.dtype,
+                              full_shape=(prob.seq, prob.head_dim))
+    issues += check_vmem(
+        {"X": ((cfg.chunk, prob.head_dim), prob.dtype),
+         "B": ((cfg.chunk, prob.d_state), prob.dtype),
+         "C": ((cfg.chunk, prob.d_state), prob.dtype)},
+        scratch={"state": ((prob.d_state, prob.head_dim), "f32"),
+                 "scores": ((cfg.chunk, cfg.chunk), "f32")})
+    issues += check_masking("S", (prob.seq,), (cfg.chunk,),
+                            masked_dims=(0,))
+    return issues
+
+
+def ssd_cost(cfg: SSDConfig, prob: SSDProblem) -> CostEstimate:
+    """Chunk-size trade-off: intra-chunk dual-attention flops grow with q
+    (O(S·q·(N+P)) per head) while the inter-chunk state pass costs
+    O(S/q · N·P) extra IO + serialization — the knob the harness tunes."""
+    sz = DTYPE_BYTES.get(prob.dtype, 4)
+    BH, S, P, N = prob.batch_heads, prob.seq, prob.head_dim, prob.d_state
+    q = cfg.chunk
+    nc = cdiv(S, q)
+    intra = BH * S * q * (2 * N + 2 * P)          # scores + y matmuls
+    inter = BH * S * (4 * N * P) + BH * nc * 2 * N * P
+    flops = float(intra + inter)
+    io = BH * S * (P + 2 * N + 1 + P) * sz        # x, B, C, da, y
+    state_io = BH * nc * N * P * 4 * 2            # carried state spill est.
+    util = mxu_util(q, max(N, P), max(N, P), prob.dtype) \
+        * occupancy(BH * nc)
+    return CostEstimate(
+        compute_s=flops / (PEAK_FLOPS * util),
+        memory_s=(io + state_io) / HBM_BW,
+        flops=flops, hbm_bytes=io + state_io)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _chunk_steps(cfg: SSDConfig, prob: SSDProblem):
+    out = []
+    for nxt in (cfg.chunk * 2, cfg.chunk // 2):
+        if 32 <= nxt <= 512 and prob.seq % nxt == 0:
+            out.append((f"chunk={nxt}", SSDConfig(chunk=nxt)))
+    return out
+
+
+SKILLS = (
+    generic_skill("retile", "ssd", _chunk_steps),
+    generic_skill("software_pipelining", "ssd"),
+    generic_skill("vectorized_io", "ssd"),
+    generic_skill("f32_vmem_accumulate", "ssd"),
+    generic_skill("oob_guarded_loads", "ssd"),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("b_chunk_offset", "state_depends_c", "xb_mismatch")
+
+
+# -- reference execution ----------------------------------------------------
+
+def reference_check(cfg: SSDConfig, prob: SSDProblem) -> bool:
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.ssd import ssd, ssd_ref
+    rng = np.random.default_rng(0)
+    q = min(cfg.chunk, 64)
+    S = 4 * q
+    x = jnp.asarray(rng.normal(size=(2, S, 32)), jnp.float32)
+    da = jnp.asarray(-np.abs(rng.normal(size=(2, S))) * .1, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(2, S, 16)) * .3, jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(2, S, 16)) * .3, jnp.float32)
+    o = ssd(x, da, Bm, Cm, cfg=SSDConfig(chunk=q), interpret=True)
+    w, _ = ssd_ref(x, da, Bm, Cm, q)
+    return bool(np.allclose(np.asarray(o), np.asarray(w),
+                            rtol=2e-3, atol=2e-3))
+
+
+def _lower():
+    from repro.kernels import ssd
+    return ssd
+
+
+def _example():
+    return SSDConfig(chunk=64), SSDProblem(64, 8192, 64, 128, "f32")
+
+
+FAMILY = register(KernelFamily(
+    name="ssd",
+    config_cls=SSDConfig,
+    problem_cls=SSDProblem,
+    build_program=build_ssd_program,
+    structural=structural_ssd,
+    cost=ssd_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_ssd(cfg: SSDConfig, prob: SSDProblem,
+               *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

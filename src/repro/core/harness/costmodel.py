@@ -1,177 +1,29 @@
-"""Analytic v5e cost model for kernel configs — the harness' profile signal.
+"""Cost-model facade for the harness — the "napkin math first" profile.
 
-On this CPU-only host there is no TPU wall-clock; the validator's "runtime
-profile" is this model's napkin math (assignment §Pallas-specific hints):
-time = max(compute term, HBM term), where
-
-* compute = FLOPs / (peak · MXU-utilization), utilization penalized for
-  tiles that pad up to the 128×128 systolic array or break (8,128) packing;
-* HBM traffic counts *block revisits* (the real lever behind tile-size
-  choices: a (bm × bn) output block re-streams A nj times and B mi times);
-* stagger-K models the HBM-controller hotspot factor (paper's Stagger K /
-  AMD workload guide): unstaggered K-major streams from all parallel cores
-  hit the same stripe, modeled as a bandwidth derate;
-* split-K adds partial-sum write+read+reduce traffic but recovers grid
-  parallelism for skinny outputs (occupancy term).
-
-All constants are model parameters (documented, deterministic), not
-measurements — they give the planner a landscape with real trade-offs and
-the same extremal structure as the hardware.
+The hardware model constants and shared helpers live in
+:mod:`repro.core.costs`; the per-family estimators live with their
+families in :mod:`repro.core.families` (the registry's ``cost`` hook).
+This module keeps the harness-facing entry point ``estimate(family, cfg,
+prob)`` plus backwards-compatible re-exports for the benchmarks.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
+from ..costs import (CostEstimate, HBM_BW, N_CORES, OCCUPANCY_GRID,
+                     PEAK_FLOPS, STAGGER_DERATE, mxu_util as _mxu_util,
+                     occupancy as _occupancy)
+from ..families import get_family
+from ..families.flash_attention import flash_attention_cost
+from ..families.flash_decode import flash_decode_cost
+from ..families.gemm import gemm_cost
+from ..families.moe import moe_cost
+from ..families.ssd import ssd_cost
 
-from ..invariants import (FlashAttentionConfig, FlashAttentionProblem,
-                          GemmConfig, GemmProblem, MoEConfig, MoEProblem,
-                          SSDConfig, SSDProblem)
-from ..kernelspec import DTYPE_BYTES, LANE, MXU, SUBLANE, VMEM_BYTES, cdiv
-
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-N_CORES = 1            # per-chip modeling; distribution handled upstream
-STAGGER_DERATE = 0.75  # unstaggered streaming keeps ~75% of HBM bw
-OCCUPANCY_GRID = 512   # grid steps needed to hide pipeline latency
-
-
-def _mxu_util(bm: int, bn: int, bk: int, dtype: str) -> float:
-    """Fraction of MXU issue slots doing useful work for one tile matmul."""
-    pad = lambda x, q: x / (cdiv(x, q) * q)
-    util = pad(bm, 8) * pad(bn, LANE) * pad(bk, LANE)
-    sub = SUBLANE.get(dtype, 8)
-    if bm % sub:
-        util *= 0.7          # relayout copies on the sublane dim
-    return max(util, 0.05)
-
-
-def _occupancy(grid_steps: int) -> float:
-    return min(1.0, grid_steps / OCCUPANCY_GRID) * 0.2 + 0.8 \
-        if grid_steps < OCCUPANCY_GRID else 1.0
-
-
-@dataclass
-class CostEstimate:
-    compute_s: float
-    memory_s: float
-    flops: float
-    hbm_bytes: float
-
-    @property
-    def time_s(self) -> float:
-        return max(self.compute_s, self.memory_s)
-
-    @property
-    def bound(self) -> str:
-        return "compute" if self.compute_s >= self.memory_s else "memory"
-
-    def tflops(self) -> float:
-        return self.flops / self.time_s / 1e12 if self.time_s else 0.0
-
-
-def gemm_cost(cfg: GemmConfig, prob: GemmProblem) -> CostEstimate:
-    sz = DTYPE_BYTES.get(prob.dtype, 2)
-    m, n, k = prob.m, prob.n, prob.k
-    mi, nj = cdiv(m, cfg.bm), cdiv(n, cfg.bn)
-    flops = 2.0 * m * n * k
-    # block revisit traffic
-    a_bytes = nj * m * k * sz
-    b_bytes = mi * k * n * sz
-    c_bytes = m * n * sz
-    if cfg.split_k > 1:
-        c_bytes = (2 * cfg.split_k + 1) * m * n * 4   # partials f32 w+r
-    bw = HBM_BW if (cfg.stagger_k or nj * mi < 8) else HBM_BW * \
-        STAGGER_DERATE
-    grid = mi * nj * cdiv(k, cfg.bk)
-    util = _mxu_util(cfg.bm, cfg.bn, cfg.bk, prob.dtype) \
-        * _occupancy(grid * (cfg.split_k if cfg.split_k > 1 else 1))
-    return CostEstimate(
-        compute_s=flops / (PEAK_FLOPS * util),
-        memory_s=(a_bytes + b_bytes + c_bytes) / bw,
-        flops=flops, hbm_bytes=a_bytes + b_bytes + c_bytes)
-
-
-def flash_attention_cost(cfg: FlashAttentionConfig,
-                         prob: FlashAttentionProblem) -> CostEstimate:
-    sz = DTYPE_BYTES.get(prob.dtype, 2)
-    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
-    SQ, SKV, D = prob.seq_q, prob.seq_kv, prob.head_dim
-    nq = cdiv(SQ, cfg.block_q)
-    causal_frac = 0.5 if (prob.causal and cfg.causal_block_skip) else 1.0
-    flops = 4.0 * B * H * SQ * SKV * D * causal_frac
-    q_bytes = B * H * SQ * D * sz
-    kv_revisits = nq * causal_frac      # K/V streamed once per q block
-    kv_bytes = 2 * B * HK * SKV * D * sz * max(kv_revisits, 1.0) * \
-        (H / HK if cfg.block_q > SQ else 1.0)
-    o_bytes = B * H * SQ * D * sz
-    util = _mxu_util(cfg.block_q, cfg.block_kv, D, prob.dtype) \
-        * _occupancy(B * H * nq)
-    if cfg.v_transposed_staging and D % LANE:
-        util *= 1.1          # recovered lane alignment on short heads
-    return CostEstimate(
-        compute_s=flops / (PEAK_FLOPS * util),
-        memory_s=(q_bytes + kv_bytes + o_bytes) / HBM_BW,
-        flops=flops, hbm_bytes=q_bytes + kv_bytes + o_bytes)
-
-
-def moe_cost(cfg: MoEConfig, prob: MoEProblem) -> CostEstimate:
-    sz = DTYPE_BYTES.get(prob.dtype, 2)
-    R, DM, DF, E = prob.routed_rows, prob.d_model, prob.d_ff, prob.n_experts
-    flops = R * (2 * DM * DF * 2 + 2 * DF * DM)      # gate+up, down
-    nt = cdiv(R, cfg.block_t)
-    nf = cdiv(DF, cfg.block_f)
-    x_bytes = nf * R * DM * sz                       # x re-streamed per f
-    w_bytes = (2 * E * DM * DF + E * DF * DM) * sz * \
-        max(1.0, nt / max(E, 1) / 4)
-    y_bytes = R * DM * (sz if cfg.fuse_gate else sz + 4)
-    util = _mxu_util(cfg.block_t, cfg.block_f, DM, prob.dtype) \
-        * _occupancy(E * nt * nf)
-    return CostEstimate(
-        compute_s=flops / (PEAK_FLOPS * util),
-        memory_s=(x_bytes + w_bytes + y_bytes) / HBM_BW,
-        flops=flops, hbm_bytes=x_bytes + w_bytes + y_bytes)
-
-
-def flash_decode_cost(cfg, prob) -> CostEstimate:
-    """Split-KV decode: memory-bound on cache streaming; splits buy
-    occupancy (parallel grid steps) at the cost of the partial-combine
-    epilogue — the kv_splits knob the harness tunes."""
-    sz = DTYPE_BYTES.get(prob.dtype, 2)
-    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
-    S, D = prob.seq_kv, prob.head_dim
-    ns = cfg.kv_splits
-    flops = 4.0 * B * H * S * D
-    kv_bytes = 2 * B * HK * S * D * sz
-    part_bytes = B * H * ns * (D + 2) * 4 * 2     # partials write+read
-    util = _occupancy(B * H * ns) * 0.6           # Sq=1: MXU underfed
-    return CostEstimate(
-        compute_s=flops / (PEAK_FLOPS * util),
-        memory_s=(kv_bytes + part_bytes) / HBM_BW,
-        flops=flops, hbm_bytes=kv_bytes + part_bytes)
-
-
-def ssd_cost(cfg: SSDConfig, prob: SSDProblem) -> CostEstimate:
-    """Chunk-size trade-off: intra-chunk dual-attention flops grow with q
-    (O(S·q·(N+P)) per head) while the inter-chunk state pass costs
-    O(S/q · N·P) extra IO + serialization — the knob the harness tunes."""
-    sz = DTYPE_BYTES.get(prob.dtype, 4)
-    BH, S, P, N = prob.batch_heads, prob.seq, prob.head_dim, prob.d_state
-    q = cfg.chunk
-    nc = cdiv(S, q)
-    intra = BH * S * q * (2 * N + 2 * P)          # scores + y matmuls
-    inter = BH * S * (4 * N * P) + BH * nc * 2 * N * P
-    flops = float(intra + inter)
-    io = BH * S * (P + 2 * N + 1 + P) * sz        # x, B, C, da, y
-    state_io = BH * nc * N * P * 4 * 2            # carried state spill est.
-    util = _mxu_util(q, max(N, P), max(N, P), prob.dtype) \
-        * _occupancy(BH * nc)
-    return CostEstimate(
-        compute_s=flops / (PEAK_FLOPS * util),
-        memory_s=(io + state_io) / HBM_BW,
-        flops=flops, hbm_bytes=io + state_io)
+__all__ = ["estimate", "CostEstimate", "PEAK_FLOPS", "HBM_BW", "N_CORES",
+           "STAGGER_DERATE", "OCCUPANCY_GRID", "gemm_cost",
+           "flash_attention_cost", "flash_decode_cost", "moe_cost",
+           "ssd_cost"]
 
 
 def estimate(family: str, cfg, prob) -> CostEstimate:
-    return {"gemm": gemm_cost, "flash_attention": flash_attention_cost,
-            "moe": moe_cost, "ssd": ssd_cost,
-            "flash_decode": flash_decode_cost}[family](cfg, prob)
+    """Registry dispatch: the family's own cost hook."""
+    return get_family(family).cost(cfg, prob)

@@ -16,6 +16,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..verify_engine import VerificationEngine
 from .lowering import LoweredState, LoweringAgent
 from .planner import KernelState, Planner, PlannerParams, Proposal
 from .selector import Selector
@@ -39,6 +40,9 @@ class OptimizeResult:
     history: List[StepRecord] = field(default_factory=list)
     cost_units: float = 0.0
     solved: bool = True
+    # VerificationEngine accounting for THIS run (deltas, so a shared
+    # engine reports per-run numbers) — fig2_ablation prints them
+    verify_stats: Dict[str, int] = field(default_factory=dict)
 
     @property
     def speedup(self) -> float:
@@ -54,6 +58,7 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
     selector = selector or Selector()
     lowering = lowering or LoweringAgent()
     validator = validator or Validator()
+    stats0 = validator.engine.stats()
 
     state0.refresh()
     best = state0
@@ -89,6 +94,8 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
                                       verdict.est_time_s))
     res.best_state, res.best_time_s = best, best_t
     res.solved = any(r.verdict.ok for r in res.history) or not res.history
+    stats1 = validator.engine.stats()
+    res.verify_stats = {k: stats1[k] - stats0.get(k, 0) for k in stats1}
     return res
 
 
@@ -128,10 +135,15 @@ def icrl_train(tasks: Sequence[KernelState], *, episodes: int = 8,
                fault_model: bool = True,
                use_invariants: bool = True) -> Tuple[PlannerParams,
                                                      List[OptimizeResult]]:
-    """Outer ICRL loop: sample s₀ ~ E, run the inner trajectory, update θ."""
+    """Outer ICRL loop: sample s₀ ~ E, run the inner trajectory, update θ.
+
+    One :class:`VerificationEngine` is shared across every episode:
+    cross-episode revisits are result-cache hits and config mutations
+    only re-discharge the constraints they actually changed."""
     rng = random.Random(seed)
     params = PlannerParams()
     results: List[OptimizeResult] = []
+    engine = VerificationEngine()
     for k in range(episodes):
         s0 = tasks[rng.randrange(len(tasks))]
         state = KernelState(s0.family, s0.cfg, s0.prob).refresh()
@@ -141,7 +153,8 @@ def icrl_train(tasks: Sequence[KernelState], *, episodes: int = 8,
             selector=Selector(seed=seed * 1000 + k),
             lowering=LoweringAgent(fault_model=fault_model,
                                    seed=seed * 77 + k),
-            validator=Validator(use_invariants=use_invariants),
+            validator=Validator(use_invariants=use_invariants,
+                                engine=engine),
             iterations=iterations)
         results.append(res)
         evals = policy_eval(res.history)

@@ -2,183 +2,67 @@
 
 Each entry records: the transformation (as a concrete config rewrite in the
 kernel-family config space — the TPU analogue of the paper's DSL rewrites),
-the data-flow invariants that must hold afterwards (referencing the family
-templates in :mod:`repro.core.invariants`), its Table-1 tier, and a context
-enumerator.  The KB is expert-curated and fixed; the ICRL loop learns to
-*bind* entries to kernels, never to invent new ones (paper §8).
+the data-flow invariants that must hold afterwards, its Table-1 tier, and a
+context enumerator.  The KB is expert-curated and fixed; the ICRL loop
+learns to *bind* entries to kernels, never to invent new ones (paper §8).
+
+The entries themselves now live with their families in
+:mod:`repro.core.families` (each family registers its own skill list, with
+shared Table-1 metadata in ``families.base.GENERIC_SKILLS``), so adding a
+family — or a skill to one family — touches only that family's module.
+This module is the aggregation point: ``skills_for`` resolves through the
+registry, and ``KNOWLEDGE_BASE`` is the merged, Table-1-ordered view the
+benchmarks print.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, replace
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-from ..invariants import (FlashAttentionConfig, FlashAttentionProblem,
-                          FlashDecodeConfig, FlashDecodeProblem,
-                          GemmConfig, GemmProblem, MoEConfig, MoEProblem,
-                          SSDConfig, SSDProblem)
+from ..families import (Skill, all_families, family_for_config,
+                        get_family)
+
+__all__ = ["Skill", "KNOWLEDGE_BASE", "skills_for"]
 
 
-@dataclass(frozen=True)
-class Skill:
-    name: str
-    tier: str                      # "global" | "local" | "isa"  (Table 1)
-    families: Tuple[str, ...]
-    description: str
-    invariants: str                # which invariant templates guard it
-    # contexts(cfg, prob) -> list of (context_label, new_cfg)
-    contexts: Callable
-
-
-def _gemm_block_steps(cfg: GemmConfig, prob: GemmProblem):
-    out = []
-    for field, cur in (("bm", cfg.bm), ("bn", cfg.bn), ("bk", cfg.bk)):
-        for nxt in (cur * 2, cur // 2):
-            if 8 <= nxt <= 1024:
-                out.append((f"{field}={nxt}",
-                            replace(cfg, **{field: nxt})))
-    return out
-
-
-def _gemm_split_k(cfg: GemmConfig, prob: GemmProblem):
-    if cfg.split_k > 1:
-        return [("split_k=1", replace(cfg, split_k=1))]
-    out = []
-    nk = max(prob.k // cfg.bk, 1)
-    for s in (2, 4, 8):
-        if nk % s == 0:
-            out.append((f"split_k={s}", replace(cfg, split_k=s,
-                                                stagger_k=False)))
-    return out
-
-
-def _gemm_stagger(cfg: GemmConfig, prob: GemmProblem):
-    if cfg.split_k > 1:
+def _poly_contexts(skill_name: str):
+    """Config-polymorphic context enumerator for merged KB entries: the
+    config's own family supplies the rewrite steps (so a KNOWLEDGE_BASE
+    'retile' row works for any family's config, as the old
+    isinstance-dispatch did)."""
+    def contexts(cfg, prob):
+        for s in family_for_config(cfg).skills:
+            if s.name == skill_name:
+                return s.contexts(cfg, prob)
         return []
-    return [(f"stagger_k={not cfg.stagger_k}",
-             replace(cfg, stagger_k=not cfg.stagger_k))]
+    return contexts
 
 
-def _fa_block_steps(cfg: FlashAttentionConfig, prob):
-    out = []
-    for field, cur in (("block_q", cfg.block_q), ("block_kv",
-                                                  cfg.block_kv)):
-        for nxt in (cur * 2, cur // 2):
-            if 16 <= nxt <= 2048:
-                out.append((f"{field}={nxt}", replace(cfg, **{field: nxt})))
-    return out
+def _merged_knowledge_base() -> Tuple[Skill, ...]:
+    """One row per skill name, with the ``families`` tuple unioned across
+    the per-family registrations (the Table-1 coverage-matrix view)."""
+    merged: Dict[str, Skill] = {}
+    for fam in all_families():
+        for s in fam.skills:
+            prev = merged.get(s.name)
+            if prev is None:
+                merged[s.name] = Skill(s.name, s.tier, s.families,
+                                       s.description, s.invariants,
+                                       _poly_contexts(s.name))
+            else:
+                merged[s.name] = Skill(
+                    prev.name, prev.tier,
+                    prev.families + tuple(f for f in s.families
+                                          if f not in prev.families),
+                    prev.description, prev.invariants, prev.contexts)
+    tier_rank = {"global": 0, "local": 1, "isa": 2}
+    return tuple(sorted(merged.values(),
+                        key=lambda s: tier_rank.get(s.tier, 3)))
 
 
-def _fa_skip(cfg: FlashAttentionConfig, prob):
-    if not prob.causal:
-        return []
-    return [(f"causal_block_skip={not cfg.causal_block_skip}",
-             replace(cfg, causal_block_skip=not cfg.causal_block_skip))]
-
-
-def _fa_transv(cfg: FlashAttentionConfig, prob):
-    return [(f"v_transposed_staging={not cfg.v_transposed_staging}",
-             replace(cfg, v_transposed_staging=not cfg.v_transposed_staging
-                     ))]
-
-
-def _moe_block_steps(cfg: MoEConfig, prob: MoEProblem):
-    out = []
-    for field, cur in (("block_t", cfg.block_t), ("block_f", cfg.block_f)):
-        for nxt in (cur * 2, cur // 2):
-            if 8 <= nxt <= 4096 and (field != "block_f"
-                                     or prob.d_ff % nxt == 0):
-                out.append((f"{field}={nxt}", replace(cfg, **{field: nxt})))
-    return out
-
-
-def _moe_fuse_gate(cfg: MoEConfig, prob):
-    return [(f"fuse_gate={not cfg.fuse_gate}",
-             replace(cfg, fuse_gate=not cfg.fuse_gate))]
-
-
-def _noop(cfg, prob):
-    return []
-
-
-KNOWLEDGE_BASE: Tuple[Skill, ...] = (
-    # -- global intrusive (Table 1 tier 1) ------------------------------------
-    Skill("retile", "global",
-          ("gemm", "flash_attention", "moe", "ssd", "flash_decode"),
-          "Change VMEM block shapes: trades operand re-streaming (HBM "
-          "revisits) against VMEM footprint and MXU grain.",
-          "MXU pairing + coverage + accumulator stability re-proven per "
-          "retile", lambda c, p: _dispatch_blocks(c, p)),
-    Skill("split_k", "global", ("gemm",),
-          "Partition the reduction across parallel grid steps with an "
-          "f32 partial-sum epilogue; recovers occupancy for skinny C.",
-          "disjoint partial writes; reduction completeness", _gemm_split_k),
-    Skill("stagger_k", "global", ("gemm",),
-          "Rotate each (i,j) block's K start so parallel cores stream "
-          "different HBM stripes (controller hotspot mitigation).",
-          "reduction-completeness bijection (assert_injective)",
-          _gemm_stagger),
-    Skill("software_pipelining", "global",
-          ("gemm", "flash_attention", "moe", "ssd"),
-          "HBM->VMEM double buffering across grid steps (always on via "
-          "the Pallas pipeline; block shapes set the stage depth).",
-          "carried-scratch stability across 'arbitrary' axes", _noop),
-    Skill("transpose_v_staging", "global", ("flash_attention",),
-          "Stage V transposed during the copy so the PV matmul reads "
-          "lane-aligned operands (paper's TransV).",
-          "PV pairing conformity through the transpose", _fa_transv),
-    # -- local source changes (tier 2) ---------------------------------------
-    Skill("causal_block_skip", "local", ("flash_attention",),
-          "Skip fully-masked KV blocks in the causal triangle.",
-          "skipped blocks provably fully masked (structural)", _fa_skip),
-    Skill("fused_gate_epilogue", "local", ("moe",),
-          "Apply the router gate inside the kernel epilogue instead of a "
-          "separate combine pass.",
-          "gate-row/activation-row conformity via the shared perm table",
-          _moe_fuse_gate),
-    Skill("vectorized_io", "local", ("gemm", "flash_attention", "moe", "ssd"),
-          "Keep last-dim blocks 128-lane aligned so copies vectorize "
-          "(structural alignment check enforces).",
-          "alignment structural invariant", _noop),
-    # -- ISA/compiler-level (tier 3, TPU analogues) ----------------------------
-    Skill("f32_vmem_accumulate", "isa", ("gemm", "moe", "ssd"),
-          "Accumulate in f32 VMEM scratch (the AGPR-pool analogue).",
-          "accumulator ⊤-freedom + init-at-first-step", _noop),
-    Skill("oob_guarded_loads", "isa",
-          ("gemm", "flash_attention", "moe", "ssd"),
-          "Zero-padded block loads with masked tails (buffer_load OOB "
-          "guard analogue).",
-          "masking obligation for non-divisible dims", _noop),
-)
-
-
-def _ssd_chunk_steps(cfg, prob):
-    out = []
-    for nxt in (cfg.chunk * 2, cfg.chunk // 2):
-        if 32 <= nxt <= 512 and prob.seq % nxt == 0:
-            out.append((f"chunk={nxt}", SSDConfig(chunk=nxt)))
-    return out
-
-
-def _fdec_split_steps(cfg, prob):
-    out = []
-    for nxt in (cfg.kv_splits * 2, cfg.kv_splits // 2):
-        if 1 <= nxt <= 64 and prob.seq_kv % nxt == 0:
-            out.append((f"kv_splits={nxt}", FlashDecodeConfig(kv_splits=nxt)))
-    return out
-
-
-def _dispatch_blocks(cfg, prob):
-    if isinstance(cfg, GemmConfig):
-        return _gemm_block_steps(cfg, prob)
-    if isinstance(cfg, FlashAttentionConfig):
-        return _fa_block_steps(cfg, prob)
-    if isinstance(cfg, SSDConfig):
-        return _ssd_chunk_steps(cfg, prob)
-    if isinstance(cfg, FlashDecodeConfig):
-        return _fdec_split_steps(cfg, prob)
-    return _moe_block_steps(cfg, prob)
+KNOWLEDGE_BASE: Tuple[Skill, ...] = _merged_knowledge_base()
 
 
 def skills_for(family: str) -> List[Skill]:
-    return [s for s in KNOWLEDGE_BASE if family in s.families]
+    """The family's skill list, straight from the registry (each entry's
+    ``contexts`` enumerator is the family's own)."""
+    return list(get_family(family).skills)

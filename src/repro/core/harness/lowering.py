@@ -5,29 +5,20 @@ intrusive rewrites in the paper are *fallible* — the LLM mis-lowers some
 fraction of global restructurings, which is precisely what data-flow
 invariants exist to catch.  The agent therefore carries a calibrated fault
 model: each applied skill may inject a latent bug from the family's
-injectable-bug list (the same bugs the invariant tests catch), with a rate
-per Table-1 tier.  Benchmarks Table-3/§9.4 run with the fault model ON to
-measure the invariant feedback's effect; production tuning
+injectable-bug list (declared by the family's registry entry, matching its
+``build_program`` inject_bug menu), with a rate per Table-1 tier.
+Benchmarks Table-3/§9.4 run with the fault model ON to measure the
+invariant feedback's effect; production tuning
 (examples/argus_optimize.py) runs with it OFF.
 """
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, replace as dc_replace
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional
 
+from ..families import get_family
 from .planner import KernelState, Proposal
-
-# latent-bug menu per family (must match invariants.build_* inject_bug)
-FAMILY_BUGS: Dict[str, Tuple[str, ...]] = {
-    "gemm": ("swap_b_index", "acc_depends_k", "grid_short", "missing_init",
-             "stagger_mismatch"),
-    "flash_attention": ("wrong_kv_head", "m_depends_kv", "q_block_offset"),
-    "moe": ("w_by_block_index", "combine_other_table", "gate_unpermuted",
-            "down_f_offset", "y_depends_f"),
-    "ssd": ("b_chunk_offset", "state_depends_c", "xb_mismatch"),
-    "flash_decode": ("wrong_kv_head", "split_overlap", "partial_mislabel"),
-}
 
 # fault rates by Table-1 tier: intrusive rewrites break more often
 TIER_BUG_RATE = {"global": 0.35, "local": 0.10, "isa": 0.20}
@@ -71,14 +62,4 @@ class LoweringAgent:
         return LoweredState(lowered.state, bug, lowered.applied)
 
     def _compatible_bugs(self, state: KernelState) -> List[str]:
-        menu = list(FAMILY_BUGS[state.family])
-        cfg, prob = state.cfg, state.prob
-        if state.family == "gemm":
-            if not getattr(cfg, "stagger_k", False):
-                menu.remove("stagger_mismatch")
-        if state.family in ("flash_attention", "flash_decode"):
-            if prob.q_heads == prob.kv_heads:
-                menu.remove("wrong_kv_head")
-        if state.family == "moe" and not getattr(cfg, "fuse_gate", True):
-            menu.remove("gate_unpermuted")
-        return menu
+        return get_family(state.family).bugs_for(state.cfg, state.prob)

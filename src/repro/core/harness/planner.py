@@ -17,8 +17,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from ..families import get_family
 from . import costmodel
-from .knowledge import Skill, skills_for
+from .knowledge import Skill
 
 
 @dataclass
@@ -63,7 +64,7 @@ class Planner:
             state.refresh()
         base = state.est.time_s
         out: List[Proposal] = []
-        for skill in skills_for(state.family):
+        for skill in get_family(state.family).skills:
             for label, new_cfg in skill.contexts(state.cfg, state.prob):
                 try:
                     est = costmodel.estimate(state.family, new_cfg,

@@ -2,6 +2,16 @@
 tests against the jnp oracle, and the cost-model profile — fused into the
 reward signal for the ICRL loop.
 
+Verification goes through the staged, caching
+:class:`repro.core.verify_engine.VerificationEngine`: structural checks,
+tag propagation, then memoized solver discharge.  The engine instance
+lives for the whole optimization loop, so re-validating a repaired or
+revisited config is a result-cache hit and validating a mutated config
+only re-proves the assertions whose tag expressions changed.  Violations
+come back as structured :class:`repro.core.verify_engine.Feedback`
+(stage, assertion id, counterexample, repair hint), which the lowering
+agent uses for targeted repair.
+
 Cost accounting mirrors the paper's token-budget measurements (§9.4): a
 static invariant check is cheap (counterexamples arrive pre-compile); a
 unit-test round is expensive (build + execute + diff).  The Table-3
@@ -11,9 +21,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-from .. import invariants as inv
+from ..families import get_family
+from ..verify_engine import Feedback, VerificationEngine
 from .lowering import LoweredState
 from .planner import KernelState
 
@@ -31,54 +42,46 @@ class Verdict:
     reward: float = 0.0
     violation_report: str = ""
     est_time_s: float = 0.0
-
-
-def _verify(family: str, cfg, prob, bug):
-    if family == "gemm":
-        return inv.verify_gemm(cfg, prob, inject_bug=bug)
-    if family == "flash_attention":
-        return inv.verify_flash_attention(cfg, prob, inject_bug=bug)
-    if family == "ssd":
-        return inv.verify_ssd(cfg, prob, inject_bug=bug)
-    if family == "flash_decode":
-        return inv.verify_flash_decode(cfg, prob, inject_bug=bug)
-    return inv.verify_moe(cfg, prob, inject_bug=bug)
+    feedback: List[Feedback] = field(default_factory=list)
 
 
 class Validator:
     def __init__(self, *, use_invariants: bool = True,
-                 run_kernels: bool = False, rng=None):
+                 run_kernels: bool = False, rng=None,
+                 engine: Optional[VerificationEngine] = None):
         self.use_invariants = use_invariants
         self.run_kernels = run_kernels
+        self.engine = engine or VerificationEngine()
         import random
         self.rng = rng or random.Random(1)
 
     def evaluate(self, lowered: LoweredState, incumbent_s: float) -> Verdict:
         state = lowered.state
         cost = 0.0
-        report = ""
 
         if self.use_invariants:
             cost += COST_STATIC
-            try:
-                res = _verify(state.family, state.cfg, state.prob,
-                              lowered.latent_bug)
-            except Exception as e:      # invalid config is itself a verdict
+            res = self.engine.verify(state.family, state.cfg, state.prob,
+                                     inject_bug=lowered.latent_bug)
+            if res.build_error is not None:
+                # invalid config is itself a verdict
                 return Verdict(False, caught_static=True, cost_units=cost,
-                               reward=-1.0, violation_report=str(e))
+                               reward=-1.0,
+                               violation_report=res.build_error,
+                               feedback=res.violations)
             if not res.hard_ok:
-                report = res.render()
                 return Verdict(False, caught_static=True, cost_units=cost,
-                               reward=-0.5, violation_report=report)
+                               reward=-0.5, violation_report=res.render(),
+                               feedback=res.violations)
             # structural warnings degrade the profile but do not reject
         else:
             # config-validity errors still surface when lowering runs
-            try:
-                _verify(state.family, state.cfg, state.prob, None)
-            except Exception as e:
+            res = self.engine.verify(state.family, state.cfg, state.prob)
+            if res.build_error is not None:
                 return Verdict(False, caught_unit=True,
                                cost_units=COST_UNIT_TEST, reward=-1.0,
-                               violation_report=str(e))
+                               violation_report=res.build_error,
+                               feedback=res.violations)
 
         # unit-test round (real or modeled)
         cost += COST_UNIT_TEST
@@ -105,68 +108,10 @@ class Validator:
 
     # -- real execution path (used by argus_optimize + tests) ----------------
     def _run_real(self, state: KernelState) -> bool:
-        import numpy as np
-        import jax.numpy as jnp
-        rng = np.random.default_rng(0)
+        fam = get_family(state.family)
+        if fam.reference_check is None:
+            return True
         try:
-            if state.family == "gemm":
-                from repro.kernels.gemm import matmul, matmul_ref
-                cfg = state.cfg
-                m = min(2 * cfg.bm, 512)
-                n = min(2 * cfg.bn, 512)
-                k = min(2 * cfg.bk * max(cfg.split_k, 1), 1024)
-                a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
-                b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
-                o = matmul(a, b, cfg=cfg, interpret=True)
-                w = matmul_ref(a, b)
-                return bool(np.allclose(np.asarray(o), np.asarray(w),
-                                        rtol=1e-3, atol=1e-3))
-            if state.family == "flash_attention":
-                from repro.kernels.flash_attention import mha, mha_ref
-                cfg, prob = state.cfg, state.prob
-                sq = min(2 * cfg.block_q, 256)
-                skv = min(2 * cfg.block_kv, 256)
-                d = min(prob.head_dim, 64)
-                q = jnp.asarray(rng.normal(size=(1, 2, sq, d)), jnp.float32)
-                k = jnp.asarray(rng.normal(size=(1, 1, skv, d)),
-                                jnp.float32)
-                v = jnp.asarray(rng.normal(size=(1, 1, skv, d)),
-                                jnp.float32)
-                o = mha(q, k, v, cfg=cfg, causal=prob.causal,
-                        interpret=True)
-                w = mha_ref(q, k, v, causal=prob.causal)
-                return bool(np.allclose(np.asarray(o), np.asarray(w),
-                                        rtol=2e-3, atol=2e-3))
-            if state.family == "ssd":
-                from repro.core.invariants import SSDConfig
-                from repro.kernels.ssd import ssd, ssd_ref
-                q = min(state.cfg.chunk, 64)
-                S = 4 * q
-                x = jnp.asarray(rng.normal(size=(2, S, 32)), jnp.float32)
-                da = jnp.asarray(-np.abs(rng.normal(size=(2, S))) * .1,
-                                 jnp.float32)
-                Bm = jnp.asarray(rng.normal(size=(2, S, 16)) * .3,
-                                 jnp.float32)
-                Cm = jnp.asarray(rng.normal(size=(2, S, 16)) * .3,
-                                 jnp.float32)
-                o = ssd(x, da, Bm, Cm, cfg=SSDConfig(chunk=q),
-                        interpret=True)
-                w, _ = ssd_ref(x, da, Bm, Cm, q)
-                return bool(np.allclose(np.asarray(o), np.asarray(w),
-                                        rtol=2e-3, atol=2e-3))
-            from repro.kernels.moe import grouped_ffn, grouped_ffn_ref
-            cfg = state.cfg
-            E, C = 2, max(cfg.block_t, 8)
-            DM, DF = 64, max(cfg.block_f, 64)
-            x = jnp.asarray(rng.normal(size=(E, C, DM)), jnp.float32)
-            wg = jnp.asarray(rng.normal(size=(E, DM, DF)) * .05, jnp.float32)
-            wu = jnp.asarray(rng.normal(size=(E, DM, DF)) * .05, jnp.float32)
-            wd = jnp.asarray(rng.normal(size=(E, DF, DM)) * .05, jnp.float32)
-            from dataclasses import replace
-            small = replace(cfg, block_f=min(cfg.block_f, DF))
-            o = grouped_ffn(x, wg, wu, wd, cfg=small, interpret=True)
-            w = grouped_ffn_ref(x, wg, wu, wd)
-            return bool(np.allclose(np.asarray(o), np.asarray(w),
-                                    rtol=2e-3, atol=2e-3))
+            return bool(fam.reference_check(state.cfg, state.prob))
         except Exception:
             return False

@@ -1,698 +1,39 @@
-"""Per-kernel-family invariant templates (paper §6: each knowledge-base
-entry records "the data-flow invariants that must hold after the rewrite").
+"""Compatibility shim — the per-family invariant templates now live in
+:mod:`repro.core.families` (one self-registering module per family).
 
-For each of the paper's three production kernel families — GEMM, flash
-attention, fused MoE — this module defines:
+This module re-exports the historical names (config/problem dataclasses,
+``build_*_program`` and ``verify_*``) so existing imports keep working.
+New code should go through the registry::
 
-* a **config** dataclass: the knobs the agentic harness mutates (block
-  shapes, grid order, staging policy, split-K/stagger-K, …);
-* a **problem** dataclass: operand shapes and semantics;
-* ``build_*_program``: the ARGUS tile program instantiating the family's
-  tag functions + tag assertions for that (config, problem);
-* ``verify_*``: program validation + TPU structural checks
-  (:mod:`repro.core.kernelspec`) in one call.
+    from repro.core.families import get_family
+    fam = get_family("gemm")
+    result = fam.verify(fam.config_cls(), fam.problem_cls(512, 512, 1024))
 
-The same configs drive the actual Pallas lowering in :mod:`repro.kernels`,
-so a config that fails here never reaches ``pallas_call``.
+or, for staged + cached verification, through
+:class:`repro.core.verify_engine.VerificationEngine`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
-
-from . import dsl
-from .kernelspec import (DTYPE_BYTES, LANE, MXU, SUBLANE, StructuralIssue,
-                         VerifyResult, cdiv, check_alignment, check_masking,
-                         check_vmem, verify_program)
-from .tags import Expr, app, make_tag
-
-# ===========================================================================
-# GEMM
-# ===========================================================================
-
-
-@dataclass(frozen=True)
-class GemmProblem:
-    m: int
-    n: int
-    k: int
-    dtype: str = "bf16"
-
-
-@dataclass(frozen=True)
-class GemmConfig:
-    """Tunable knobs (the harness' action space for this family)."""
-
-    bm: int = 128
-    bn: int = 128
-    bk: int = 128
-    split_k: int = 1          # >1: partition K across parallel grid steps
-    stagger_k: bool = False   # rotate K start per (i,j) to spread HBM load
-    precision: str = "f32"    # accumulator type
-
-    def name(self) -> str:
-        s = f"gemm[{self.bm}x{self.bn}x{self.bk}]"
-        if self.split_k > 1:
-            s += f"+splitk{self.split_k}"
-        if self.stagger_k:
-            s += "+stagger"
-        return s
-
-
-def build_gemm_program(cfg: GemmConfig, prob: GemmProblem,
-                       *, inject_bug: Optional[str] = None
-                       ) -> dsl.TileProgram:
-    """C = A @ B with the family invariants.
-
-    ``inject_bug`` deliberately mis-lowers one aspect; used by tests and the
-    Table-3 benchmark to measure the analysis' bug-catching power.
-    Supported: "swap_b_index", "stagger_mismatch", "acc_depends_k",
-    "grid_short", "missing_init".
-    """
-    p = dsl.TileProgram(cfg.name())
-    mi = cdiv(prob.m, cfg.bm)
-    nj = cdiv(prob.n, cfg.bn)
-    nk_total = cdiv(prob.k, cfg.bk)
-    if cfg.split_k > 1 and nk_total % cfg.split_k != 0:
-        raise ValueError("split_k must divide the K block count")
-    nk = nk_total // cfg.split_k
-
-    if inject_bug == "grid_short":
-        mi = max(1, mi - 1)
-
-    i = p.add_grid("i", mi, "parallel")
-    j = p.add_grid("j", nj, "parallel")
-    s = p.add_grid("s", cfg.split_k, "parallel") if cfg.split_k > 1 else None
-    k = p.add_grid("k", nk, "arbitrary")
-
-    p.tensor("A", (prob.m, prob.k), prob.dtype)
-    p.tensor("B", (prob.k, prob.n), prob.dtype)
-    out_rows = prob.m * (cfg.split_k if cfg.split_k > 1 else 1)
-    p.tensor("C", (out_rows, prob.n), prob.dtype, kind="output")
-
-    k_base = (Expr.of(s) * nk + k) if s is not None else Expr.of(k)
-    if cfg.stagger_k:
-        k_idx = (k_base + i + j) % nk_total
-        if inject_bug == "stagger_mismatch":
-            k_idx_b = (k_base + i) % nk_total   # phase mismatch on B's path
-        else:
-            k_idx_b = k_idx
-    else:
-        k_idx = k_idx_b = k_base
-
-    a = p.load("A", (i * cfg.bm, k_idx * cfg.bk), (cfg.bm, cfg.bk))
-    if inject_bug == "swap_b_index":
-        b = p.load("B", (j * cfg.bk, k_idx_b * cfg.bn), (cfg.bk, cfg.bn))
-    else:
-        b = p.load("B", (k_idx_b * cfg.bk, j * cfg.bn), (cfg.bk, cfg.bn))
-
-    # invariant 1 — MXU pairing: contraction coordinates must agree
-    p.assert_contraction(a, b, components=((1,), (0,)))
-    # invariant 1b — reduction completeness: each K block consumed once
-    # (stagger-K must remain a bijection of the reduction range)
-    p.assert_injective(k_idx, ("k",) if s is None else ("k", "s"))
-
-    acc = p.alloc((cfg.bm, cfg.bn), cfg.precision,
-                  zero_init=(inject_bug != "missing_init"))
-    if inject_bug == "acc_depends_k":
-        retag = lambda li, lj: make_tag(k_idx * cfg.bk + li, j * cfg.bn + lj)
-    else:
-        retag = lambda li, lj: make_tag(i * cfg.bm + li, j * cfg.bn + lj)
-    p.matmul(a, b, accumulate=True, acc=acc, retag=retag)
-
-    # invariant 2 — accumulator consistency across the reduction axis
-    p.assert_stable(acc, "k")
-    # invariant 2b — a never-initialized accumulator is ⊤ from the start
-    p.assert_conform(acc, acc, bind=((0, 0), (1, 1)))
-
-    row0 = (s * prob.m + i * cfg.bm) if s is not None else i * cfg.bm
-    p.store("C", acc, (row0, j * cfg.bn))
-    # invariants 3/4 — no clobber across parallel steps; full coverage
-    p.assert_disjoint_writes("C")
-    p.assert_coverage("C")
-    return p
-
-
-def verify_gemm(cfg: GemmConfig, prob: GemmProblem,
-                *, inject_bug: Optional[str] = None) -> VerifyResult:
-    prog = build_gemm_program(cfg, prob, inject_bug=inject_bug)
-    structural = []
-    structural += check_alignment("A", (cfg.bm, cfg.bk), prob.dtype,
-                                  full_shape=(prob.m, prob.k))
-    structural += check_alignment("B", (cfg.bk, cfg.bn), prob.dtype,
-                                  full_shape=(prob.k, prob.n))
-    structural += check_alignment("C", (cfg.bm, cfg.bn), prob.dtype,
-                                  full_shape=(prob.m, prob.n))
-    structural += check_vmem(
-        {"A": ((cfg.bm, cfg.bk), prob.dtype),
-         "B": ((cfg.bk, cfg.bn), prob.dtype),
-         "C": ((cfg.bm, cfg.bn), prob.dtype)},
-        scratch={"acc": ((cfg.bm, cfg.bn), cfg.precision)})
-    structural += check_masking("A", (prob.m, prob.k), (cfg.bm, cfg.bk),
-                                masked_dims=(0, 1))
-    return verify_program(prog, structural)
-
-
-# ===========================================================================
-# Flash attention (GQA, causal, online softmax)
-# ===========================================================================
-
-
-@dataclass(frozen=True)
-class FlashAttentionProblem:
-    batch: int
-    q_heads: int
-    kv_heads: int
-    seq_q: int
-    seq_kv: int
-    head_dim: int
-    causal: bool = True
-    dtype: str = "bf16"
-
-    @property
-    def group(self) -> int:
-        return self.q_heads // self.kv_heads
-
-
-@dataclass(frozen=True)
-class FlashAttentionConfig:
-    block_q: int = 256
-    block_kv: int = 128
-    v_transposed_staging: bool = False   # paper's TransV analogue
-    causal_block_skip: bool = True       # skip fully-masked kv blocks
-    applies_mask: bool = True            # in-kernel causal mask present
-
-    def name(self) -> str:
-        s = f"fa[{self.block_q}x{self.block_kv}]"
-        if self.v_transposed_staging:
-            s += "+transv"
-        if self.causal_block_skip:
-            s += "+skip"
-        return s
-
-
-def build_flash_attention_program(cfg: FlashAttentionConfig,
-                                  prob: FlashAttentionProblem,
-                                  *, inject_bug: Optional[str] = None
-                                  ) -> dsl.TileProgram:
-    """O = softmax(QKᵀ)·V — the paper's Figure-1 program on TPU tiles.
-
-    Tag functions (paper §4, adapted):
-      T_Q(r, c) = (batch, kv_group_of_head, q_pos, c)
-      T_K(r, c) = (batch, kv_head,          kv_pos, c)
-      T_V(r, c) = (batch, kv_head,          kv_pos, c)
-    Injectable bugs: "wrong_kv_head" (load K with the raw q-head index),
-    "missing_transpose" (staged-transposed V consumed untransposed),
-    "m_depends_kv" (running max tagged with the kv step),
-    "q_block_offset" (off-by-one-block Q origin).
-    """
-    p = dsl.TileProgram(cfg.name())
-    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
-    SQ, SKV, D = prob.seq_q, prob.seq_kv, prob.head_dim
-    G = prob.group
-    bq, bkv = cfg.block_q, cfg.block_kv
-
-    bh = p.add_grid("bh", B * H, "parallel")
-    qi = p.add_grid("qi", cdiv(SQ, bq), "parallel")
-    kv = p.add_grid("kv", cdiv(SKV, bkv), "arbitrary")
-
-    # logical rank-4 operands; tag functions per the paper (T_Q folds the
-    # GQA head-group mapping, like the paper's h_q/gqa component):
-    def tag_q(b_, h_, r, c):
-        return make_tag(b_, h_ // G, r, c)
-
-    p.tensor("Q", (B, H, SQ, D), prob.dtype, tag_fn=tag_q)
-    p.tensor("K", (B, HK, SKV, D), prob.dtype)   # identity tags
-    p.tensor("V", (B, HK, SKV, D), prob.dtype)
-    p.tensor("O", (B, H, SQ, D), prob.dtype, kind="output")
-
-    b = bh // H
-    h = bh % H
-    hk = (bh % H) // G if inject_bug != "wrong_kv_head" else (bh % H)
-    if inject_bug == "wrong_kv_head" and H == HK:
-        raise ValueError("wrong_kv_head bug requires GQA (H != HK)")
-
-    q_pos = (qi + (1 if inject_bug == "q_block_offset" else 0)) * bq
-
-    q = p.squeeze(p.load("Q", (b, h, q_pos, 0), (1, 1, bq, D)))
-    k = p.squeeze(p.load("K", (b, hk, kv * bkv, 0), (1, 1, bkv, D)))
-
-    # S = Q Kᵀ : contraction over the head dim (bind Q.1 with K.1 — Kᵀ),
-    # conformity on (batch, kv-head-group, head-dim coordinate).
-    p.assert_conform(q, k, bind=((1, 1),), components=((0, 1, 3), (0, 1, 3)))
-    s_tag = lambda li, lj: make_tag(b, hk, qi * bq + li, kv * bkv + lj)
-    s = p.matmul(q, p.transpose(k), retag=s_tag)
-    # retag honesty: the declared S coordinates must match the operands'
-    # actual positions (catches off-by-one-block origins)
-    p.assert_conform(q, s, bind=((0, 0),), components=((2,), (2,)))
-    p.assert_conform(k, s, bind=((0, 1),), components=((2,), (3,)))
-
-    if prob.causal and cfg.applies_mask:
-        s = p.elementwise("causal_mask", s, retag=s_tag)
-
-    # online softmax running stats (carried scratch)
-    m_tag = ((lambda li: make_tag(b, hk, qi * bq + li, kv))
-             if inject_bug == "m_depends_kv"
-             else (lambda li: make_tag(b, hk, qi * bq + li)))
-    m_new = p.reduce(s, axis=1, kind="max", retag=m_tag)
-    m_acc = p.alloc((bq,), "f32")
-    p.update(m_acc, m_new, fn="max", retag=m_tag)
-    p.assert_stable(m_acc, "kv")
-
-    pt = p.elementwise("exp_sub_m", s, retag=s_tag)
-    l_new = p.reduce(pt, axis=1, kind="sum",
-                     retag=lambda li: make_tag(b, hk, qi * bq + li))
-    l_acc = p.alloc((bq,), "f32")
-    p.update(l_acc, l_new, fn="rescale_add",
-             retag=lambda li: make_tag(b, hk, qi * bq + li))
-    p.assert_stable(l_acc, "kv")
-
-    v = p.squeeze(p.load("V", (b, hk, kv * bkv, 0), (1, 1, bkv, D)))
-    if cfg.v_transposed_staging:
-        vt = p.transpose(v)           # staged (D, bkv), the TransV analogue
-        v_used = vt if inject_bug == "missing_transpose" else p.transpose(vt)
-        if inject_bug == "missing_transpose" and D != bkv:
-            raise ValueError("missing_transpose bug requires D == block_kv")
-    else:
-        v_used = v
-
-    # O += P·V : contraction over kv positions; conformity on
-    # (batch, kv-head, kv position).
-    p.assert_conform(pt, v_used, bind=((1, 0),),
-                     components=((0, 1, 3), (0, 1, 2)))
-    o_tag = lambda li, lc: make_tag(b, hk, qi * bq + li, lc)
-    acc_o = p.alloc((bq, D), "f32")
-    p.update(acc_o, fn="rescale", retag=o_tag)   # exp(m_old - m_new) scale
-    p.matmul(pt, v_used, accumulate=True, acc=acc_o, retag=o_tag)
-    p.assert_stable(acc_o, "kv")
-
-    p.store("O", acc_o, (b, h, qi * bq, 0))
-    p.assert_disjoint_writes("O")
-    p.assert_coverage("O")
-    return p
-
-
-def verify_flash_attention(cfg: FlashAttentionConfig,
-                           prob: FlashAttentionProblem,
-                           *, inject_bug: Optional[str] = None
-                           ) -> VerifyResult:
-    prog = build_flash_attention_program(cfg, prob, inject_bug=inject_bug)
-    structural = []
-    structural += check_alignment("Q", (cfg.block_q, prob.head_dim),
-                                  prob.dtype)
-    structural += check_alignment("K", (cfg.block_kv, prob.head_dim),
-                                  prob.dtype)
-    structural += check_vmem(
-        {"Q": ((cfg.block_q, prob.head_dim), prob.dtype),
-         "K": ((cfg.block_kv, prob.head_dim), prob.dtype),
-         "V": ((cfg.block_kv, prob.head_dim), prob.dtype),
-         "O": ((cfg.block_q, prob.head_dim), prob.dtype)},
-        scratch={"S": ((cfg.block_q, cfg.block_kv), "f32"),
-                 "acc": ((cfg.block_q, prob.head_dim), "f32"),
-                 "stats": ((2 * cfg.block_q,), "f32")})
-    structural += check_masking("KV", (prob.seq_kv,), (cfg.block_kv,),
-                                masked_dims=(0,))
-    if prob.causal and not cfg.applies_mask:
-        structural.append(StructuralIssue(
-            "masking", "causal problem lowered without an in-kernel mask"))
-    if cfg.causal_block_skip and not prob.causal:
-        structural.append(StructuralIssue(
-            "masking", "causal block-skip enabled on a non-causal problem"))
-    return verify_program(prog, structural)
-
-
-# ===========================================================================
-# Fused MoE (dispatch → grouped GEMM ×2 + SwiGLU → combine)
-# ===========================================================================
-
-
-@dataclass(frozen=True)
-class MoEProblem:
-    tokens: int               # tokens reaching the layer (B·S)
-    d_model: int
-    d_ff: int                 # per-expert hidden width
-    n_experts: int
-    top_k: int
-    dtype: str = "bf16"
-
-    @property
-    def routed_rows(self) -> int:
-        return self.tokens * self.top_k
-
-
-@dataclass(frozen=True)
-class MoEConfig:
-    block_t: int = 128        # token-block rows per grid step
-    block_f: int = 512        # d_ff block (reduction axis of down-proj)
-    fuse_gate: bool = True    # apply router gate inside the kernel
-
-    def name(self) -> str:
-        return f"moe[{self.block_t}x{self.block_f}]" + \
-            ("+fusedgate" if self.fuse_gate else "")
-
-
-def build_moe_program(cfg: MoEConfig, prob: MoEProblem,
-                      *, inject_bug: Optional[str] = None
-                      ) -> dsl.TileProgram:
-    """Sort-based fused MoE on TPU (megablocks-style grouped GEMM).
-
-    Uninterpreted tables (runtime routing data, paper §9.1):
-      perm(r)  — routed slot (token·top_k + slot) of sorted row r
-      grp(t)   — expert owning token-block t (group map from the sort)
-
-    Invariants: dispatch/combine identity (gather and scatter compose to the
-    identity on routed rows), expert-weight pairing (both GEMMs use grp(t),
-    never the raw block index), d_model/d_ff contraction conformity, and
-    down-proj accumulator stability across f-blocks.
-    Injectable bugs: "w_by_block_index", "combine_other_table",
-    "gate_unpermuted", "down_f_offset", "y_depends_f".
-    """
-    p = dsl.TileProgram(cfg.name())
-    R = prob.routed_rows
-    E, DM, DF = prob.n_experts, prob.d_model, prob.d_ff
-    bt, bf = cfg.block_t, cfg.block_f
-    nt = cdiv(R, bt)
-    nf = cdiv(DF, bf)
-
-    t = p.add_grid("t", nt, "parallel")
-    f = p.add_grid("f", nf, "arbitrary")
-
-    # X is the *unsorted* token activation buffer (routed slots):
-    p.tensor("X", (R, DM), prob.dtype)
-    p.tensor("Wg", (E * DM, DF), prob.dtype)   # gate proj, flattened experts
-    p.tensor("Wu", (E * DM, DF), prob.dtype)   # up proj
-    p.tensor("Wd", (E * DF, DM), prob.dtype)   # down proj
-    p.tensor("G", (R, 1), "f32")               # router gate per routed slot
-    p.tensor("Y", (R, DM), prob.dtype, kind="output")
-
-    grp = lambda blk: app("grp", blk, E)
-    perm = lambda r: app("perm", r, R)
-    perm_bad = lambda r: app("perm2", r, R)
-
-    # up/gate weight tag fn: (within-expert row, expert, col)
-    def w_up_tag(r, c):
-        return make_tag(r % DM, r // DM, c)
-    p.tensors["Wg"].tag_fn = w_up_tag
-    p.tensors["Wu"].tag_fn = w_up_tag
-
-    # dispatch: gather sorted rows through perm.  The retag declares the
-    # sort precondition (tokens of block t belong to expert grp(t)) as the
-    # tile's semantics: (routed slot, expert group, d_model coordinate).
-    x = p.gather_rows(
-        "X", lambda lr: perm(t * bt + lr), 0, bt, DM,
-        retag=lambda lr, lc: make_tag(perm(t * bt + lr), grp(t), lc))
-
-    # expert weights for this block's group
-    g_of_t = Expr.of(t) if inject_bug == "w_by_block_index" else grp(t)
-    wg = p.load("Wg", (g_of_t * DM, f * bf), (DM, bf))
-    wu = p.load("Wu", (g_of_t * DM, f * bf), (DM, bf))
-
-    # contraction + expert pairing over d_model:
-    # X's (d_model coord, expert) must match W's (within-expert row, expert)
-    p.assert_contraction(x, wg, components=((2, 1), (0, 1)))
-    p.assert_contraction(x, wu, components=((2, 1), (0, 1)))
-
-    h_tag = lambda lr, lc: make_tag(perm(t * bt + lr), grp(t), f * bf + lc)
-    hg = p.matmul(x, wg, retag=h_tag)
-    hu = p.matmul(x, wu, retag=h_tag)
-    act = p.elementwise("swiglu", hg, hu)       # tags merge (equal) -> keep
-
-    # expert pairing of the down projection
-    f_row = (f * bf + bf // 2) if inject_bug == "down_f_offset" else f * bf
-    wd = p.load("Wd", (grp(t) * DF + f_row, 0), (bf, DM))
-    # bind act's f coordinate with Wd's within-expert row; compare the
-    # (f coordinate, expert) pair — catches both offset and group bugs.
-    def wd_tag(r, c):  # explicit tag fn: (within-expert row, expert, col)
-        return make_tag(r % DF, r // DF, c)
-    p.tensors["Wd"].tag_fn = wd_tag
-    p.assert_conform(act, wd, bind=((1, 0),),
-                     components=((2, 1), (0, 1)))
-
-    if inject_bug == "y_depends_f":
-        y_tag = lambda lr, lc: make_tag(perm(t * bt + lr), Expr.of(f), lc)
-    else:
-        y_tag = lambda lr, lc: make_tag(perm(t * bt + lr), lc)
-    y = p.alloc((bt, DM), "f32")
-    p.matmul(act, wd, accumulate=True, acc=y, retag=y_tag)
-    p.assert_stable(y, "f")
-
-    if cfg.fuse_gate:
-        gperm = perm_bad if inject_bug == "gate_unpermuted" else perm
-        gt = p.gather_rows("G", lambda lr: gperm(t * bt + lr), 0, bt, 1,
-                           dtype="f32")
-        # gate row must be the same routed slot as the activation row
-        p.assert_conform(gt, y, bind=((0, 0),), components=((0,), (0,)))
-        p.update(y, gt, fn="scale_by_gate", retag=y_tag)
-
-    # combine: scatter back through the SAME permutation; component 0 of the
-    # value's tag must equal the destination row (identity invariant)
-    out_perm = perm_bad if inject_bug == "combine_other_table" else perm
-    p.scatter_rows("Y", y, lambda lr: out_perm(t * bt + lr), 0,
-                   conform_component=0)
-    return p
-
-
-# ===========================================================================
-# Flash-decode (split-KV serving attention) — beyond-paper extension of the
-# flash-attention family (FlashDecoding-style)
-# ===========================================================================
-
-
-@dataclass(frozen=True)
-class FlashDecodeProblem:
-    batch: int
-    q_heads: int
-    kv_heads: int
-    seq_kv: int            # cache length
-    head_dim: int
-    dtype: str = "bf16"
-
-    @property
-    def group(self) -> int:
-        return self.q_heads // self.kv_heads
-
-
-@dataclass(frozen=True)
-class FlashDecodeConfig:
-    kv_splits: int = 8     # parallel KV partitions (occupancy for Sq=1)
-
-    def name(self) -> str:
-        return f"fdec[s={self.kv_splits}]"
-
-
-def build_flash_decode_program(cfg: FlashDecodeConfig,
-                               prob: FlashDecodeProblem,
-                               *, inject_bug: Optional[str] = None
-                               ) -> dsl.TileProgram:
-    """Split-KV decode: each grid step (bh, s) reduces its KV span to a
-    partial (m, l, o); the XLA epilogue merges partials.
-
-    Invariants: GQA head mapping (as in the prefill family), **KV-range
-    partition** — the spans read across splits must tile the cache exactly
-    once (modeled by staging each span into a read-marker tensor and
-    reusing the coverage/disjointness machinery), and partial-output
-    honesty (each split's partial carries its own KV-span tag).
-    Injectable bugs: "wrong_kv_head", "split_overlap" (half-stride spans
-    double-read the head of the cache), "partial_mislabel" (partial stored
-    at a different split index)."""
-    p = dsl.TileProgram(cfg.name())
-    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
-    S, D = prob.seq_kv, prob.head_dim
-    G = prob.group
-    ns = cfg.kv_splits
-    span = cdiv(S, ns)
-
-    bh = p.add_grid("bh", B * H, "parallel")
-    s = p.add_grid("s", ns, "parallel")
-
-    p.tensor("Q", (B, H, 1, D), prob.dtype,
-             tag_fn=lambda b, h, r, c: make_tag(b, h // G, r, c))
-    p.tensor("K", (B, HK, S, D), prob.dtype)
-    p.tensor("V", (B, HK, S, D), prob.dtype)
-    # read-marker: records which cache rows each split consumed
-    p.tensor("KV_READ", (B * H, S, D), prob.dtype, kind="output")
-    p.tensor("O_PART", (B * H, ns, D), "f32", kind="output")
-
-    b = bh // H
-    h = bh % H
-    hk = (bh % H) if inject_bug == "wrong_kv_head" else (bh % H) // G
-    if inject_bug == "wrong_kv_head" and H == HK:
-        raise ValueError("wrong_kv_head requires GQA")
-
-    k0 = s * (span // 2) if inject_bug == "split_overlap" else s * span
-
-    q = p.squeeze(p.load("Q", (b, h, 0, 0), (1, 1, 1, D)), keep=(2,))
-    k = p.squeeze(p.load("K", (b, hk, k0, 0), (1, 1, span, D)))
-    v = p.squeeze(p.load("V", (b, hk, k0, 0), (1, 1, span, D)))
-
-    # GQA pairing (components: batch, kv-group, head-dim coordinate)
-    p.assert_conform(q, k, bind=((1, 1),), components=((0, 1, 3),
-                                                       (0, 1, 3)))
-    # KV-range partition: the spans must tile the cache exactly once
-    p.store("KV_READ", k, (bh, k0, 0))
-    p.assert_disjoint_writes("KV_READ", axes=("bh", "s"))
-    p.assert_coverage("KV_READ")
-
-    st = p.matmul(q, p.transpose(k),
-                  retag=lambda i, j: make_tag(b, hk, k0 + j))
-    pt = p.elementwise("exp_sub_m", st,
-                       retag=lambda i, j: make_tag(b, hk, k0 + j))
-    p.assert_conform(pt, v, bind=((1, 0),), components=((0, 1, 2),
-                                                        (0, 1, 2)))
-    o_tag = lambda i, c: make_tag(bh, Expr.of(s), c)
-    o = p.matmul(pt, v, retag=o_tag)
-    s_out = ((s + 1) % ns) if inject_bug == "partial_mislabel" else s
-    p.store("O_PART", o, (bh, s_out, 0))
-    # store-slot honesty: a permuted slot assignment is still disjoint AND
-    # covering, so coverage alone cannot catch it — the value's split tag
-    # must equal the slot it lands in (the combine reads slot s expecting
-    # split s's statistics)
-    slot = p.elementwise("slot_id", o,
-                         retag=lambda i, c: make_tag(bh, Expr.of(s_out), c))
-    p.assert_conform(o, slot, bind=((0, 0), (1, 1)),
-                     components=((0, 1), (0, 1)))
-    p.assert_disjoint_writes("O_PART", axes=("bh", "s"))
-    p.assert_coverage("O_PART")
-    return p
-
-
-def verify_flash_decode(cfg: FlashDecodeConfig, prob: FlashDecodeProblem,
-                        *, inject_bug: Optional[str] = None
-                        ) -> VerifyResult:
-    prog = build_flash_decode_program(cfg, prob, inject_bug=inject_bug)
-    span = cdiv(prob.seq_kv, cfg.kv_splits)
-    structural = []
-    if span * cfg.kv_splits != prob.seq_kv:
-        structural.append(StructuralIssue(
-            "masking", f"kv_splits {cfg.kv_splits} does not tile the "
-                       f"cache ({prob.seq_kv}) — tail span must be masked"))
-    structural += check_alignment("K", (span, prob.head_dim), prob.dtype)
-    structural += check_vmem(
-        {"K": ((span, prob.head_dim), prob.dtype),
-         "V": ((span, prob.head_dim), prob.dtype)},
-        scratch={"o": ((8, prob.head_dim), "f32")})
-    return verify_program(prog, structural)
-
-
-# ===========================================================================
-# SSD (Mamba-2 state-space dual) — beyond-paper fourth family
-# ===========================================================================
-
-
-@dataclass(frozen=True)
-class SSDProblem:
-    batch_heads: int          # B · H
-    seq: int
-    head_dim: int             # P
-    d_state: int              # N
-    dtype: str = "f32"
-
-
-@dataclass(frozen=True)
-class SSDConfig:
-    chunk: int = 128
-
-    def name(self) -> str:
-        return f"ssd[q={self.chunk}]"
-
-
-def build_ssd_program(cfg: SSDConfig, prob: SSDProblem,
-                      *, inject_bug: Optional[str] = None
-                      ) -> dsl.TileProgram:
-    """One (bh, c) grid step of the SSD chunk scan.
-
-    Invariants: the dual-attention contraction pairs C and B rows of the
-    SAME chunk (intra-chunk conformity over (bh, position, state-dim));
-    the carried (N, P) state must be stable across the sequential chunk
-    axis; y coverage.  Injectable bugs: "b_chunk_offset" (B read from the
-    neighboring chunk), "state_depends_c" (carried state tagged with the
-    chunk index), "xb_mismatch" (x rows from a different chunk than B).
-    """
-    p = dsl.TileProgram(cfg.name())
-    BH, S, P, N = prob.batch_heads, prob.seq, prob.head_dim, prob.d_state
-    q = cfg.chunk
-    nc = cdiv(S, q)
-
-    bh = p.add_grid("bh", BH, "parallel")
-    c = p.add_grid("c", nc, "arbitrary")
-
-    p.tensor("X", (BH, S, P), prob.dtype)
-    p.tensor("DA", (BH, S), prob.dtype)
-    p.tensor("B", (BH, S, N), prob.dtype)
-    p.tensor("C", (BH, S, N), prob.dtype)
-    p.tensor("Y", (BH, S, P), prob.dtype, kind="output")
-
-    c_b = (c + 1) % nc if inject_bug == "b_chunk_offset" else c
-    c_x = (c + 1) % nc if inject_bug == "xb_mismatch" else c
-
-    xt = p.squeeze(p.load("X", (bh, c_x * q, 0), (1, q, P)))
-    bt = p.squeeze(p.load("B", (bh, c_b * q, 0), (1, q, N)))
-    ct = p.squeeze(p.load("C", (bh, c * q, 0), (1, q, N)))
-
-    # dual-attention pairing: scores = C·Bᵀ contracts the state dim; the
-    # operands must agree on (bh, state coordinate) — identity tags are
-    # (bh, pos, n), bind n, compare components (0, 2)
-    p.assert_conform(ct, bt, bind=((1, 1),), components=((0, 2), (0, 2)))
-    s_tag = lambda i, j: make_tag(bh, c * q + i, c_b * q + j)
-    s = p.matmul(ct, p.transpose(bt), retag=s_tag)
-    # retag honesty: declared score columns must be B's actual positions
-    p.assert_conform(bt, s, bind=((0, 1),), components=((1,), (2,)))
-    # chunk locality: score columns must be the SAME chunk as the x rows
-    # they multiply (the SSD intra-chunk contraction)
-    p.assert_conform(s, xt, bind=((1, 0),), components=((2,), (1,)))
-    y_tag = lambda i, pp: make_tag(bh, c * q + i, pp)
-    y = p.matmul(s, xt, retag=y_tag)
-
-    # carried state: (N, P) scratch, stable across the chunk axis
-    state = p.alloc((N, P), "f32")
-    if inject_bug == "state_depends_c":
-        st_tag = lambda n, pp: make_tag(bh, Expr.of(c), n, pp)
-    else:
-        st_tag = lambda n, pp: make_tag(bh, n, pp)
-    p.update(state, fn="decay_accumulate", retag=st_tag)
-    p.assert_stable(state, "c")
-
-    p.store("Y", y, (bh, c * q, 0))
-    # streaming output: the sequential chunk axis legitimately partitions Y
-    # (unlike an accumulated GEMM output) — include it as distinguishing
-    p.assert_disjoint_writes("Y", axes=("bh", "c"))
-    p.assert_coverage("Y")
-    return p
-
-
-def verify_ssd(cfg: SSDConfig, prob: SSDProblem,
-               *, inject_bug: Optional[str] = None) -> VerifyResult:
-    prog = build_ssd_program(cfg, prob, inject_bug=inject_bug)
-    structural = []
-    structural += check_alignment("X", (cfg.chunk, prob.head_dim),
-                                  prob.dtype,
-                                  full_shape=(prob.seq, prob.head_dim))
-    structural += check_vmem(
-        {"X": ((cfg.chunk, prob.head_dim), prob.dtype),
-         "B": ((cfg.chunk, prob.d_state), prob.dtype),
-         "C": ((cfg.chunk, prob.d_state), prob.dtype)},
-        scratch={"state": ((prob.d_state, prob.head_dim), "f32"),
-                 "scores": ((cfg.chunk, cfg.chunk), "f32")})
-    structural += check_masking("S", (prob.seq,), (cfg.chunk,),
-                                masked_dims=(0,))
-    return verify_program(prog, structural)
-
-
-def verify_moe(cfg: MoEConfig, prob: MoEProblem,
-               *, inject_bug: Optional[str] = None) -> VerifyResult:
-    prog = build_moe_program(cfg, prob, inject_bug=inject_bug)
-    structural = []
-    structural += check_alignment("X", (cfg.block_t, prob.d_model),
-                                  prob.dtype)
-    structural += check_alignment("W", (prob.d_model, cfg.block_f),
-                                  prob.dtype)
-    structural += check_vmem(
-        {"X": ((cfg.block_t, prob.d_model), prob.dtype),
-         "Wg": ((prob.d_model, cfg.block_f), prob.dtype),
-         "Wu": ((prob.d_model, cfg.block_f), prob.dtype),
-         "Wd": ((cfg.block_f, prob.d_model), prob.dtype)},
-        scratch={"h": ((cfg.block_t, cfg.block_f), "f32"),
-                 "y": ((cfg.block_t, prob.d_model), "f32")})
-    structural += check_masking("routed", (prob.routed_rows,),
-                                (cfg.block_t,), masked_dims=(0,))
-    return verify_program(prog, structural)
+from .families.flash_attention import (FlashAttentionConfig,
+                                       FlashAttentionProblem,
+                                       build_flash_attention_program,
+                                       verify_flash_attention)
+from .families.flash_decode import (FlashDecodeConfig, FlashDecodeProblem,
+                                    build_flash_decode_program,
+                                    verify_flash_decode)
+from .families.gemm import (GemmConfig, GemmProblem, build_gemm_program,
+                            verify_gemm)
+from .families.moe import (MoEConfig, MoEProblem, build_moe_program,
+                           verify_moe)
+from .families.ssd import (SSDConfig, SSDProblem, build_ssd_program,
+                           verify_ssd)
+
+__all__ = [
+    "GemmConfig", "GemmProblem", "build_gemm_program", "verify_gemm",
+    "FlashAttentionConfig", "FlashAttentionProblem",
+    "build_flash_attention_program", "verify_flash_attention",
+    "FlashDecodeConfig", "FlashDecodeProblem",
+    "build_flash_decode_program", "verify_flash_decode",
+    "MoEConfig", "MoEProblem", "build_moe_program", "verify_moe",
+    "SSDConfig", "SSDProblem", "build_ssd_program", "verify_ssd",
+]

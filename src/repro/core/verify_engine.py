@@ -1,0 +1,400 @@
+"""Staged, caching verification engine — the dense-feedback fast path.
+
+The paper's claim (§5–6) is that *cheap, dense* compile-time feedback from
+data-flow invariants is what lets an agent coordinate tightly coupled
+optimizations.  The legacy ``verify_<family>`` entry points re-prove every
+assertion from scratch on every call; inside the ICRL hillclimb that means
+re-discharging identical quasi-affine constraints dozens of times per
+episode.  This engine makes the feedback loop incremental:
+
+**Stage 1 — structural** (:mod:`repro.core.kernelspec`): lane/sublane
+alignment, VMEM fit, masking obligations.  Pure arithmetic on the config;
+no program build.
+
+**Stage 2 — tag propagation** (:mod:`repro.core.analysis`): build the tile
+program and run the abstract interpreter.  Config-validity errors surface
+here as ``build`` feedback; lattice-level violations (⊤ reaching a use
+site, tag arity mismatches) are decided without the solver.
+
+**Stage 3 — solver discharge** (:mod:`repro.core.solver`), memoized: every
+quantified obligation is keyed by the **canonical normal form of its
+difference expressions** (the :class:`repro.core.tags.Expr` normal form,
+with analyzer-deterministic variable naming).  After a config mutation only
+the assertions whose tag expressions actually changed miss the cache —
+e.g. flipping ``stagger_k`` re-proves the K-index bijection but reuses the
+coverage, alignment-conformity and accumulator proofs verbatim.
+
+Results are returned as structured :class:`Feedback` objects (stage,
+assertion id, counterexample, repair hint) rather than strings, so the
+harness can route counterexamples into targeted repair prompts.
+
+A whole-result memo (keyed on the frozen (family, config, problem, bug)
+tuple) additionally makes exact re-verification — repairs, sideways moves,
+revisited configs — free.  ``stats()`` reports verify calls, result hits,
+constraint hits/misses and solver discharges; ``benchmarks/fig2_ablation.py``
+prints them next to the wall-clock win.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .analysis import Analyzer, CheckReport, Discharger
+from .families import get_family
+from .kernelspec import VerifyResult
+from .solver import (Counterexample, ProofResult, prove_injective,
+                     prove_tags_distinct, prove_tags_equal, prove_zero)
+from .tags import BOT, TOP, Expr, TagValue, Var
+
+
+# ---------------------------------------------------------------------------
+# Structured feedback
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Feedback:
+    """One verification finding, routed back to the agent.
+
+    ``stage``: "structural" | "build" | "analysis" | "solver".
+    ``assertion_id``: the program point / assertion label.
+    ``counterexample``: concrete witness when the solver found one.
+    ``repair_hint``: what kind of fix the violation calls for.
+    """
+
+    stage: str
+    assertion_id: str
+    ok: bool
+    counterexample: Optional[Counterexample] = None
+    repair_hint: str = ""
+    detail: str = ""
+
+    def render(self) -> str:
+        mark = "PASS" if self.ok else "FAIL"
+        s = f"[{self.stage}] {mark} {self.assertion_id}"
+        if self.detail:
+            s += f" — {self.detail}"
+        if self.counterexample is not None:
+            s += f"\n    {self.counterexample.render()}"
+        if self.repair_hint:
+            s += f"\n    hint: {self.repair_hint}"
+        return s
+
+
+_HINTS = (
+    ("assert_injective", "the reduction index expression replays or skips "
+                         "blocks — restore the bijection over the "
+                         "reduction range"),
+    ("assert_stable", "the carried value's tag depends on the sequential "
+                      "axis — retag with output coordinates only, or "
+                      "reset the buffer each step"),
+    ("assert_disjoint", "two parallel grid steps write the same block — "
+                        "make the store origin injective in the parallel "
+                        "axes"),
+    ("assert_coverage", "the grid under-covers the output — check cdiv()/"
+                        "grid extents and store origins"),
+    ("assert_nonconform", "concurrent producers must stay separated — "
+                          "their tags coincide on some element"),
+    ("scatter", "the combine must scatter through the same permutation "
+                "table the dispatch gathered with"),
+    ("assert_conform", "re-derive the operand index map at this use site — "
+                       "the paired elements carry different coordinates"),
+    ("conform", "re-derive the operand index map at this use site — "
+                "the paired elements carry different coordinates"),
+)
+
+
+def repair_hint_for(assertion_id: str, res: ProofResult) -> str:
+    if res.ok:
+        return ""
+    ce = res.counterexample
+    if ce is not None and "⊤" in (ce.detail or ""):
+        return ("a value reached this point with conflicting provenance "
+                "(⊤) — add a retag declaring its semantics, or reset the "
+                "scratch buffer per step")
+    for needle, hint in _HINTS:
+        if needle in assertion_id:
+            return hint
+    return "re-check the index maps feeding this assertion"
+
+
+def _stage_of(res: ProofResult) -> str:
+    """Classify a discharged assertion: lattice-level verdicts (⊤/⊥ or
+    arity, decided during propagation) vs quantified solver proofs."""
+    ce = res.counterexample
+    if ce is not None and ("⊤" in (ce.detail or "")
+                           or "arity" in (ce.detail or "")):
+        return "analysis"
+    if res.ok and "⊥" in (res.note or ""):
+        return "analysis"
+    return "solver"
+
+
+# ---------------------------------------------------------------------------
+# Normalized-constraint memo cache
+# ---------------------------------------------------------------------------
+
+class ConstraintCache:
+    """Memo of discharged proof obligations, keyed by the canonical normal
+    form of the obligation's expressions.
+
+    :class:`repro.core.tags.Expr` is already a normal form (sorted linear
+    combination over atoms with reduced ``//``/``%`` structure), and the
+    analyzer names variables deterministically per run, so two builds of
+    the same — or a partially mutated — program produce *syntactically
+    identical* expressions for every unchanged assertion.  The key is
+    therefore the expression tuple itself (hashable), plus the obligation
+    kind.  Verdicts depend only on the expressions and their variables'
+    extents (both captured by the key), never on which config produced
+    them, so sharing across configs is sound.
+    """
+
+    # bound on retained verdicts: FIFO-evict beyond this (an optimization
+    # loop's working set is a few hundred constraints; the bound only
+    # matters for long-lived serving processes)
+    MAX_ENTRIES = 8192
+
+    def __init__(self):
+        self._memo: Dict[tuple, ProofResult] = {}
+        self.lookups = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._memo)
+
+    def discharge(self, key: tuple, thunk, *,
+                  program_point: str = "") -> ProofResult:
+        self.lookups += 1
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.hits += 1
+            return self._restamp(hit, program_point)
+        self.misses += 1
+        res = thunk()
+        if len(self._memo) >= self.MAX_ENTRIES:
+            self._memo.pop(next(iter(self._memo)))
+        self._memo[key] = res
+        return res
+
+    @staticmethod
+    def _restamp(res: ProofResult, program_point: str) -> ProofResult:
+        """A cached verdict may have been proven at a *different* program
+        point (two assertions normalizing to the same constraint); re-stamp
+        the counterexample so repair feedback names the caller's site."""
+        ce = res.counterexample
+        if not program_point or ce is None \
+                or ce.program_point == program_point:
+            return res
+        from dataclasses import replace
+        return replace(res, counterexample=replace(
+            ce, program_point=program_point))
+
+
+class CachingDischarger(Discharger):
+    """Routes the analyzer's proof obligations through a
+    :class:`ConstraintCache`.  Lattice-level early-outs (⊤/⊥ operands, tag
+    arity mismatches) are decided inline — they are cheaper than a cache
+    probe and their verdict is part of propagation, not solving."""
+
+    def __init__(self, cache: ConstraintCache):
+        self.cache = cache
+
+    @staticmethod
+    def _norm(diffs: Sequence[Expr]) -> Tuple[Expr, ...]:
+        # drop identically-zero components: they never affect the verdict,
+        # and removing them lets e.g. a retile that only renames a matched
+        # coordinate still hit the memo
+        return tuple(d for d in diffs if not (d.is_const and d.const == 0))
+
+    def tags_equal(self, lhs: TagValue, rhs: TagValue, *,
+                   program_point: str = "") -> ProofResult:
+        if lhs is TOP or rhs is TOP or lhs is BOT or rhs is BOT \
+                or len(lhs) != len(rhs):
+            return prove_tags_equal(lhs, rhs, program_point=program_point)
+        diffs = self._norm([l - r for l, r in zip(lhs, rhs)])
+        return self.cache.discharge(
+            ("eq", diffs),
+            lambda: prove_tags_equal(lhs, rhs,
+                                     program_point=program_point),
+            program_point=program_point)
+
+    def tags_distinct(self, lhs: TagValue, rhs: TagValue, *,
+                      program_point: str = "") -> ProofResult:
+        if lhs is TOP or rhs is TOP or lhs is BOT or rhs is BOT:
+            return prove_tags_distinct(lhs, rhs,
+                                       program_point=program_point)
+        diffs = tuple(l - r for l, r in zip(lhs, rhs))
+        return self.cache.discharge(
+            ("neq", diffs, len(lhs)),
+            lambda: prove_tags_distinct(lhs, rhs,
+                                        program_point=program_point),
+            program_point=program_point)
+
+    def zero(self, diffs: Sequence[Expr], *,
+             program_point: str = "") -> ProofResult:
+        norm = self._norm(diffs)
+        return self.cache.discharge(
+            ("zero", norm),
+            lambda: prove_zero(list(diffs), program_point=program_point),
+            program_point=program_point)
+
+    def injective(self, expr: Expr, over: Sequence[Var], *,
+                  program_point: str = "") -> ProofResult:
+        return self.cache.discharge(
+            ("inj", expr, tuple(over)),
+            lambda: prove_injective(expr, over,
+                                    program_point=program_point),
+            program_point=program_point)
+
+    def check_block(self, kind: str, key: tuple, thunk) -> ProofResult:
+        return self.cache.discharge(key, thunk)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineResult(VerifyResult):
+    """A :class:`repro.core.kernelspec.VerifyResult` extended with the
+    engine's structured feedback and provenance."""
+
+    feedback: List[Feedback] = field(default_factory=list)
+    build_error: Optional[str] = None
+    family: str = ""
+    cached: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return self.build_error is None and super().ok
+
+    @property
+    def hard_ok(self) -> bool:
+        return self.build_error is None and super().hard_ok
+
+    @property
+    def violations(self) -> List[Feedback]:
+        return [f for f in self.feedback if not f.ok]
+
+    def render(self) -> str:
+        if self.build_error is not None:
+            return (f"  BUILD-ERROR {self.family}: {self.build_error}\n"
+                    f"  VERDICT: REJECTED")
+        lines = [super().render()]
+        hints = [f for f in self.violations if f.repair_hint]
+        for f in hints:
+            lines.append(f"  HINT[{f.stage}] {f.assertion_id}: "
+                         f"{f.repair_hint}")
+        return "\n".join(lines)
+
+
+class VerificationEngine:
+    """Staged verification with a normalized-constraint memo cache and a
+    whole-result memo.  One engine instance should live as long as the
+    optimization loop it feeds — sharing it across hillclimb steps (and
+    across episodes) is what turns re-verification into cache hits."""
+
+    # FIFO bound on retained EngineResults (matches the old per-kernel
+    # lru_cache(512) gates this engine replaced; keeps long-lived serving
+    # processes from growing the memo without limit)
+    MAX_RESULTS = 512
+
+    def __init__(self, *, use_cache: bool = True,
+                 constraints: Optional[ConstraintCache] = None):
+        self.use_cache = use_cache
+        self.constraints = constraints or ConstraintCache()
+        self._results: Dict[tuple, EngineResult] = {}
+        self.verify_calls = 0
+        self.result_hits = 0
+
+    # -- the single entry point ---------------------------------------------
+    def verify(self, family: str, cfg, prob, *,
+               inject_bug: Optional[str] = None) -> EngineResult:
+        self.verify_calls += 1
+        key = (family, cfg, prob, inject_bug)
+        if self.use_cache:
+            hit = self._results.get(key)
+            if hit is not None:
+                self.result_hits += 1
+                return dataclasses.replace(hit, cached=True)
+        fam = get_family(family)
+
+        # stage 1 — structural obligations (no program build needed)
+        structural = list(fam.structural(cfg, prob))
+        feedback = [
+            Feedback("structural", f"{s.kind}", False, detail=s.message,
+                     repair_hint=_STRUCT_HINTS.get(s.kind, ""))
+            for s in structural]
+
+        # stage 2 — build + tag propagation; stage 3 — cached discharge
+        report: Optional[CheckReport] = None
+        build_error: Optional[str] = None
+        try:
+            prog = fam.build_program(cfg, prob, inject_bug=inject_bug)
+        except Exception as e:
+            build_error = str(e)
+            feedback.append(Feedback(
+                "build", f"{family}.build_program", False, detail=str(e),
+                repair_hint="the config is invalid for this problem — "
+                            "pick knob values satisfying the family's "
+                            "divisibility/shape preconditions"))
+        else:
+            discharger = (CachingDischarger(self.constraints)
+                          if self.use_cache else Discharger())
+            report = Analyzer(prog, discharger=discharger).run()
+            for label, res in report.results:
+                feedback.append(Feedback(
+                    _stage_of(res), label, res.ok,
+                    counterexample=res.counterexample,
+                    repair_hint=repair_hint_for(label, res),
+                    detail=res.note))
+
+        out = EngineResult(report, structural, feedback=feedback,
+                           build_error=build_error, family=family)
+        if self.use_cache:
+            if len(self._results) >= self.MAX_RESULTS:
+                self._results.pop(next(iter(self._results)))
+            self._results[key] = out
+        return out
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        c = self.constraints
+        return {
+            "verify_calls": self.verify_calls,
+            "result_hits": self.result_hits,
+            "constraint_lookups": c.lookups,
+            "constraint_hits": c.hits,
+            "solver_discharges": c.misses,
+            "cached_constraints": len(c),
+        }
+
+    def reset_stats(self) -> None:
+        self.verify_calls = 0
+        self.result_hits = 0
+        c = self.constraints
+        c.lookups = c.hits = c.misses = 0
+
+
+_STRUCT_HINTS = {
+    "alignment": "pad the block to the lane/sublane quanta (last dim "
+                 "%128, sublane dim %sublane(dtype))",
+    "vmem": "shrink block shapes until the double-buffered working set "
+            "fits the per-core VMEM budget",
+    "masking": "declare the non-divisible dim masked or pick a divisible "
+               "block size",
+}
+
+
+# Module-level engine shared by the validated kernel entry points
+# (repro.kernels.*.ops) — their configs repeat across jit calls, so the
+# result memo replaces the per-module lru_caches they used to carry.
+_DEFAULT: Optional[VerificationEngine] = None
+
+
+def default_engine() -> VerificationEngine:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = VerificationEngine()
+    return _DEFAULT

@@ -11,9 +11,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.invariants import (FlashAttentionConfig,
-                                   FlashAttentionProblem,
-                                   verify_flash_attention)
+from repro.core.families.flash_attention import (FlashAttentionConfig,
+                                                 FlashAttentionProblem)
+from repro.core.verify_engine import default_engine
 
 from . import ref
 from .flash_attention import flash_attention
@@ -23,10 +23,9 @@ class InvariantViolation(RuntimeError):
     pass
 
 
-@functools.lru_cache(maxsize=512)
 def _validate(cfg: FlashAttentionConfig,
               prob: FlashAttentionProblem) -> None:
-    res = verify_flash_attention(cfg, prob)
+    res = default_engine().verify("flash_attention", cfg, prob)
     if not res.hard_ok:
         raise InvariantViolation(
             f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
@@ -63,10 +62,8 @@ def _attn_bwd(cfg, causal, scale, interpret, saved, g):
 _attn.defvjp(_attn_fwd, _attn_bwd)
 
 
-@functools.lru_cache(maxsize=512)
 def _validate_decode(cfg, prob) -> None:
-    from repro.core.invariants import verify_flash_decode
-    res = verify_flash_decode(cfg, prob)
+    res = default_engine().verify("flash_decode", cfg, prob)
     if not res.hard_ok:
         raise InvariantViolation(
             f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
@@ -78,8 +75,8 @@ def mha_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """Validated split-KV decode attention.  q: (B, Hq, 1, D);
     k, v: (B, Hkv, S, D) cache; kv_len: () current length.  The jnp
     oracle is ``ref.mha_ref(..., causal=False, kv_len=...)``."""
-    from repro.core.invariants import (FlashDecodeConfig,
-                                       FlashDecodeProblem)
+    from repro.core.families.flash_decode import (FlashDecodeConfig,
+                                                  FlashDecodeProblem)
     B, Hq, _, D = q.shape
     _, Hkv, S, _ = k.shape
     cfg = cfg or FlashDecodeConfig(

@@ -1,20 +1,21 @@
 """jit'd public entry point for the GEMM family, with the ARGUS gate.
 
-A kernel config must pass compile-time invariant validation
-(:func:`repro.core.invariants.verify_gemm`) before it is allowed to lower —
-this is the framework-level integration of the paper's technique: a config
-that mispairs MXU operands, clobbers its accumulator, or under-covers the
-output is rejected *here*, with a concrete counterexample, before any
-``pallas_call``.
+A kernel config must pass compile-time invariant validation (the staged
+:class:`repro.core.verify_engine.VerificationEngine`) before it is allowed
+to lower — this is the framework-level integration of the paper's
+technique: a config that mispairs MXU operands, clobbers its accumulator,
+or under-covers the output is rejected *here*, with a concrete
+counterexample, before any ``pallas_call``.  The shared engine memoizes
+verdicts, so repeat configs (the common jit pattern) revalidate for free.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.invariants import GemmConfig, GemmProblem, verify_gemm
+from repro.core.families.gemm import GemmConfig, GemmProblem
+from repro.core.verify_engine import default_engine
 
 from . import ref
 from .gemm import gemm
@@ -24,9 +25,8 @@ class InvariantViolation(RuntimeError):
     pass
 
 
-@functools.lru_cache(maxsize=512)
 def _validate(cfg: GemmConfig, prob: GemmProblem) -> None:
-    res = verify_gemm(cfg, prob)
+    res = default_engine().verify("gemm", cfg, prob)
     if not res.hard_ok:
         raise InvariantViolation(
             f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")

@@ -2,14 +2,14 @@
 with the ARGUS gate on the kernel config."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.invariants import MoEConfig, MoEProblem, verify_moe
+from repro.core.families.moe import MoEConfig, MoEProblem
 from repro.core.kernelspec import cdiv
+from repro.core.verify_engine import default_engine
 
 from . import ref
 from .moe import compute_dispatch, grouped_ffn
@@ -19,9 +19,8 @@ class InvariantViolation(RuntimeError):
     pass
 
 
-@functools.lru_cache(maxsize=512)
 def _validate(cfg: MoEConfig, prob: MoEProblem) -> None:
-    res = verify_moe(cfg, prob)
+    res = default_engine().verify("moe", cfg, prob)
     if not res.hard_ok:
         raise InvariantViolation(
             f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")

@@ -1,12 +1,12 @@
 """Public SSD entry point with the ARGUS gate."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.invariants import SSDConfig, SSDProblem, verify_ssd
+from repro.core.families.ssd import SSDConfig, SSDProblem
+from repro.core.verify_engine import default_engine
 
 from . import ref
 from .ssd import ssd_chunk_scan
@@ -16,9 +16,8 @@ class InvariantViolation(RuntimeError):
     pass
 
 
-@functools.lru_cache(maxsize=256)
 def _validate(cfg: SSDConfig, prob: SSDProblem) -> None:
-    res = verify_ssd(cfg, prob)
+    res = default_engine().verify("ssd", cfg, prob)
     if not res.hard_ok:
         raise InvariantViolation(
             f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")

@@ -1,0 +1,96 @@
+"""Registry round-trip: every registered family drives the full pipeline
+(config/problem construction → build_program → verify) for a known-good
+and every known-bad (injected-bug) config, and the registry's auxiliary
+hooks (config dispatch, skills, cost, bug menus) are coherent."""
+import dataclasses
+
+import pytest
+
+from repro.core import dsl
+from repro.core.families import (all_families, family_for_config,
+                                 family_names, get_family)
+
+# One bug-friendly (config, problem) fixture per family: every entry in
+# the family's injectable-bug menu must apply (e.g. GQA shapes so
+# wrong_kv_head is expressible, stagger_k on so stagger_mismatch is).
+FIXTURES = {
+    "gemm": (lambda f: f.config_cls(stagger_k=True),
+             lambda f: f.problem_cls(512, 512, 1024)),
+    "flash_attention": (lambda f: f.config_cls(),
+                        lambda f: f.problem_cls(2, 8, 2, 2048, 2048, 128)),
+    "flash_decode": (lambda f: f.config_cls(kv_splits=8),
+                     lambda f: f.problem_cls(2, 8, 2, 1024, 128)),
+    "moe": (lambda f: f.config_cls(),
+            lambda f: f.problem_cls(4096, 1024, 2048, 16, 2)),
+    "ssd": (lambda f: f.config_cls(chunk=128),
+            lambda f: f.problem_cls(4, 1024, 64, 64)),
+}
+
+
+def _fixture(name):
+    fam = get_family(name)
+    mk_cfg, mk_prob = FIXTURES[name]
+    return fam, mk_cfg(fam), mk_prob(fam)
+
+
+def test_every_registered_family_has_a_fixture():
+    assert set(family_names()) == set(FIXTURES), \
+        "add a round-trip fixture for every registered family"
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+class TestRoundTrip:
+    def test_known_good_config_verifies(self, name):
+        fam, cfg, prob = _fixture(name)
+        prog = fam.build_program(cfg, prob)
+        assert isinstance(prog, dsl.TileProgram)
+        assert any(type(op).__name__.startswith("Assert")
+                   for op in prog.ops), "family declares no invariants"
+        res = fam.verify(cfg, prob)
+        assert res.hard_ok, res.render()
+
+    def test_every_injectable_bug_is_caught(self, name):
+        fam, cfg, prob = _fixture(name)
+        menu = fam.bugs_for(cfg, prob)
+        assert set(menu) <= set(fam.injectable_bugs)
+        assert menu, "fixture exposes no injectable bugs"
+        for bug in menu:
+            res = fam.verify(cfg, prob, inject_bug=bug)
+            assert not res.hard_ok, \
+                f"{name}: injected bug {bug!r} slipped through"
+
+    def test_config_dispatch_and_dataclasses(self, name):
+        fam, cfg, prob = _fixture(name)
+        assert family_for_config(cfg) is fam
+        assert dataclasses.is_dataclass(cfg) and dataclasses.is_dataclass(
+            prob)
+        # frozen, hashable configs are what make engine memo keys sound
+        first_field = dataclasses.fields(cfg)[0].name
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            setattr(cfg, first_field, 0)
+        assert hash(cfg) is not None and hash(prob) is not None
+
+    def test_cost_and_skills_hooks(self, name):
+        fam, cfg, prob = _fixture(name)
+        est = fam.cost(cfg, prob)
+        assert est.time_s > 0 and est.flops > 0
+        assert fam.skills, "family registers no skills"
+        for skill in fam.skills:
+            assert name in skill.families
+            for label, new_cfg in skill.contexts(cfg, prob):
+                assert isinstance(new_cfg, fam.config_cls), \
+                    f"{skill.name} context {label} left the config space"
+
+
+def test_registry_is_complete_and_consistent():
+    fams = all_families()
+    assert len(fams) >= 5
+    for fam in fams:
+        assert get_family(fam.name) is fam
+        assert fam.build_program is not None
+        assert fam.structural is not None and fam.cost is not None
+
+
+def test_unknown_family_raises():
+    with pytest.raises(KeyError):
+        get_family("conv3d")

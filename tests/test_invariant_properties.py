@@ -9,7 +9,11 @@ These are the system-level statements behind the paper's Table 3: the
 static layer's verdicts are trustworthy enough to act as dense rewards.
 """
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — pip install -r requirements-dev.txt")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
 from repro.core.invariants import (FlashAttentionConfig,
                                    FlashAttentionProblem, GemmConfig,

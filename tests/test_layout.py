@@ -1,6 +1,10 @@
 """Layout algebra: property tests against brute-force oracles."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.layout import (Layout, brute_force_equal, logical_divide,
                                make_contiguous, view)

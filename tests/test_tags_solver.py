@@ -2,7 +2,12 @@
 and counterexample validity."""
 import random
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.solver import (Status, prove_injective, prove_tags_distinct,
                                prove_tags_equal, prove_zero)

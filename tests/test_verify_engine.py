@@ -1,0 +1,211 @@
+"""VerificationEngine: staged feedback, cache accounting, cached-vs-cold
+verdict equivalence across mutated configs, and the ICRL-hillclimb
+solver-discharge bound (the incremental-reverification claim)."""
+import dataclasses
+
+import pytest
+
+from repro.core.families import get_family
+from repro.core.verify_engine import (ConstraintCache, Feedback,
+                                      VerificationEngine, default_engine)
+
+GEMM = get_family("gemm")
+PROB = GEMM.problem_cls(512, 512, 1024)
+
+
+def _statuses(res):
+    """(label, status) list for verdict-equivalence comparison."""
+    if res.report is None:
+        return res.build_error
+    return [(label, r.status) for label, r in res.report.results]
+
+
+class TestCacheAccounting:
+    def test_result_memo_hits_on_repeat(self):
+        eng = VerificationEngine()
+        r1 = eng.verify("gemm", GEMM.config_cls(), PROB)
+        r2 = eng.verify("gemm", GEMM.config_cls(), PROB)
+        assert not r1.cached and r2.cached
+        assert _statuses(r1) == _statuses(r2)
+        s = eng.stats()
+        assert s["verify_calls"] == 2 and s["result_hits"] == 1
+
+    def test_constraint_cache_counts_hits_and_misses(self):
+        eng = VerificationEngine()
+        eng.verify("gemm", GEMM.config_cls(), PROB)
+        s0 = eng.stats()
+        assert s0["solver_discharges"] > 0
+        assert s0["constraint_lookups"] == (s0["constraint_hits"]
+                                            + s0["solver_discharges"])
+        # a mutated config re-discharges only the changed constraints
+        eng.verify("gemm", GEMM.config_cls(stagger_k=True), PROB)
+        s1 = eng.stats()
+        new_misses = s1["solver_discharges"] - s0["solver_discharges"]
+        new_lookups = s1["constraint_lookups"] - s0["constraint_lookups"]
+        assert 0 < new_misses < new_lookups, \
+            "stagger_k flip should share most constraints with the base"
+
+    def test_cache_disabled_never_hits(self):
+        eng = VerificationEngine(use_cache=False)
+        eng.verify("gemm", GEMM.config_cls(), PROB)
+        eng.verify("gemm", GEMM.config_cls(), PROB)
+        s = eng.stats()
+        assert s["result_hits"] == 0 and s["constraint_hits"] == 0
+
+    def test_default_engine_is_shared(self):
+        assert default_engine() is default_engine()
+
+    def test_result_memo_is_bounded(self):
+        eng = VerificationEngine()
+        eng.MAX_RESULTS = 4
+        small = GEMM.problem_cls(256, 256, 256)
+        for bm in (8, 16, 32, 64, 128, 256):
+            eng.verify("gemm", GEMM.config_cls(bm=bm), small)
+        assert len(eng._results) <= 4
+
+    def test_cached_counterexample_restamped_to_callers_site(self):
+        cache = ConstraintCache()
+        from repro.core.solver import prove_zero
+        from repro.core.tags import Var
+        v = Var("v", 4)
+        diff = (v + 1) - v - 1 + 1    # == 1, violated
+        r1 = cache.discharge(("zero", (diff,)),
+                             lambda: prove_zero([diff],
+                                                program_point="site_a"),
+                             program_point="site_a")
+        r2 = cache.discharge(("zero", (diff,)), lambda: None,
+                             program_point="site_b")
+        assert cache.hits == 1
+        assert r1.counterexample.program_point == "site_a"
+        assert r2.counterexample.program_point == "site_b"
+        assert r2.status == r1.status
+
+
+class TestSharedEngineAccounting:
+    def test_optimize_kernel_reports_per_run_deltas(self):
+        from repro.core.harness import (KernelState, Planner, Selector,
+                                        Validator, optimize_kernel)
+        engine = VerificationEngine()
+        prob = GEMM.problem_cls(2048, 2048, 2048, "bf16")
+
+        def run(seed):
+            st = KernelState("gemm", GEMM.config_cls(), prob).refresh()
+            return optimize_kernel(
+                st, planner=Planner(),
+                selector=Selector(temperature=0.1, seed=seed),
+                validator=Validator(engine=engine), iterations=4)
+
+        r1, r2 = run(1), run(1)
+        # same trajectory on a shared engine: run 2's verify-call delta
+        # must not include run 1's totals
+        assert r2.verify_stats["verify_calls"] == \
+            r1.verify_stats["verify_calls"]
+
+
+def test_knowledge_base_contexts_are_config_polymorphic():
+    from repro.core.harness.knowledge import KNOWLEDGE_BASE
+    retile = next(s for s in KNOWLEDGE_BASE if s.name == "retile")
+    fa = get_family("flash_attention")
+    fa_prob = fa.problem_cls(2, 8, 2, 2048, 2048, 128)
+    steps = retile.contexts(fa.config_cls(), fa_prob)
+    assert steps and all(isinstance(c, fa.config_cls) for _, c in steps)
+    gemm_steps = retile.contexts(GEMM.config_cls(), PROB)
+    assert gemm_steps and all(isinstance(c, GEMM.config_cls)
+                              for _, c in gemm_steps)
+
+
+class TestVerdictEquivalence:
+    """Property: for every config reachable by one skill application from
+    the family default, the warm (shared-cache) verdict equals a cold
+    (fresh-engine) verdict — the cache changes cost, never answers."""
+
+    @pytest.mark.parametrize("family,prob_args", [
+        ("gemm", (512, 512, 1024)),
+        ("flash_attention", (2, 8, 2, 2048, 2048, 128)),
+        ("moe", (4096, 1024, 2048, 16, 2)),
+    ])
+    def test_cached_equals_cold_across_mutations(self, family, prob_args):
+        fam = get_family(family)
+        prob = fam.problem_cls(*prob_args)
+        base = fam.config_cls()
+        warm = VerificationEngine()
+        variants = [("base", base)]
+        for skill in fam.skills:
+            variants += skill.contexts(base, prob)
+        assert len(variants) > 3
+        for label, cfg in variants:
+            warm_res = warm.verify(family, cfg, prob)
+            cold_res = VerificationEngine().verify(family, cfg, prob)
+            assert _statuses(warm_res) == _statuses(cold_res), \
+                f"{family}:{label} warm/cold verdicts diverge"
+            assert warm_res.hard_ok == cold_res.hard_ok
+        assert warm.stats()["constraint_hits"] > 0
+
+    def test_cached_equals_cold_with_injected_bugs(self):
+        warm = VerificationEngine()
+        for bug in (None,) + GEMM.injectable_bugs:
+            cfg = GEMM.config_cls(stagger_k=(bug == "stagger_mismatch"))
+            warm_res = warm.verify("gemm", cfg, PROB, inject_bug=bug)
+            cold_res = VerificationEngine().verify("gemm", cfg, PROB,
+                                                   inject_bug=bug)
+            assert _statuses(warm_res) == _statuses(cold_res)
+            assert warm_res.hard_ok == (bug is None)
+
+
+class TestStagedFeedback:
+    def test_solver_violation_feedback_is_structured(self):
+        eng = VerificationEngine()
+        res = eng.verify("gemm", GEMM.config_cls(), PROB,
+                         inject_bug="swap_b_index")
+        bad = [f for f in res.violations if f.stage == "solver"]
+        assert bad, "expected solver-stage feedback"
+        f = bad[0]
+        assert isinstance(f, Feedback)
+        assert f.assertion_id and f.repair_hint
+        assert f.counterexample is not None and f.counterexample.env
+
+    def test_build_error_is_build_stage(self):
+        eng = VerificationEngine()
+        res = eng.verify("gemm", GEMM.config_cls(split_k=3), PROB)
+        assert res.build_error is not None and not res.hard_ok
+        assert any(f.stage == "build" for f in res.violations)
+
+    def test_structural_issue_is_structural_stage(self):
+        eng = VerificationEngine()
+        res = eng.verify("gemm", GEMM.config_cls(bk=64), PROB)
+        assert res.hard_ok and not res.ok     # warning, not violation
+        assert any(f.stage == "structural" for f in res.violations)
+
+    def test_lattice_violation_is_analysis_stage(self):
+        eng = VerificationEngine()
+        res = eng.verify("gemm", GEMM.config_cls(), PROB,
+                         inject_bug="missing_init")
+        assert not res.hard_ok
+        assert any(f.stage == "analysis" for f in res.violations)
+
+
+class TestHillclimbDischargeBound:
+    def test_icrl_hillclimb_reuses_proofs(self):
+        """Acceptance: a 10-step hillclimb on GEMM performs fewer solver
+        discharges than assertion-count × verify-calls (the no-cache
+        worst case)."""
+        from repro.core.harness import (KernelState, Planner, Selector,
+                                        Validator, optimize_kernel)
+        engine = VerificationEngine()
+        st = KernelState("gemm", GEMM.config_cls(),
+                         GEMM.problem_cls(8192, 8192, 8192, "bf16"))
+        st.refresh()
+        res = optimize_kernel(st, planner=Planner(),
+                              selector=Selector(temperature=0.1, seed=1),
+                              validator=Validator(engine=engine),
+                              iterations=10)
+        prog = GEMM.build_program(GEMM.config_cls(),
+                                  GEMM.problem_cls(8192, 8192, 8192,
+                                                   "bf16"))
+        n_assert = sum(1 for op in prog.ops
+                       if type(op).__name__.startswith("Assert"))
+        stats = res.verify_stats
+        assert stats["verify_calls"] >= 10
+        worst = n_assert * stats["verify_calls"]
+        assert 0 < stats["solver_discharges"] < worst, stats
+        assert stats["constraint_hits"] + stats["result_hits"] > 0
