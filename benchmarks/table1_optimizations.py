@@ -1,10 +1,11 @@
 """Table 1 analog: optimization coverage matrix per kernel family.
 
 The paper's Table 1 lists which optimizations each system implements; here
-the columns are this framework's three kernel families and the rows are the
-knowledge-base skills (with their Table-1 tier and TPU adaptation notes),
-marked ✓ when the family's config space + invariant templates support them.
-Emitted from the live KB so the table can never drift from the code.
+the columns are this framework's registered kernel families and the rows
+are the knowledge-base skills (with their Table-1 tier and TPU adaptation
+notes), marked ✓ when the family's config space + invariant templates
+support them.  Emitted from the live KB and the live registry so the
+table can never drift from the code.
 """
 from __future__ import annotations
 
@@ -12,9 +13,10 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.core.families import family_names  # noqa: E402
 from repro.core.harness.knowledge import KNOWLEDGE_BASE  # noqa: E402
 
-FAMILIES = ("gemm", "flash_attention", "moe", "ssd")
+FAMILIES = family_names()
 
 
 def rows():

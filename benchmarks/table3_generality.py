@@ -1,8 +1,9 @@
 """Table 3 / §9.4 analog: generality + the effect of data-flow invariants.
 
-A 60-problem suite across the three families (varying shape regimes —
-square/skinny/tall GEMMs, GQA/MQA attention at several lengths, MoE widths)
-is optimized by the harness under the *fault model* (the lowering agent
+An 80-problem suite across five families (varying shape regimes —
+square/skinny/tall GEMMs, GQA/MQA attention at several lengths, MoE
+widths, per-group-quantized GEMMs, paged-decode batches/contexts) is
+optimized by the harness under the *fault model* (the lowering agent
 mis-implements intrusive rewrites at the paper's observed rates).  Two
 arms:
 
@@ -81,6 +82,27 @@ def build_suite():
                             (2048, 2048, 1024, 16, 8),
                             (4096, 4096, 512, 64, 4)]:
         tasks.append(_task("moe", t, dm, df, e, k, "bf16"))
+    # 10 quantized GEMM problems (serving int8 matmuls, per-group scales)
+    for m, n, k, g in [(4096, 4096, 4096, 128), (8192, 8192, 8192, 128),
+                       (1024, 8192, 4096, 256), (8192, 1024, 4096, 256),
+                       (512, 4096, 8192, 128), (4096, 512, 8192, 512),
+                       (2048, 2048, 2048, 128), (16384, 2048, 1024, 128),
+                       (2048, 16384, 1024, 256), (1024, 1024, 16384, 512)]:
+        tasks.append(_task("quant_gemm", m, n, k, g, "i8"))
+    # 10 paged-attention decode problems (batch × GQA × context × paging)
+    for b, hq, hkv, s, ps, pool, d in [
+            (32, 8, 1, 8192, 128, 2304, 128),
+            (64, 8, 1, 4096, 128, 2248, 128),
+            (16, 16, 2, 16384, 128, 2168, 128),
+            (8, 32, 8, 8192, 256, 328, 128),
+            (128, 8, 1, 2048, 128, 2104, 128),
+            (4, 64, 8, 32768, 128, 1160, 128),
+            (32, 16, 4, 8192, 256, 1088, 64),
+            (16, 8, 8, 4096, 128, 600, 128),
+            (64, 16, 2, 1024, 64, 1056, 128),
+            (8, 8, 1, 65536, 512, 1064, 128)]:
+        tasks.append(_task("paged_attention", b, hq, hkv, s, ps, pool, d,
+                           "bf16"))
     return tasks
 
 

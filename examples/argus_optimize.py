@@ -4,12 +4,15 @@
         --iterations 20 [--run-kernels]
 
 Runs the agentic harness (planner -> selector -> lowering -> validator,
-invariant-gated) on each registered kernel family's production problem,
-printing the trajectory and writing the winning configs to
-``tuning_cache.json`` — the file the training/serving launchers consult
-for kernel configs.  Families come straight from the registry
-(:mod:`repro.core.families`): registering a new family makes it tunable
-here with no changes to this script.  ``--run-kernels`` additionally
+invariant-gated) on each registered kernel family's production problem —
+from dense GEMM and attention through MoE, SSD, quantized GEMM and
+paged-attention decode — printing the trajectory and writing the winning
+configs to ``tuning_cache.json``, the file the training/serving
+launchers consult for kernel configs.  Families come straight from the
+registry (:mod:`repro.core.families`): registering a new family makes it
+tunable here with no changes to this script.  The solver's constraint
+verdicts persist to ``constraint_cache.json`` alongside, so repeat runs
+start warm.  ``--run-kernels`` additionally
 executes every accepted candidate in Pallas interpret mode against the
 jnp oracle (slow; CI uses small shapes).
 """
@@ -25,7 +28,8 @@ from repro.core.families import all_families, get_family  # noqa: E402
 from repro.core.harness import (KernelState, LoweringAgent, Planner,
                                 Selector, Validator,
                                 optimize_kernel)  # noqa: E402
-from repro.core.verify_engine import VerificationEngine  # noqa: E402
+from repro.core.verify_engine import (ConstraintCache,
+                                      VerificationEngine)  # noqa: E402
 
 
 def main():
@@ -42,8 +46,16 @@ def main():
     if Path(args.out).exists():
         cache = json.loads(Path(args.out).read_text())
 
-    # one engine across families: repeat configs revalidate for free
-    engine = VerificationEngine()
+    # one engine across families: repeat configs revalidate for free.
+    # The constraint memo persists next to the tuning cache, so repeat
+    # tuning runs start warm (ROADMAP "solver-cache persistence").
+    constraints = ConstraintCache()
+    cache_path = Path(args.out).with_name("constraint_cache.json")
+    loaded = constraints.load(cache_path)
+    if loaded:
+        print(f"warm-started {loaded} persisted constraint verdicts "
+              f"from {cache_path}")
+    engine = VerificationEngine(constraints=constraints)
     for fam_name in fams:
         fam = get_family(fam_name)
         cfg, prob = fam.example()
@@ -68,14 +80,17 @@ def main():
         vs = res.verify_stats
         print(f"  verify: {vs.get('verify_calls', 0)} calls, "
               f"{vs.get('result_hits', 0)} result hits, "
-              f"{vs.get('constraint_hits', 0)} constraint hits, "
+              f"{vs.get('constraint_hits', 0)} constraint hits "
+              f"({vs.get('persisted_hits', 0)} from disk), "
               f"{vs.get('solver_discharges', 0)} solver discharges")
         cache[fam_name] = {"problem": dataclasses.asdict(prob),
                            "config": dataclasses.asdict(best.cfg),
                            "est_ms": res.best_time_s * 1e3,
                            "speedup": res.speedup}
     Path(args.out).write_text(json.dumps(cache, indent=2))
-    print(f"\nwrote {args.out}")
+    n = constraints.save(cache_path)
+    print(f"\nwrote {args.out} and {n} constraint verdicts to "
+          f"{cache_path}")
 
 
 if __name__ == "__main__":

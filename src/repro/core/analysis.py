@@ -311,7 +311,8 @@ class Analyzer:
                     Status.VIOLATED,
                     Counterexample({}, TOP, None,
                                    detail="⊤ reached combine scatter",
-                                   program_point=op.label))
+                                   program_point=op.label),
+                    stage="analysis")
             elif st.tag is BOT:
                 res = self.solve.tags_equal(st.tag, st.tag,
                                             program_point=op.label)
@@ -374,11 +375,13 @@ class Analyzer:
                 Status.VIOLATED,
                 Counterexample({}, TOP, None,
                                detail="⊤ accumulator (conflicting carries)",
-                               program_point=label))))
+                               program_point=label),
+                stage="analysis")))
             return
         if st.tag is BOT or g not in set(tag_vars(st.tag)):
             self.report.results.append(
-                (label, ProofResult(Status.PROVEN, note="axis-free")))
+                (label, ProofResult(Status.PROVEN, note="axis-free",
+                                    stage="analysis")))
             return
         g2 = Var(f"{g.name}__alt", g.extent)
         diffs = [e - e.subs({g: g2}) for e in st.tag]
@@ -483,6 +486,48 @@ class Analyzer:
                 seen[key] = (wi,) + point
         return ProofResult(
             Status.PROVEN, note=f"{len(seen)} distinct block origins")
+
+    def _op_AssertInRange(self, op: dsl.AssertInRange) -> None:
+        """Interval obligation: decided by the Expr normal form's range
+        bound alone — no probing, no enumeration.  This is deliberately a
+        *lattice-level* verdict (stage "analysis" in the engine): an
+        out-of-range indirection (e.g. a block table whose declared result
+        range exceeds the physical pool) is rejected before any solver
+        search could even start."""
+        lo, hi = op.expr.range()
+        if 0 <= lo and hi < op.extent:
+            self.report.results.append((op.label, ProofResult(
+                Status.PROVEN, stage="analysis",
+                note=f"interval [{lo},{hi}] ⊆ [0,{op.extent})")))
+            return
+        # try to exhibit an honest point witness at the domain corners;
+        # when none escapes (e.g. an uninterpreted table whose *declared*
+        # range is the problem), report the interval itself — never an
+        # assignment/value pair that does not actually evaluate to it
+        env, bad = None, None
+        vars_ = op.expr.vars()
+        corners = [{v: 0 for v in vars_}, {v: v.extent - 1 for v in vars_}]
+        for v in vars_:
+            c = {w: 0 for w in vars_}
+            c[v] = v.extent - 1
+            corners.append(c)
+        for cand in corners:
+            try:
+                val = op.expr.evaluate(cand)
+            except KeyError:
+                break
+            if val < 0 or val >= op.extent:
+                env, bad = cand, val
+                break
+        self.report.results.append((op.label, ProofResult(
+            Status.VIOLATED,
+            Counterexample(env or {}, bad if bad is not None
+                           else f"range [{lo},{hi}]", f"[0,{op.extent})",
+                           detail=f"interval [{lo},{hi}] escapes "
+                                  f"[0,{op.extent}) — {op.what or 'index'} "
+                                  f"out of range",
+                           program_point=op.label),
+            stage="analysis")))
 
     def _op_AssertInjective(self, op: dsl.AssertInjective) -> None:
         over = [self._axis_var[a] for a in op.axes]

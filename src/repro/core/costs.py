@@ -23,6 +23,20 @@ N_CORES = 1            # per-chip modeling; distribution handled upstream
 STAGGER_DERATE = 0.75  # unstaggered streaming keeps ~75% of HBM bw
 OCCUPANCY_GRID = 512   # grid steps needed to hide pipeline latency
 
+# Narrow-dtype MXU issue-rate multiplier: int8/fp8 operands double the
+# systolic array's effective MAC rate (v5e-class model constant).  The
+# quantized families' compute term divides by ``peak_flops(dtype)``.
+QUANT_MXU_FACTOR = {"i8": 2.0, "fp8": 2.0}
+
+# Block-table indirection breaks sequential HBM streaming into
+# page-granular bursts; paged KV reads keep this fraction of peak bw.
+PAGE_GATHER_DERATE = 0.85
+
+
+def peak_flops(dtype: str = "bf16") -> float:
+    """Effective MXU peak for the operand dtype (model constant)."""
+    return PEAK_FLOPS * QUANT_MXU_FACTOR.get(dtype, 1.0)
+
 
 def mxu_util(bm: int, bn: int, bk: int, dtype: str) -> float:
     """Fraction of MXU issue slots doing useful work for one tile matmul."""

@@ -252,6 +252,19 @@ class AssertInjective(Op):
     axes: Tuple[str, ...]
 
 
+@dataclass
+class AssertInRange(Op):
+    """Bounds obligation: an index expression must stay inside [0, extent)
+    for every assignment — e.g. a physical page produced by a block table
+    must land inside the KV pool.  Decided by pure interval arithmetic on
+    the expression's normal form (:meth:`repro.core.tags.Expr.range`), so a
+    violation is caught at the analysis stage, before any solver search."""
+
+    expr: Expr
+    extent: int
+    what: str = ""
+
+
 # ---------------------------------------------------------------------------
 # Program builder
 # ---------------------------------------------------------------------------
@@ -422,6 +435,10 @@ class TileProgram:
     def assert_injective(self, expr, axes: Sequence[str]) -> None:
         self._push(AssertInjective(Expr.of(expr), tuple(axes)),
                    f"assert_injective({','.join(axes)})")
+
+    def assert_in_range(self, expr, extent: int, what: str = "") -> None:
+        self._push(AssertInRange(Expr.of(expr), int(extent), what),
+                   f"assert_in_range({what or 'index'})")
 
     # -- info ---------------------------------------------------------------------
     def grid_extent(self) -> int:

@@ -1,0 +1,348 @@
+"""Paged-attention decode family — serving decode over a block-table-
+indexed KV cache (vLLM-style paging on TPU).
+
+At decode the KV cache lives in a pool of fixed-size physical pages;
+each sequence owns a *block table* mapping its logical pages to physical
+ones.  The kernel never sees a contiguous cache: every KV tile is
+gathered through the table.  The family models the table as an
+uninterpreted application ``bt(b·NP + lp) ∈ [0, P)`` (runtime routing
+data, like MoE's sort permutation) and ties the indirection's tag to the
+KV tiles it gathers:
+
+  * **page-bound** — the physical page index must stay inside the pool
+    (``assert_in_range``): a table whose declared result range escapes
+    the pool is rejected at the *analysis* stage, before any solver
+    search (the structural-catch guarantee for out-of-range mappings);
+  * **one table, both operands** — K and V tiles for a logical page must
+    come through the same table entry (a stale table on the V path is a
+    classic cache-update race);
+  * **GQA head mapping** — as in the dense decode family;
+  * **logical coverage** — across (bh, page-block) steps the gathered
+    pages must tile the sequence's logical range exactly once (skip /
+    replay bugs surface as coverage / disjointness counterexamples on a
+    read-marker tensor);
+  * **position honesty** — attention scores are tagged with the *logical*
+    token position (what masking/RoPE consume); computing positions from
+    the physical page index is caught by conformity with the gathered
+    tile's logical tag;
+  * **carried-output stability** — the online-softmax accumulator must
+    not depend on the sequential page axis.
+
+The oracle (``reference_check``) runs the Pallas kernel in interpret
+mode against *dense* decode attention on the table-flattened cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from .. import dsl
+from ..costs import (CostEstimate, HBM_BW, PAGE_GATHER_DERATE, PEAK_FLOPS,
+                     occupancy)
+from ..kernelspec import (DTYPE_BYTES, StructuralIssue, cdiv,
+                          check_alignment, check_vmem)
+from ..tags import Expr, app, make_tag
+from .base import KernelFamily, generic_skill, register
+
+
+@dataclass(frozen=True)
+class PagedAttentionProblem:
+    batch: int
+    q_heads: int
+    kv_heads: int
+    seq_kv: int               # logical tokens per sequence
+    page_size: int            # tokens per physical page
+    pool_pages: int           # physical pages in the KV pool
+    head_dim: int
+    dtype: str = "bf16"
+
+    @property
+    def group(self) -> int:
+        return self.q_heads // self.kv_heads
+
+    @property
+    def pages_per_seq(self) -> int:
+        return cdiv(self.seq_kv, self.page_size)
+
+
+@dataclass(frozen=True)
+class PagedAttentionConfig:
+    """Tunable knobs (the harness' action space for this family)."""
+
+    block_pages: int = 2      # logical pages gathered per sequential step
+
+    def name(self) -> str:
+        return f"paged[bp={self.block_pages}]"
+
+
+def build_paged_attention_program(cfg: PagedAttentionConfig,
+                                  prob: PagedAttentionProblem,
+                                  *, inject_bug: Optional[str] = None
+                                  ) -> dsl.TileProgram:
+    """Decode attention gathered through the block table.
+
+    ``inject_bug`` deliberately mis-lowers one aspect (the fault model's
+    menu; every entry must be caught).  Supported:
+    "page_oob"         — table declared with a result range larger than
+                         the pool (caught at the analysis stage by the
+                         interval check, pre-solver);
+    "v_stale_table"    — V gathered through a different (stale) table;
+    "wrong_kv_head"    — KV gathered for head h instead of h // group;
+    "page_skip"        — the sequential page grid is one block short;
+    "page_replay"      — the intra-block page offset is dropped, so each
+                         step re-gathers its first page;
+    "pos_from_physical"— score positions computed from the physical page
+                         index instead of the logical one;
+    "acc_depends_page" — the carried output tagged with the page axis.
+    """
+    if prob.seq_kv % prob.page_size != 0:
+        raise ValueError("page_size must tile seq_kv")
+    NP = prob.pages_per_seq
+    if NP % cfg.block_pages != 0:
+        raise ValueError(
+            f"block_pages {cfg.block_pages} must divide the "
+            f"{NP} pages per sequence")
+    p = dsl.TileProgram(cfg.name())
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    S, D, PS = prob.seq_kv, prob.head_dim, prob.page_size
+    P, G = prob.pool_pages, prob.group
+    nblk = NP // cfg.block_pages
+    if inject_bug == "page_skip":
+        nblk = max(1, nblk - 1)
+
+    bh = p.add_grid("bh", B * H, "parallel")
+    pg = p.add_grid("pg", nblk, "arbitrary")
+
+    p.tensor("Q", (B, H, 1, D), prob.dtype,
+             tag_fn=lambda b, h, r, c: make_tag(b, h // G, r, c))
+    # physical page pools: identity tags (page, kv head, row, col)
+    p.tensor("KP", (P, HK, PS, D), prob.dtype)
+    p.tensor("VP", (P, HK, PS, D), prob.dtype)
+    # read-marker: the logical cache rows this (bh, pg) step consumed
+    p.tensor("KV_READ", (B * H, S, D), prob.dtype, kind="output")
+    p.tensor("O", (B * H, 1, D), "f32", kind="output")
+
+    b = bh // H
+    h = bh % H
+    hk = h if inject_bug == "wrong_kv_head" else h // G
+    if inject_bug == "wrong_kv_head" and H == HK:
+        raise ValueError("wrong_kv_head requires GQA")
+
+    # the block table: logical page -> physical page, per sequence.  An
+    # out-of-range table models a mapping that can point past the pool.
+    bt_extent = P + 3 if inject_bug == "page_oob" else P
+    bt = lambda lp: app("bt", b * NP + lp, bt_extent)
+    vbt = (lambda lp: app("bt_stale", b * NP + lp, P)) \
+        if inject_bug == "v_stale_table" else bt
+
+    q = p.squeeze(p.load("Q", (b, h, 0, 0), (1, 1, 1, D)), keep=(2,))
+
+    acc = p.alloc((1, D), "f32")
+    for u in range(cfg.block_pages):
+        if inject_bug == "page_replay":
+            lp = pg * cfg.block_pages + 0   # offset dropped: page 0 again
+        else:
+            lp = pg * cfg.block_pages + u
+        phys = bt(lp)
+        # invariant 1 — page-bound: the indirection stays inside the pool
+        # (interval verdict: analysis stage, no solver)
+        p.assert_in_range(phys, P, f"physical page (u={u})")
+
+        k = p.squeeze(p.load("KP", (phys, hk, 0, 0), (1, 1, PS, D)))
+        v = p.squeeze(p.load("VP", (vbt(lp), hk, 0, 0), (1, 1, PS, D)))
+
+        # invariant 2 — GQA head mapping (q's kv-group == gathered head)
+        p.assert_conform(q, k, bind=((1, 1),), components=((1,), (1,)))
+        # invariant 3 — K and V come through the SAME table entry
+        p.assert_conform(k, v, bind=((0, 0), (1, 1)),
+                         components=((0, 1), (0, 1)))
+
+        # relabel the gathered tile with its logical position (the tag
+        # the mask/RoPE consume); identity components stay asserted
+        pos0 = lp * PS
+        k_log = p.elementwise(
+            "page_relabel", k,
+            retag=lambda r, c, _p=phys, _o=pos0: make_tag(_p, hk, _o + r, c))
+        p.assert_conform(k, k_log, bind=((0, 0), (1, 1)),
+                         components=((0, 1, 3), (0, 1, 3)))
+        v_log = p.elementwise(
+            "page_relabel", v,
+            retag=lambda r, c, _p=phys, _o=pos0: make_tag(_p, hk, _o + r, c))
+
+        # invariant 4 — logical coverage: the gathered pages must tile
+        # [0, S) exactly once across (bh, pg)
+        p.store("KV_READ", k_log, (bh, pos0, 0))
+
+        if inject_bug == "pos_from_physical":
+            st_pos = lambda i, j, _p=phys: make_tag(b, hk, _p * PS + j)
+        else:
+            st_pos = lambda i, j, _o=pos0: make_tag(b, hk, _o + j)
+        st = p.matmul(q, p.transpose(k_log), retag=st_pos)
+        # invariant 5 — position honesty: the score's declared position
+        # is the logical position of the key it was computed from
+        p.assert_conform(st, k_log, bind=((1, 0),),
+                         components=((2,), (2,)))
+
+        pt = p.elementwise("exp_sub_m", st, retag=st_pos)
+        # the weighted value consumes the same logical positions
+        p.assert_conform(pt, v_log, bind=((1, 0),),
+                         components=((1, 2), (1, 2)))
+        o_part = p.matmul(pt, v_log,
+                          retag=lambda i, c: make_tag(bh, c))
+        if inject_bug == "acc_depends_page":
+            acc_tag = lambda i, c: make_tag(bh, Expr.of(pg), c)
+        else:
+            acc_tag = lambda i, c: make_tag(bh, c)
+        p.update(acc, o_part, fn="flash_acc", retag=acc_tag)
+
+    # invariant 6 — online-softmax carry is stable across the page axis
+    p.assert_stable(acc, "pg")
+    p.assert_disjoint_writes("KV_READ", axes=("bh", "pg"))
+    p.assert_coverage("KV_READ")
+
+    p.store("O", acc, (bh, 0, 0))
+    p.assert_disjoint_writes("O", axes=("bh",))
+    p.assert_coverage("O")
+    return p
+
+
+def structural_paged_attention(cfg: PagedAttentionConfig,
+                               prob: PagedAttentionProblem):
+    issues = []
+    span = cfg.block_pages * prob.page_size
+    if prob.seq_kv % prob.page_size != 0:
+        issues.append(StructuralIssue(
+            "masking", f"page_size {prob.page_size} does not tile seq_kv "
+                       f"({prob.seq_kv}) — tail page must be masked"))
+    if prob.pool_pages < prob.batch * prob.pages_per_seq:
+        issues.append(StructuralIssue(
+            "capacity", f"pool of {prob.pool_pages} pages cannot back "
+                        f"{prob.batch} sequences × {prob.pages_per_seq} "
+                        f"pages"))
+    issues += check_alignment("KP", (prob.page_size, prob.head_dim),
+                              prob.dtype)
+    issues += check_vmem(
+        {"K": ((span, prob.head_dim), prob.dtype),
+         "V": ((span, prob.head_dim), prob.dtype),
+         "Q": ((8, prob.head_dim), prob.dtype)},
+        scratch={"o": ((8, prob.head_dim), "f32")})
+    return issues
+
+
+def paged_attention_cost(cfg: PagedAttentionConfig,
+                         prob: PagedAttentionProblem) -> CostEstimate:
+    """Memory-bound cache streaming through page-granular gathers: larger
+    page blocks amortize the indirection (approaching dense streaming),
+    smaller ones keep more grid steps in flight — the block_pages knob the
+    harness tunes."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    S, D = prob.seq_kv, prob.head_dim
+    nblk = prob.pages_per_seq // cfg.block_pages
+    flops = 4.0 * B * H * S * D
+    kv_bytes = 2 * B * HK * S * D * sz
+    table_bytes = B * prob.pages_per_seq * 4
+    # gather efficiency saturates as the per-step burst grows
+    burst = cfg.block_pages * prob.page_size * D * sz
+    eff = min(1.0, PAGE_GATHER_DERATE + 0.15 * burst / (256 * 1024))
+    util = occupancy(B * H * nblk) * 0.6      # Sq=1: MXU underfed
+    return CostEstimate(
+        compute_s=flops / (PEAK_FLOPS * util),
+        memory_s=(kv_bytes + table_bytes) / (HBM_BW * eff),
+        flops=flops, hbm_bytes=kv_bytes + table_bytes)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _page_block_steps(cfg: PagedAttentionConfig,
+                      prob: PagedAttentionProblem):
+    out = []
+    for nxt in (cfg.block_pages * 2, cfg.block_pages // 2):
+        if 1 <= nxt <= 16 and prob.pages_per_seq % nxt == 0:
+            out.append((f"block_pages={nxt}", replace(cfg, block_pages=nxt)))
+    return out
+
+
+SKILLS = (
+    generic_skill("retile", "paged_attention", _page_block_steps),
+    generic_skill("software_pipelining", "paged_attention"),
+    generic_skill("vectorized_io", "paged_attention"),
+    generic_skill("f32_vmem_accumulate", "paged_attention"),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("page_oob", "v_stale_table", "wrong_kv_head",
+                   "page_skip", "page_replay", "pos_from_physical",
+                   "acc_depends_page")
+
+
+def compatible_bugs(cfg: PagedAttentionConfig,
+                    prob: PagedAttentionProblem):
+    menu = list(INJECTABLE_BUGS)
+    if prob.q_heads == prob.kv_heads:
+        menu.remove("wrong_kv_head")
+    if cfg.block_pages < 2:
+        menu.remove("page_replay")   # a single page per step cannot replay
+    if prob.pages_per_seq // cfg.block_pages < 2:
+        menu.remove("page_skip")     # one block IS the whole range
+    return menu
+
+
+# -- reference execution (interpret mode vs the dense-decode oracle) --------
+
+def reference_check(cfg: PagedAttentionConfig,
+                    prob: PagedAttentionProblem) -> bool:
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import (paged_decode,
+                                               paged_decode_ref)
+    rng = np.random.default_rng(0)
+    B, HK, D = 2, max(prob.kv_heads, 1), min(prob.head_dim, 64)
+    H = HK * min(prob.group, 4)
+    PS = min(prob.page_size, 64)
+    NP = max(2 * cfg.block_pages, 4)
+    P = B * NP + 2
+    q = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, HK, PS, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, HK, PS, D)), jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(P)[:B * NP].reshape(B, NP), jnp.int32)
+    o = paged_decode(q, kp, vp, table, cfg=cfg, interpret=True)
+    w = paged_decode_ref(q, kp, vp, table)
+    return bool(np.allclose(np.asarray(o), np.asarray(w),
+                            rtol=2e-3, atol=2e-3))
+
+
+def _lower():
+    from repro.kernels import paged_attention
+    return paged_attention
+
+
+def _example():
+    # 32-way serving batch, GQA 8:1, 8k context in 128-token pages
+    return (PagedAttentionConfig(block_pages=2),
+            PagedAttentionProblem(32, 8, 1, 8192, 128, 2304, 128, "bf16"))
+
+
+FAMILY = register(KernelFamily(
+    name="paged_attention",
+    config_cls=PagedAttentionConfig,
+    problem_cls=PagedAttentionProblem,
+    build_program=build_paged_attention_program,
+    structural=structural_paged_attention,
+    cost=paged_attention_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    compatible_bugs=compatible_bugs,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_paged_attention(cfg: PagedAttentionConfig,
+                           prob: PagedAttentionProblem,
+                           *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

@@ -1,0 +1,314 @@
+"""Quantized (int8/fp8) GEMM kernel family — serving-shaped matmul with
+per-group dequantization scales and *scale-provenance* invariants.
+
+C = dequant(Aq @ Bq) where Aq, Bq are narrow-dtype (i8/fp8) and each
+K-group of ``prob.group`` contraction coordinates carries its own f32
+scale: SA[r, g] scales A's rows over K-group g, SB[g, c] scales B's
+columns.  The correctness hazard specific to quantized kernels is not the
+contraction itself but the *bookkeeping around the scales*: a scale
+applied to the wrong K-slice (or the wrong row/column) produces a kernel
+that is numerically plausible and silently wrong.  The family therefore
+tags the int8 product tile with the K-group it was computed from and
+asserts that every scale entering the dequant epilogue carries exactly
+that (row/column, K-group) provenance — a mismatched scale yields a
+concrete counterexample naming the grid step and the two group indices.
+
+Invariants:
+  * K-group pairing — A's and B's contraction coordinates fall in the
+    same scale group (subsumes the classic swapped-operand-index bug);
+  * scale provenance — SA's (row, group) and SB's (column, group) tags
+    must equal the product tile's declared (row/column, group) tag;
+  * dequant-before-accumulate — the f32 accumulator's tag must be stable
+    across the K axis (per-group scaling cannot be deferred to an
+    epilogue after the reduction has already merged groups);
+  * disjoint + covering output writes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from .. import dsl
+from ..costs import (CostEstimate, HBM_BW, mxu_util, occupancy,
+                     peak_flops)
+from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
+                          check_vmem)
+from ..tags import Expr, make_tag
+from .base import KernelFamily, Skill, generic_skill, register
+
+
+@dataclass(frozen=True)
+class QuantGemmProblem:
+    m: int
+    n: int
+    k: int
+    group: int = 128          # K coordinates sharing one dequant scale
+    dtype: str = "i8"         # narrow operand dtype ("i8" | "fp8")
+
+    @property
+    def n_groups(self) -> int:
+        return cdiv(self.k, self.group)
+
+
+@dataclass(frozen=True)
+class QuantGemmConfig:
+    """Tunable knobs (the harness' action space for this family)."""
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128             # must divide the scale group
+    precision: str = "f32"    # dequantized accumulator type
+
+    def name(self) -> str:
+        return f"qgemm[{self.bm}x{self.bn}x{self.bk}]"
+
+
+def build_quant_gemm_program(cfg: QuantGemmConfig, prob: QuantGemmProblem,
+                             *, inject_bug: Optional[str] = None
+                             ) -> dsl.TileProgram:
+    """Dequantizing GEMM with scale-provenance invariants.
+
+    ``inject_bug`` deliberately mis-lowers one aspect (the fault model's
+    menu; every entry must be caught).  Supported:
+    "swap_b_index"        — B loaded with (j·bk, k·bn) origin;
+    "a_scale_wrong_kslice"— SA read at the *next* K-group;
+    "a_scale_row_offset"  — SA read from row 0 instead of this i-block;
+    "b_scale_stale"       — SB pinned to group 0 (stale first group);
+    "acc_depends_k"       — product accumulated before dequant with a
+                            group-dependent tag (deferred-dequant bug);
+    "grid_short"          — M grid one block short;
+    "missing_init"        — accumulator never zero-initialized.
+    """
+    if prob.group % cfg.bk != 0:
+        raise ValueError(
+            f"bk {cfg.bk} must divide the scale group {prob.group} "
+            f"(each K tile needs a single dequant scale)")
+    p = dsl.TileProgram(cfg.name())
+    gk = prob.group // cfg.bk            # K tiles per scale group
+    mi = cdiv(prob.m, cfg.bm)
+    nj = cdiv(prob.n, cfg.bn)
+    nk = cdiv(prob.k, cfg.bk)
+    ng = prob.n_groups
+
+    if inject_bug == "grid_short":
+        mi = max(1, mi - 1)
+
+    i = p.add_grid("i", mi, "parallel")
+    j = p.add_grid("j", nj, "parallel")
+    k = p.add_grid("k", nk, "arbitrary")
+
+    # narrow operands tag their elements with (row/col, K-group): the
+    # group component is what the scale-provenance assertions compare
+    p.tensor("A", (prob.m, prob.k), prob.dtype,
+             tag_fn=lambda r, c: make_tag(r, c // prob.group))
+    p.tensor("B", (prob.k, prob.n), prob.dtype,
+             tag_fn=lambda r, c: make_tag(r // prob.group, c))
+    p.tensor("SA", (prob.m, ng), "f32")          # per (row, K-group)
+    p.tensor("SB", (ng, prob.n), "f32")          # per (K-group, col)
+    p.tensor("C", (prob.m, prob.n), "bf16", kind="output")
+
+    g = Expr.of(k) // gk                 # this K tile's scale group
+
+    a = p.load("A", (i * cfg.bm, k * cfg.bk), (cfg.bm, cfg.bk))
+    if inject_bug == "swap_b_index":
+        b = p.load("B", (j * cfg.bk, k * cfg.bn), (cfg.bk, cfg.bn))
+    else:
+        b = p.load("B", (k * cfg.bk, j * cfg.bn), (cfg.bk, cfg.bn))
+
+    # invariant 1 — K-group pairing: both operands' contraction
+    # coordinates fall in the same scale group
+    p.assert_contraction(a, b, components=((1,), (0,)))
+
+    # the int8 partial product carries its K-group provenance (component 2)
+    st = p.matmul(a, b, retag=lambda li, lj: make_tag(
+        i * cfg.bm + li, j * cfg.bn + lj, g))
+    # retag honesty: the declared group equals the loaded data's group,
+    # and the declared output column equals B's loaded column
+    p.assert_conform(a, st, bind=((0, 0),), components=((1,), (2,)))
+    p.assert_conform(b, st, bind=((1, 1),), components=((1,), (1,)))
+
+    ga = (g + 1) % ng if inject_bug == "a_scale_wrong_kslice" else g
+    row0 = Expr.of(0) if inject_bug == "a_scale_row_offset" else i * cfg.bm
+    gb = Expr.of(0) if inject_bug == "b_scale_stale" else g
+    sa = p.load("SA", (row0, ga), (cfg.bm, 1))
+    sb = p.load("SB", (gb, j * cfg.bn), (1, cfg.bn))
+
+    # invariant 2 — scale provenance: the dequant scales entering this
+    # product must carry the product's own (row/col, K-group) coordinates
+    p.assert_conform(st, sa, bind=((0, 0),), components=((0, 2), (0, 1)))
+    p.assert_conform(st, sb, bind=((1, 1),), components=((1, 2), (1, 0)))
+
+    acc = p.alloc((cfg.bm, cfg.bn), cfg.precision,
+                  zero_init=(inject_bug != "missing_init"))
+    if inject_bug == "acc_depends_k":
+        # deferred dequant: the group-tagged product is accumulated raw
+        out_tag = lambda li, lj: make_tag(i * cfg.bm + li,
+                                          j * cfg.bn + lj, g)
+    else:
+        # dequant-before-accumulate: scales absorb the group component
+        out_tag = lambda li, lj: make_tag(i * cfg.bm + li, j * cfg.bn + lj)
+    p.update(acc, st, fn="dequant_acc", retag=out_tag)
+
+    # invariant 3 — accumulator stability across the reduction axis: a
+    # group-dependent carried tag (deferred dequant) collapses to ⊤ here
+    p.assert_stable(acc, "k")
+    p.assert_conform(acc, acc, bind=((0, 0), (1, 1)))
+
+    p.store("C", acc, (i * cfg.bm, j * cfg.bn))
+    # invariants 4/5 — no clobber across parallel steps; full coverage
+    p.assert_disjoint_writes("C")
+    p.assert_coverage("C")
+    return p
+
+
+def structural_quant_gemm(cfg: QuantGemmConfig, prob: QuantGemmProblem):
+    issues = []
+    issues += check_alignment("A", (cfg.bm, cfg.bk), prob.dtype,
+                              full_shape=(prob.m, prob.k))
+    issues += check_alignment("B", (cfg.bk, cfg.bn), prob.dtype,
+                              full_shape=(prob.k, prob.n))
+    issues += check_alignment("C", (cfg.bm, cfg.bn), "bf16",
+                              full_shape=(prob.m, prob.n))
+    issues += check_vmem(
+        {"A": ((cfg.bm, cfg.bk), prob.dtype),
+         "B": ((cfg.bk, cfg.bn), prob.dtype),
+         "SA": ((cfg.bm, 1), "f32"),
+         "SB": ((1, cfg.bn), "f32"),
+         "C": ((cfg.bm, cfg.bn), "bf16")},
+        scratch={"acc": ((cfg.bm, cfg.bn), cfg.precision)})
+    issues += check_masking("A", (prob.m, prob.k), (cfg.bm, cfg.bk),
+                            masked_dims=(0, 1))
+    return issues
+
+
+def quant_gemm_cost(cfg: QuantGemmConfig,
+                    prob: QuantGemmProblem) -> CostEstimate:
+    """Narrow operands double the MXU issue rate (costs.peak_flops) and
+    halve operand traffic; the scale streams and the f32 dequant epilogue
+    ride along on the VPU."""
+    sz = DTYPE_BYTES.get(prob.dtype, 1)
+    m, n, k = prob.m, prob.n, prob.k
+    mi, nj = cdiv(m, cfg.bm), cdiv(n, cfg.bn)
+    flops = 2.0 * m * n * k
+    a_bytes = nj * m * k * sz
+    b_bytes = mi * k * n * sz
+    s_bytes = (nj * m + mi * n) * prob.n_groups * 4
+    c_bytes = m * n * 2
+    grid = mi * nj * cdiv(k, cfg.bk)
+    util = mxu_util(cfg.bm, cfg.bn, cfg.bk, prob.dtype) * occupancy(grid)
+    total = a_bytes + b_bytes + s_bytes + c_bytes
+    return CostEstimate(
+        compute_s=flops / (peak_flops(prob.dtype) * util),
+        memory_s=total / HBM_BW,
+        flops=flops, hbm_bytes=total)
+
+
+# -- skills -----------------------------------------------------------------
+
+def _block_steps(cfg: QuantGemmConfig, prob: QuantGemmProblem):
+    out = []
+    for field, cur in (("bm", cfg.bm), ("bn", cfg.bn)):
+        for nxt in (cur * 2, cur // 2):
+            if 32 <= nxt <= 1024:
+                out.append((f"{field}={nxt}", replace(cfg, **{field: nxt})))
+    for nxt in (cfg.bk * 2, cfg.bk // 2):
+        if 32 <= nxt <= prob.group and prob.group % nxt == 0:
+            out.append((f"bk={nxt}", replace(cfg, bk=nxt)))
+    return out
+
+
+def _widen_k_per_scale(cfg: QuantGemmConfig, prob: QuantGemmProblem):
+    """Grow bk toward the full scale group: fewer dequant epilogues per
+    output tile (the group bound keeps one scale per K tile)."""
+    if cfg.bk < prob.group and prob.group % (cfg.bk * 2) == 0:
+        return [(f"bk={cfg.bk * 2}", replace(cfg, bk=cfg.bk * 2))]
+    return []
+
+
+SKILLS = (
+    generic_skill("retile", "quant_gemm", _block_steps),
+    Skill("group_aligned_k", "global", ("quant_gemm",),
+          "Widen the K tile toward the scale-group width so each tile "
+          "dequantizes with a single (SA row, SB col) scale pair.",
+          "scale provenance re-proven per retile; bk | group precondition",
+          _widen_k_per_scale),
+    generic_skill("software_pipelining", "quant_gemm"),
+    generic_skill("vectorized_io", "quant_gemm"),
+    generic_skill("f32_vmem_accumulate", "quant_gemm"),
+    generic_skill("oob_guarded_loads", "quant_gemm"),
+)
+
+
+# -- fault model ------------------------------------------------------------
+
+INJECTABLE_BUGS = ("swap_b_index", "a_scale_wrong_kslice",
+                   "a_scale_row_offset", "b_scale_stale", "acc_depends_k",
+                   "grid_short", "missing_init")
+
+
+def compatible_bugs(cfg: QuantGemmConfig, prob: QuantGemmProblem):
+    menu = list(INJECTABLE_BUGS)
+    if prob.n_groups < 2:
+        # single-group scales make "wrong group" unexpressible
+        menu.remove("a_scale_wrong_kslice")
+        menu.remove("b_scale_stale")
+    if cdiv(prob.m, cfg.bm) < 2:
+        menu.remove("a_scale_row_offset")   # row 0 IS the only row block
+        menu.remove("grid_short")
+    if cdiv(prob.k, cfg.bk) < 2 and cdiv(prob.n, cfg.bn) < 2:
+        menu.remove("swap_b_index")         # swapped origin coincides
+    return menu
+
+
+# -- reference execution (interpret mode vs the jnp oracle) -----------------
+
+def reference_check(cfg: QuantGemmConfig, prob: QuantGemmProblem) -> bool:
+    import numpy as np
+    from repro.kernels.quant_gemm import (quant_matmul, quant_matmul_ref,
+                                          quantize_per_group)
+    rng = np.random.default_rng(0)
+    group = min(prob.group, 128)
+    small = QuantGemmConfig(bm=min(cfg.bm, 128), bn=min(cfg.bn, 128),
+                            bk=min(cfg.bk, group))
+    m, n, k = min(prob.m, 256), min(prob.n, 256), min(prob.k, 2 * group)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    aq, sa = quantize_per_group(a, group, axis=1)
+    bq, sb = quantize_per_group(b, group, axis=0)
+    o = quant_matmul(aq, bq, sa, sb, group=group, cfg=small,
+                     interpret=True)
+    w = quant_matmul_ref(aq, bq, sa, sb, group=group)
+    return bool(np.allclose(np.asarray(o, dtype=np.float32),
+                            np.asarray(w, dtype=np.float32),
+                            rtol=2e-2, atol=2e-2))
+
+
+def _lower():
+    from repro.kernels import quant_gemm
+    return quant_gemm
+
+
+def _example():
+    return (QuantGemmConfig(),
+            QuantGemmProblem(8192, 8192, 8192, group=128, dtype="i8"))
+
+
+FAMILY = register(KernelFamily(
+    name="quant_gemm",
+    config_cls=QuantGemmConfig,
+    problem_cls=QuantGemmProblem,
+    build_program=build_quant_gemm_program,
+    structural=structural_quant_gemm,
+    cost=quant_gemm_cost,
+    skills=SKILLS,
+    injectable_bugs=INJECTABLE_BUGS,
+    compatible_bugs=compatible_bugs,
+    reference_check=reference_check,
+    lower=_lower,
+    example=_example,
+))
+
+
+def verify_quant_gemm(cfg: QuantGemmConfig, prob: QuantGemmProblem,
+                      *, inject_bug: Optional[str] = None):
+    return FAMILY.verify(cfg, prob, inject_bug=inject_bug)

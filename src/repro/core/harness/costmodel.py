@@ -9,19 +9,23 @@ prob)`` plus backwards-compatible re-exports for the benchmarks.
 from __future__ import annotations
 
 from ..costs import (CostEstimate, HBM_BW, N_CORES, OCCUPANCY_GRID,
-                     PEAK_FLOPS, STAGGER_DERATE, mxu_util as _mxu_util,
-                     occupancy as _occupancy)
+                     PAGE_GATHER_DERATE, PEAK_FLOPS, STAGGER_DERATE,
+                     mxu_util as _mxu_util, occupancy as _occupancy,
+                     peak_flops)
 from ..families import get_family
 from ..families.flash_attention import flash_attention_cost
 from ..families.flash_decode import flash_decode_cost
 from ..families.gemm import gemm_cost
 from ..families.moe import moe_cost
+from ..families.paged_attention import paged_attention_cost
+from ..families.quant_gemm import quant_gemm_cost
 from ..families.ssd import ssd_cost
 
 __all__ = ["estimate", "CostEstimate", "PEAK_FLOPS", "HBM_BW", "N_CORES",
-           "STAGGER_DERATE", "OCCUPANCY_GRID", "gemm_cost",
-           "flash_attention_cost", "flash_decode_cost", "moe_cost",
-           "ssd_cost"]
+           "STAGGER_DERATE", "OCCUPANCY_GRID", "PAGE_GATHER_DERATE",
+           "peak_flops", "gemm_cost", "flash_attention_cost",
+           "flash_decode_cost", "moe_cost", "quant_gemm_cost",
+           "paged_attention_cost", "ssd_cost"]
 
 
 def estimate(family: str, cfg, prob) -> CostEstimate:

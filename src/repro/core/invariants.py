@@ -25,6 +25,13 @@ from .families.gemm import (GemmConfig, GemmProblem, build_gemm_program,
                             verify_gemm)
 from .families.moe import (MoEConfig, MoEProblem, build_moe_program,
                            verify_moe)
+from .families.paged_attention import (PagedAttentionConfig,
+                                       PagedAttentionProblem,
+                                       build_paged_attention_program,
+                                       verify_paged_attention)
+from .families.quant_gemm import (QuantGemmConfig, QuantGemmProblem,
+                                  build_quant_gemm_program,
+                                  verify_quant_gemm)
 from .families.ssd import (SSDConfig, SSDProblem, build_ssd_program,
                            verify_ssd)
 
@@ -35,5 +42,9 @@ __all__ = [
     "FlashDecodeConfig", "FlashDecodeProblem",
     "build_flash_decode_program", "verify_flash_decode",
     "MoEConfig", "MoEProblem", "build_moe_program", "verify_moe",
+    "QuantGemmConfig", "QuantGemmProblem", "build_quant_gemm_program",
+    "verify_quant_gemm",
+    "PagedAttentionConfig", "PagedAttentionProblem",
+    "build_paged_attention_program", "verify_paged_attention",
     "SSDConfig", "SSDProblem", "build_ssd_program", "verify_ssd",
 ]

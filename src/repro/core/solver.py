@@ -62,6 +62,10 @@ class ProofResult:
     counterexample: Optional[Counterexample] = None
     points_checked: int = 0
     note: str = ""
+    # verification stage that *decided* this obligation, set by the site
+    # that knows ("analysis" for lattice/interval verdicts); empty means
+    # a quantified solver proof.  verify_engine._stage_of reads this.
+    stage: str = ""
 
     @property
     def ok(self) -> bool:
@@ -232,14 +236,15 @@ def prove_tags_equal(lhs: TagValue, rhs: TagValue, *,
     if lhs is TOP or rhs is TOP:
         return ProofResult(Status.VIOLATED, Counterexample(
             {}, lhs, rhs, detail="⊤ reached a use site (conflicting writes)",
-            program_point=program_point))
+            program_point=program_point), stage="analysis")
     if lhs is BOT or rhs is BOT:
         # constants conform with anything (merge identity)
-        return ProofResult(Status.PROVEN, note="⊥ operand")
+        return ProofResult(Status.PROVEN, note="⊥ operand",
+                           stage="analysis")
     if len(lhs) != len(rhs):
         return ProofResult(Status.VIOLATED, Counterexample(
             {}, lhs, rhs, detail="tag arity mismatch",
-            program_point=program_point))
+            program_point=program_point), stage="analysis")
     diffs = [l - r for l, r in zip(lhs, rhs)]
     return prove_zero(diffs, program_point=program_point,
                       detail_lhs=lhs, detail_rhs=rhs)
@@ -252,11 +257,11 @@ def prove_tags_distinct(lhs: TagValue, rhs: TagValue, *,
     if lhs is TOP or rhs is TOP:
         return ProofResult(Status.VIOLATED, Counterexample(
             {}, lhs, rhs, detail="⊤ reached a separation site",
-            program_point=program_point))
+            program_point=program_point), stage="analysis")
     if lhs is BOT or rhs is BOT:
         return ProofResult(Status.VIOLATED, Counterexample(
             {}, lhs, rhs, detail="⊥ cannot be proven distinct",
-            program_point=program_point))
+            program_point=program_point), stage="analysis")
     diffs = [l - r for l, r in zip(lhs, rhs)]
     # distinct iff for all env, some component differs
     vars_ = _domain_vars(diffs)

@@ -40,12 +40,15 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import json
+from pathlib import Path
+
 from .analysis import Analyzer, CheckReport, Discharger
 from .families import get_family
 from .kernelspec import VerifyResult
-from .solver import (Counterexample, ProofResult, prove_injective,
+from .solver import (Counterexample, ProofResult, Status, prove_injective,
                      prove_tags_distinct, prove_tags_equal, prove_zero)
-from .tags import BOT, TOP, Expr, TagValue, Var
+from .tags import (AppAtom, BOT, OpAtom, TOP, Expr, TagValue, Var)
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +85,10 @@ class Feedback:
 
 
 _HINTS = (
+    ("assert_in_range", "the index expression can escape its declared "
+                        "bound — clamp the indirection table's result "
+                        "range (or fix the base/extent arithmetic) so "
+                        "every access stays inside the physical buffer"),
     ("assert_injective", "the reduction index expression replays or skips "
                          "blocks — restore the bijection over the "
                          "reduction range"),
@@ -119,15 +126,64 @@ def repair_hint_for(assertion_id: str, res: ProofResult) -> str:
 
 
 def _stage_of(res: ProofResult) -> str:
-    """Classify a discharged assertion: lattice-level verdicts (⊤/⊥ or
-    arity, decided during propagation) vs quantified solver proofs."""
+    """Classify a discharged assertion: lattice-level verdicts (⊤/⊥,
+    arity, or interval bounds — all decided during propagation without a
+    counterexample search) vs quantified solver proofs.  The deciding
+    site stamps ``ProofResult.stage``; the message sniffing below only
+    covers results reconstructed without one (e.g. verdicts loaded from
+    a persisted cache written by an older version)."""
+    if res.stage:
+        return res.stage
     ce = res.counterexample
     if ce is not None and ("⊤" in (ce.detail or "")
                            or "arity" in (ce.detail or "")):
         return "analysis"
-    if res.ok and "⊥" in (res.note or ""):
+    if res.ok and ("⊥" in (res.note or "")
+                   or (res.note or "").startswith("interval")):
         return "analysis"
     return "solver"
+
+
+# ---------------------------------------------------------------------------
+# Stable (cross-process) constraint-key serialization
+# ---------------------------------------------------------------------------
+
+def _stable_atom(a) -> str:
+    if isinstance(a, Var):
+        # extents are load-bearing: a verdict holds for exactly this
+        # domain, so the serialized key must pin them (plain repr() of a
+        # Var prints only the name)
+        return f"{a.name}#{a.extent}"
+    if isinstance(a, OpAtom):
+        return f"({a.kind} {stable_expr(a.inner)} {a.k})"
+    if isinstance(a, AppAtom):
+        return f"{a.name}#{a.extent}({stable_expr(a.inner)})"
+    return repr(a)
+
+
+def stable_expr(e: Expr) -> str:
+    """Deterministic, extent-qualified rendering of an Expr normal form —
+    identical across processes (the analyzer's per-run variable naming is
+    deterministic, and Expr.terms is sorted)."""
+    parts = [f"{c}*{_stable_atom(a)}" for a, c in e.terms]
+    parts.append(str(e.const))
+    return "+".join(parts)
+
+
+def stable_constraint_key(key: tuple) -> str:
+    """Serialize a ConstraintCache key (a nested tuple of str/int/Expr/
+    Var) into its canonical string form for on-disk persistence."""
+    out = []
+    for item in key:
+        if isinstance(item, Expr):
+            out.append(stable_expr(item))
+        elif isinstance(item, Var):
+            out.append(_stable_atom(item))
+        elif isinstance(item, tuple):
+            out.append(stable_constraint_key(item))
+        else:
+            out.append(repr(item))
+    return "(" + " ".join(out) + ")"
 
 
 # ---------------------------------------------------------------------------
@@ -153,12 +209,23 @@ class ConstraintCache:
     # loop's working set is a few hundred constraints; the bound only
     # matters for long-lived serving processes)
     MAX_ENTRIES = 8192
+    # on-disk bound (ROADMAP "solver-cache persistence"): FIFO-evict the
+    # oldest serialized verdicts beyond this when saving
+    MAX_PERSISTED = 4096
 
     def __init__(self):
         self._memo: Dict[tuple, ProofResult] = {}
+        # warm-start store loaded from disk: stable key -> (note, stage).
+        # Only PROVEN verdicts are persisted — they are the ones repeat
+        # tuning runs re-discharge, and they need no counterexample
+        # round-trip (a violation's witness is program-point-specific).
+        # Insertion order is recency (refreshed on hit), so save()'s
+        # FIFO eviction drops the least-recently-used entries.
+        self._persisted: Dict[str, Tuple[str, str]] = {}
         self.lookups = 0
         self.hits = 0
         self.misses = 0
+        self.persisted_hits = 0
 
     def __len__(self) -> int:
         return len(self._memo)
@@ -170,12 +237,60 @@ class ConstraintCache:
         if hit is not None:
             self.hits += 1
             return self._restamp(hit, program_point)
+        if self._persisted:
+            sk = stable_constraint_key(key)
+            entry = self._persisted.get(sk)
+            if entry is not None:
+                self.hits += 1
+                self.persisted_hits += 1
+                # refresh recency so save()'s eviction keeps live entries
+                self._persisted[sk] = self._persisted.pop(sk)
+                note, stage = entry
+                res = ProofResult(Status.PROVEN, note=note, stage=stage)
+                if len(self._memo) >= self.MAX_ENTRIES:
+                    self._memo.pop(next(iter(self._memo)))
+                self._memo[key] = res
+                return res
         self.misses += 1
         res = thunk()
         if len(self._memo) >= self.MAX_ENTRIES:
             self._memo.pop(next(iter(self._memo)))
         self._memo[key] = res
         return res
+
+    # -- persistence (warm-start across processes) ---------------------------
+    def save(self, path) -> int:
+        """Serialize the proven verdicts (stable keys, insertion order) to
+        ``path``, merging over what was loaded and FIFO-evicting beyond
+        :data:`MAX_PERSISTED`.  Returns the number of entries written."""
+        entries = dict(self._persisted)
+        for key, res in self._memo.items():
+            if res.ok:
+                sk = stable_constraint_key(key)
+                entries.pop(sk, None)    # refresh recency for this run
+                entries[sk] = [res.note or res.status.value, res.stage]
+        items = list(entries.items())
+        if len(items) > self.MAX_PERSISTED:
+            items = items[-self.MAX_PERSISTED:]
+        Path(path).write_text(json.dumps(
+            {"version": 1, "constraints": items}, indent=0))
+        return len(items)
+
+    def load(self, path) -> int:
+        """Load previously persisted verdicts; silently starts cold on a
+        missing or unreadable file.  Returns the number of entries newly
+        added to the store."""
+        before = len(self._persisted)
+        try:
+            data = json.loads(Path(path).read_text())
+            if data.get("version") != 1:
+                return 0
+            self._persisted.update(
+                {k: (str(note), str(stage))
+                 for k, (note, stage) in dict(data["constraints"]).items()})
+        except (OSError, ValueError, KeyError, TypeError):
+            return 0
+        return len(self._persisted) - before
 
     @staticmethod
     def _restamp(res: ProofResult, program_point: str) -> ProofResult:
@@ -303,7 +418,11 @@ class VerificationEngine:
     def __init__(self, *, use_cache: bool = True,
                  constraints: Optional[ConstraintCache] = None):
         self.use_cache = use_cache
-        self.constraints = constraints or ConstraintCache()
+        # identity check, not truthiness: a freshly warm-loaded cache has
+        # __len__() == 0 (memo empty, persisted store full) and must not
+        # be silently replaced
+        self.constraints = (constraints if constraints is not None
+                            else ConstraintCache())
         self._results: Dict[tuple, EngineResult] = {}
         self.verify_calls = 0
         self.result_hits = 0
@@ -366,6 +485,7 @@ class VerificationEngine:
             "result_hits": self.result_hits,
             "constraint_lookups": c.lookups,
             "constraint_hits": c.hits,
+            "persisted_hits": c.persisted_hits,
             "solver_discharges": c.misses,
             "cached_constraints": len(c),
         }
@@ -374,7 +494,7 @@ class VerificationEngine:
         self.verify_calls = 0
         self.result_hits = 0
         c = self.constraints
-        c.lookups = c.hits = c.misses = 0
+        c.lookups = c.hits = c.misses = c.persisted_hits = 0
 
 
 _STRUCT_HINTS = {

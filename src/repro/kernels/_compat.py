@@ -1,0 +1,16 @@
+"""jax-version compatibility for Pallas TPU symbols.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; this
+module resolves whichever name the installed jax provides so kernels
+written against the new spelling keep working on jax 0.4.x (the
+ROADMAP's "jax-version compatibility pass" migrates the older kernels
+here too).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+__all__ = ["CompilerParams"]

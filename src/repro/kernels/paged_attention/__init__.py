@@ -1,0 +1,5 @@
+from .ops import InvariantViolation, default_config, paged_decode
+from .ref import gather_cache, paged_decode_ref
+
+__all__ = ["paged_decode", "paged_decode_ref", "gather_cache",
+           "default_config", "InvariantViolation"]

@@ -1,0 +1,68 @@
+"""jit'd public entry point for paged-attention decode, with the ARGUS
+gate.
+
+A kernel config must pass compile-time validation of the block-table
+indirection invariants (the staged
+:class:`repro.core.verify_engine.VerificationEngine`) before lowering:
+an out-of-range page mapping, a stale V-path table, a wrong GQA head or
+an under-covering page grid is rejected here — with a concrete,
+stage-attributed counterexample — before any ``pallas_call``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.families.paged_attention import (PagedAttentionConfig,
+                                                 PagedAttentionProblem)
+from repro.core.verify_engine import default_engine
+
+from .paged_attention import paged_decode as _paged_decode_kernel
+from .ref import paged_decode_ref
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+def _validate(cfg: PagedAttentionConfig,
+              prob: PagedAttentionProblem) -> None:
+    res = default_engine().verify("paged_attention", cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
+                 v_pages: jnp.ndarray, table: jnp.ndarray, *,
+                 cfg: Optional[PagedAttentionConfig] = None,
+                 scale=None, interpret: bool = False,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    """Validated paged decode.  ``use_kernel=False`` falls back to the
+    dense oracle (hosts without Pallas lowering support)."""
+    if not use_kernel:
+        return paged_decode_ref(q, k_pages, v_pages, table, scale=scale)
+    B, Hq, _, D = q.shape
+    P, Hkv, PS, _ = k_pages.shape
+    NP = int(table.shape[1])
+    cfg = cfg or default_config(NP)
+    prob = PagedAttentionProblem(
+        batch=int(B), q_heads=int(Hq), kv_heads=int(Hkv),
+        seq_kv=NP * int(PS), page_size=int(PS), pool_pages=int(P),
+        head_dim=int(D), dtype=_short_dtype(q.dtype))
+    _validate(cfg, prob)
+    return _paged_decode_kernel(q, k_pages, v_pages, table, cfg=cfg,
+                                scale=scale, interpret=interpret)
+
+
+def _short_dtype(dt) -> str:
+    return {"bfloat16": "bf16", "float32": "f32"}.get(str(dt), str(dt))
+
+
+def default_config(pages_per_seq: int) -> PagedAttentionConfig:
+    """Largest page block ≤ 4 that tiles the sequence's page count."""
+    bp = 4
+    while bp > 1 and pages_per_seq % bp:
+        bp //= 2
+    return PagedAttentionConfig(block_pages=bp)

@@ -1,0 +1,30 @@
+"""Dense-decode oracle for the paged-attention family: flatten the pages
+through the block table, then plain softmax decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_cache(pages: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """(P, HK, PS, D) pool + (B, NP) table -> dense (B, HK, NP·PS, D)."""
+    g = pages[table]                       # (B, NP, HK, PS, D)
+    B, NP, HK, PS, D = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, HK, NP * PS, D)
+
+
+def paged_decode_ref(q, k_pages, v_pages, table, *, scale=None):
+    """q: (B, Hq, 1, D); pools (P, HK, PS, D); table (B, NP)."""
+    B, Hq, _, D = q.shape
+    HK = k_pages.shape[1]
+    G = Hq // HK
+    scale = scale if scale is not None else D ** -0.5
+    k = gather_cache(k_pages, table)       # (B, HK, S, D)
+    v = gather_cache(v_pages, table)
+    kq = jnp.repeat(k, G, axis=1)          # (B, Hq, S, D)
+    vq = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhqs,bhsd->bhqd", p, vq.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,6 @@
+from .ops import InvariantViolation, default_config, quant_matmul
+from .ref import quant_gemm_ref as quant_matmul_ref
+from .ref import quant_gemm_ref, quantize_per_group
+
+__all__ = ["quant_matmul", "quant_matmul_ref", "quant_gemm_ref",
+           "quantize_per_group", "default_config", "InvariantViolation"]

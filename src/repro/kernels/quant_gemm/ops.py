@@ -1,0 +1,59 @@
+"""jit'd public entry point for the quant-GEMM family, with the ARGUS gate.
+
+A kernel config must pass compile-time scale-provenance validation (the
+staged :class:`repro.core.verify_engine.VerificationEngine`) before it is
+allowed to lower: a config that pairs a dequant scale with the wrong
+K-slice, row or column is rejected here with a concrete counterexample,
+before any ``pallas_call``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.families.quant_gemm import QuantGemmConfig, QuantGemmProblem
+from repro.core.verify_engine import default_engine
+
+from .quant_gemm import quant_gemm
+from .ref import quant_gemm_ref
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+def _validate(cfg: QuantGemmConfig, prob: QuantGemmProblem) -> None:
+    res = default_engine().verify("quant_gemm", cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, sa: jnp.ndarray,
+                 sb: jnp.ndarray, *, group: int,
+                 cfg: Optional[QuantGemmConfig] = None,
+                 out_dtype=jnp.float32, interpret: bool = False,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    """Validated dequantizing GEMM.  ``use_kernel=False`` falls back to
+    the oracle (hosts without Pallas lowering support)."""
+    if not use_kernel:
+        return quant_gemm_ref(a, b, sa, sb, group=group,
+                              out_dtype=out_dtype)
+    cfg = cfg or default_config(a.shape[0], b.shape[1], a.shape[1], group)
+    prob = QuantGemmProblem(m=int(a.shape[0]), n=int(b.shape[1]),
+                            k=int(a.shape[1]), group=int(group),
+                            dtype="i8")
+    _validate(cfg, prob)
+    return quant_gemm(a, b, sa, sb, group=group, cfg=cfg,
+                      out_dtype=out_dtype, interpret=interpret)
+
+
+def default_config(m: int, n: int, k: int, group: int) -> QuantGemmConfig:
+    """Shape-adaptive default (the harness' tuned configs override this)."""
+    bk = min(128, group)
+    while group % bk:
+        bk //= 2
+    bm = 128 if m >= 128 else max(32, 1 << (m - 1).bit_length())
+    bn = 128                                # lane dim stays 128-aligned
+    return QuantGemmConfig(bm=bm, bn=bn, bk=bk)

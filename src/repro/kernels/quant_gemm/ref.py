@@ -1,0 +1,48 @@
+"""Pure-jnp oracle + per-group quantization helpers for quant GEMM."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def quantize_per_group(x, group: int, axis: int):
+    """Symmetric int8 quantization with one f32 scale per ``group``
+    coordinates along ``axis``.  Returns (q_int8, scales) with scales
+    shaped like ``x`` but with the quantized axis reduced to
+    ceil(extent/group)."""
+    x = np.asarray(x, dtype=np.float32)
+    n = x.shape[axis]
+    ng = -(-n // group)
+    pad = ng * group - n
+    if pad:
+        padding = [(0, 0)] * x.ndim
+        padding[axis] = (0, pad)
+        x = np.pad(x, padding)
+    shape = list(x.shape)
+    shape[axis:axis + 1] = [ng, group]
+    xg = x.reshape(shape)
+    amax = np.abs(xg).max(axis=axis + 1, keepdims=True)
+    scales = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(xg / scales), -127, 127).astype(np.int8)
+    q = q.reshape(list(x.shape))
+    take = [slice(None)] * x.ndim
+    take[axis] = slice(0, n)
+    return jnp.asarray(q[tuple(take)]), jnp.asarray(
+        np.squeeze(scales, axis=axis + 1))
+
+
+def _expand(scales, group: int, n: int, axis: int):
+    s = jnp.repeat(scales, group, axis=axis)
+    take = [slice(None)] * s.ndim
+    take[axis] = slice(0, n)
+    return s[tuple(take)]
+
+
+def quant_gemm_ref(a, b, sa, sb, *, group: int, out_dtype=jnp.float32):
+    """Dequantize-then-matmul in f32 (the kernel's numerics contract:
+    each element scaled by its own (row, K-group) × (K-group, col) pair)."""
+    k = a.shape[1]
+    a_f = a.astype(jnp.float32) * _expand(sa, group, k, 1)
+    b_f = b.astype(jnp.float32) * _expand(sb, group, k, 0)
+    out = jnp.dot(a_f, b_f, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)

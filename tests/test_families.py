@@ -1,7 +1,14 @@
 """Registry round-trip: every registered family drives the full pipeline
 (config/problem construction → build_program → verify) for a known-good
 and every known-bad (injected-bug) config, and the registry's auxiliary
-hooks (config dispatch, skills, cost, bug menus) are coherent."""
+hooks (config dispatch, skills, cost, bug menus) are coherent.
+
+The suite parametrizes over :func:`repro.core.families.family_names` at
+collection time, so a newly registered family gets every property below
+for free.  ``FIXTURES`` only *overrides* the default fixture (the
+family's own ``example()``) where bug-friendly shapes are needed —
+e.g. GQA head counts so ``wrong_kv_head`` is expressible, or
+``stagger_k`` on so ``stagger_mismatch`` is."""
 import dataclasses
 
 import pytest
@@ -10,9 +17,9 @@ from repro.core import dsl
 from repro.core.families import (all_families, family_for_config,
                                  family_names, get_family)
 
-# One bug-friendly (config, problem) fixture per family: every entry in
-# the family's injectable-bug menu must apply (e.g. GQA shapes so
-# wrong_kv_head is expressible, stagger_k on so stagger_mismatch is).
+# Bug-friendly (config, problem) overrides.  A family without an entry
+# here must provide an ``example()`` exposing at least one injectable
+# bug — the round-trip below enforces it either way.
 FIXTURES = {
     "gemm": (lambda f: f.config_cls(stagger_k=True),
              lambda f: f.problem_cls(512, 512, 1024)),
@@ -24,21 +31,33 @@ FIXTURES = {
             lambda f: f.problem_cls(4096, 1024, 2048, 16, 2)),
     "ssd": (lambda f: f.config_cls(chunk=128),
             lambda f: f.problem_cls(4, 1024, 64, 64)),
+    "quant_gemm": (lambda f: f.config_cls(),
+                   lambda f: f.problem_cls(512, 512, 1024, group=256)),
+    "paged_attention": (
+        lambda f: f.config_cls(block_pages=2),
+        lambda f: f.problem_cls(2, 8, 2, 1024, 128, 20, 128)),
 }
+
+ALL_FAMILIES = sorted(family_names())
 
 
 def _fixture(name):
     fam = get_family(name)
-    mk_cfg, mk_prob = FIXTURES[name]
-    return fam, mk_cfg(fam), mk_prob(fam)
+    if name in FIXTURES:
+        mk_cfg, mk_prob = FIXTURES[name]
+        return fam, mk_cfg(fam), mk_prob(fam)
+    assert fam.example is not None, \
+        f"{name}: no FIXTURES override and no example() to fall back on"
+    cfg, prob = fam.example()
+    return fam, cfg, prob
 
 
-def test_every_registered_family_has_a_fixture():
-    assert set(family_names()) == set(FIXTURES), \
-        "add a round-trip fixture for every registered family"
+def test_fixture_overrides_match_registered_families():
+    assert set(FIXTURES) <= set(ALL_FAMILIES), \
+        "FIXTURES names a family that is not registered"
 
 
-@pytest.mark.parametrize("name", sorted(FIXTURES))
+@pytest.mark.parametrize("name", ALL_FAMILIES)
 class TestRoundTrip:
     def test_known_good_config_verifies(self, name):
         fam, cfg, prob = _fixture(name)
@@ -81,10 +100,39 @@ class TestRoundTrip:
                 assert isinstance(new_cfg, fam.config_cls), \
                     f"{skill.name} context {label} left the config space"
 
+    def test_engine_feedback_is_stage_attributed(self, name):
+        """Every caught bug yields structured Feedback whose stage is one
+        of the engine's pipeline stages, with a repair hint."""
+        from repro.core.verify_engine import VerificationEngine
+        fam, cfg, prob = _fixture(name)
+        eng = VerificationEngine()
+        for bug in fam.bugs_for(cfg, prob):
+            res = eng.verify(name, cfg, prob, inject_bug=bug)
+            assert not res.hard_ok
+            assert res.violations, f"{name}:{bug} produced no feedback"
+            for f in res.violations:
+                assert f.stage in ("structural", "build", "analysis",
+                                   "solver")
+                assert f.assertion_id and f.repair_hint
+
+    def test_example_is_tunable(self, name):
+        """examples/argus_optimize.py tunes every family's example() —
+        it must verify clean and enumerate at least one skill context."""
+        fam = get_family(name)
+        if fam.example is None:
+            pytest.skip("family has no production example")
+        cfg, prob = fam.example()
+        assert isinstance(cfg, fam.config_cls)
+        assert isinstance(prob, fam.problem_cls)
+        res = fam.verify(cfg, prob)
+        assert res.hard_ok, res.render()
+        contexts = [c for s in fam.skills for c in s.contexts(cfg, prob)]
+        assert contexts, "example exposes no tuning moves"
+
 
 def test_registry_is_complete_and_consistent():
     fams = all_families()
-    assert len(fams) >= 5
+    assert len(fams) >= 7
     for fam in fams:
         assert get_family(fam.name) is fam
         assert fam.build_program is not None

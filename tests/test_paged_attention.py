@@ -1,0 +1,109 @@
+"""paged_attention family: block-table indirection invariants, the
+pre-solver out-of-range catch, fault-menu gating, and the interpret-mode
+kernel vs the dense-decode oracle."""
+import numpy as np
+import pytest
+
+from repro.core.families import get_family
+from repro.core.verify_engine import VerificationEngine
+
+FAM = get_family("paged_attention")
+CFG = FAM.config_cls(block_pages=2)
+# 2 seqs × 8 GQA heads ÷ 2 kv heads, 1024 tokens in 128-token pages,
+# 20-page pool (16 needed + slack)
+PROB = FAM.problem_cls(2, 8, 2, 1024, 128, 20, 128)
+
+
+class TestIndirectionInvariants:
+    def test_good_config_proves_all_assertions(self):
+        res = FAM.verify(CFG, PROB)
+        assert res.hard_ok, res.render()
+
+    def test_out_of_range_mapping_caught_before_the_solver(self):
+        """The acceptance property: a stale/out-of-range page mapping is
+        caught *structurally* (interval arithmetic at the analysis
+        stage), before any solver search."""
+        eng = VerificationEngine()
+        res = eng.verify("paged_attention", CFG, PROB,
+                         inject_bug="page_oob")
+        assert not res.hard_ok
+        assert res.violations
+        for f in res.violations:
+            assert f.stage == "analysis", \
+                f"page_oob leaked to stage {f.stage}"
+        assert any("out of range" in (f.counterexample.detail or "")
+                   for f in res.violations if f.counterexample)
+
+    def test_stale_v_table_yields_solver_counterexample(self):
+        eng = VerificationEngine()
+        res = eng.verify("paged_attention", CFG, PROB,
+                         inject_bug="v_stale_table")
+        assert not res.hard_ok
+        bad = [f for f in res.violations if f.stage == "solver"
+               and f.counterexample is not None]
+        assert bad and bad[0].counterexample.env
+        assert bad[0].repair_hint
+
+    def test_page_skip_and_replay_hit_the_coverage_machinery(self):
+        skip = FAM.verify(CFG, PROB, inject_bug="page_skip")
+        assert not skip.hard_ok
+        assert any("coverage" in label for label, r
+                   in skip.report.violations)
+        replay = FAM.verify(CFG, PROB, inject_bug="page_replay")
+        assert not replay.hard_ok
+        assert any("disjoint" in label for label, r
+                   in replay.report.violations)
+
+    def test_physical_position_bug_is_caught(self):
+        res = FAM.verify(CFG, PROB, inject_bug="pos_from_physical")
+        assert not res.hard_ok
+
+    def test_fault_menu_gating(self):
+        mha = FAM.problem_cls(2, 8, 8, 1024, 128, 20, 128)
+        assert "wrong_kv_head" not in FAM.bugs_for(CFG, mha)
+        single = FAM.config_cls(block_pages=1)
+        assert "page_replay" not in FAM.bugs_for(single, PROB)
+        whole = FAM.config_cls(block_pages=8)   # 8 pages = whole range
+        assert "page_skip" not in FAM.bugs_for(whole, PROB)
+
+    def test_structural_capacity_check(self):
+        tiny_pool = FAM.problem_cls(2, 8, 2, 1024, 128, 8, 128)
+        issues = FAM.structural(CFG, tiny_pool)
+        assert any(s.kind == "capacity" for s in issues)
+
+    def test_block_pages_must_tile_the_sequence(self):
+        eng = VerificationEngine()
+        res = eng.verify("paged_attention", FAM.config_cls(block_pages=3),
+                         PROB)
+        assert res.build_error is not None
+        assert any(f.stage == "build" for f in res.violations)
+
+
+class TestOracle:
+    def test_gather_cache_flattens_through_the_table(self):
+        import jax.numpy as jnp
+        from repro.kernels.paged_attention import gather_cache
+        rng = np.random.default_rng(0)
+        pages = jnp.asarray(rng.normal(size=(6, 2, 4, 8)), jnp.float32)
+        table = jnp.asarray([[4, 0, 2], [1, 5, 3]], jnp.int32)
+        dense = gather_cache(pages, table)
+        assert dense.shape == (2, 2, 12, 8)
+        np.testing.assert_array_equal(
+            np.asarray(dense[1, :, 4:8]), np.asarray(pages[5]))
+
+    @pytest.mark.slow
+    def test_interpret_mode_matches_dense_decode(self):
+        assert FAM.reference_check(CFG, PROB)
+
+    @pytest.mark.slow
+    def test_validated_entry_rejects_bad_block_pages(self):
+        import jax.numpy as jnp
+        from repro.kernels.paged_attention import (InvariantViolation,
+                                                   paged_decode)
+        q = jnp.zeros((1, 2, 1, 128), jnp.float32)
+        kp = jnp.zeros((6, 2, 128, 128), jnp.float32)
+        table = jnp.zeros((1, 4), jnp.int32)
+        with pytest.raises(InvariantViolation):
+            paged_decode(q, kp, kp, table,
+                         cfg=FAM.config_cls(block_pages=3),
+                         interpret=True)

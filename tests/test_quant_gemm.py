@@ -1,0 +1,116 @@
+"""quant_gemm family: scale-provenance invariants, stage attribution,
+cost-model semantics, and the interpret-mode kernel vs the oracle."""
+import numpy as np
+import pytest
+
+from repro.core.families import get_family
+from repro.core.verify_engine import VerificationEngine
+
+FAM = get_family("quant_gemm")
+CFG = FAM.config_cls()                                # 128³ tiles
+PROB = FAM.problem_cls(512, 512, 1024, group=256)     # 4 scale groups
+
+
+class TestScaleProvenance:
+    def test_good_config_proves_all_assertions(self):
+        res = FAM.verify(CFG, PROB)
+        assert res.hard_ok, res.render()
+
+    def test_wrong_kslice_scale_yields_concrete_counterexample(self):
+        """The acceptance property: a scale applied to the wrong K-slice
+        must produce a concrete counterexample from the verify engine."""
+        eng = VerificationEngine()
+        res = eng.verify("quant_gemm", CFG, PROB,
+                         inject_bug="a_scale_wrong_kslice")
+        assert not res.hard_ok
+        bad = [f for f in res.violations if f.counterexample is not None]
+        assert bad, "expected a counterexample, not just a verdict"
+        ce = bad[0].counterexample
+        assert ce.env, "counterexample must name a concrete grid step"
+        assert bad[0].stage == "solver"
+        assert bad[0].repair_hint
+
+    def test_scale_row_and_column_provenance_both_checked(self):
+        for bug in ("a_scale_row_offset", "b_scale_stale"):
+            res = FAM.verify(CFG, PROB, inject_bug=bug)
+            assert not res.hard_ok, f"{bug} slipped through"
+
+    def test_deferred_dequant_is_an_analysis_stage_catch(self):
+        """Accumulating the group-tagged product raw (dequant after the
+        reduction) collapses the carry to ⊤ — a lattice-level verdict."""
+        eng = VerificationEngine()
+        res = eng.verify("quant_gemm", CFG, PROB,
+                         inject_bug="acc_depends_k")
+        assert not res.hard_ok
+        assert any(f.stage == "analysis" for f in res.violations)
+
+    def test_group_must_be_tile_aligned(self):
+        """bk ∤ group is a config-validity error surfaced as build-stage
+        feedback (each K tile needs exactly one scale)."""
+        eng = VerificationEngine()
+        bad_cfg = FAM.config_cls(bk=96)
+        res = eng.verify("quant_gemm", bad_cfg, PROB)
+        assert res.build_error is not None and not res.hard_ok
+        assert any(f.stage == "build" for f in res.violations)
+
+    def test_single_group_problem_drops_group_bugs(self):
+        small = FAM.problem_cls(256, 256, 128, group=128)
+        menu = FAM.bugs_for(FAM.config_cls(), small)
+        assert "a_scale_wrong_kslice" not in menu
+        assert "b_scale_stale" not in menu
+        assert "missing_init" in menu
+
+
+class TestCostModel:
+    def test_narrow_dtype_doubles_mxu_issue_rate(self):
+        from repro.core.costs import peak_flops
+        assert peak_flops("i8") == 2 * peak_flops("bf16")
+        assert peak_flops("fp8") == 2 * peak_flops("bf16")
+
+    def test_quant_compute_beats_bf16_gemm(self):
+        gemm = get_family("gemm")
+        dense = gemm.cost(gemm.config_cls(),
+                          gemm.problem_cls(4096, 4096, 4096, "bf16"))
+        quant = FAM.cost(FAM.config_cls(),
+                         FAM.problem_cls(4096, 4096, 4096, group=128))
+        assert quant.flops == dense.flops
+        assert quant.compute_s < dense.compute_s
+        assert quant.hbm_bytes < dense.hbm_bytes
+
+    def test_group_aligned_k_skill_respects_group_bound(self):
+        skill = next(s for s in FAM.skills if s.name == "group_aligned_k")
+        steps = skill.contexts(FAM.config_cls(bk=64), PROB)
+        assert steps, "bk=64 < group=256 should offer a widening step"
+        for _, cfg in steps:
+            assert PROB.group % cfg.bk == 0 and cfg.bk <= PROB.group
+
+
+class TestKernel:
+    def test_quantize_per_group_roundtrip(self):
+        from repro.kernels.quant_gemm import quantize_per_group
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(64, 256)).astype(np.float32)
+        q, s = quantize_per_group(x, 128, axis=1)
+        assert np.asarray(q).dtype == np.int8
+        assert s.shape == (64, 2)
+        back = np.asarray(q, dtype=np.float32) * \
+            np.repeat(np.asarray(s), 128, axis=1)
+        assert np.allclose(back, x, atol=np.abs(x).max() / 100)
+
+    def test_validated_entry_rejects_bad_config(self):
+        import jax.numpy as jnp
+        from repro.kernels.quant_gemm import (InvariantViolation,
+                                              quant_matmul)
+        a = jnp.zeros((128, 256), jnp.int8)
+        b = jnp.zeros((256, 128), jnp.int8)
+        sa = jnp.ones((128, 2), jnp.float32)
+        sb = jnp.ones((2, 128), jnp.float32)
+        with pytest.raises(InvariantViolation):
+            quant_matmul(a, b, sa, sb, group=128,
+                         cfg=FAM.config_cls(bk=96), interpret=True)
+
+    @pytest.mark.slow
+    def test_interpret_mode_matches_oracle(self):
+        assert FAM.reference_check(FAM.config_cls(),
+                                   FAM.problem_cls(256, 256, 512,
+                                                   group=128))

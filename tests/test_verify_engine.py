@@ -184,6 +184,71 @@ class TestStagedFeedback:
         assert any(f.stage == "analysis" for f in res.violations)
 
 
+class TestConstraintPersistence:
+    """ROADMAP "solver-cache persistence": proven verdicts round-trip to
+    disk (stable, extent-qualified keys) so repeat tuning runs start
+    warm; the persisted store never changes an answer."""
+
+    def test_warm_start_round_trip(self, tmp_path):
+        path = tmp_path / "constraint_cache.json"
+        cold = VerificationEngine()
+        r_cold = cold.verify("gemm", GEMM.config_cls(), PROB)
+        n = cold.constraints.save(path)
+        assert n > 0 and path.exists()
+
+        warm_cache = ConstraintCache()
+        assert warm_cache.load(path) == n
+        warm = VerificationEngine(constraints=warm_cache)
+        r_warm = warm.verify("gemm", GEMM.config_cls(), PROB)
+        assert _statuses(r_warm) == _statuses(r_cold)
+        s = warm.stats()
+        assert s["persisted_hits"] > 0
+        assert s["solver_discharges"] < \
+            cold.stats()["solver_discharges"], \
+            "warm start should skip previously proven discharges"
+
+    def test_violations_are_not_persisted(self, tmp_path):
+        path = tmp_path / "constraint_cache.json"
+        eng = VerificationEngine()
+        eng.verify("gemm", GEMM.config_cls(), PROB,
+                   inject_bug="swap_b_index")
+        eng.constraints.save(path)
+        warm_cache = ConstraintCache()
+        warm_cache.load(path)
+        warm = VerificationEngine(constraints=warm_cache)
+        res = warm.verify("gemm", GEMM.config_cls(), PROB,
+                          inject_bug="swap_b_index")
+        assert not res.hard_ok, \
+            "a persisted cache must never flip a violation to a pass"
+
+    def test_persisted_store_is_size_bounded(self, tmp_path):
+        path = tmp_path / "constraint_cache.json"
+        eng = VerificationEngine()
+        for bm in (32, 64, 128, 256):
+            eng.verify("gemm", GEMM.config_cls(bm=bm), PROB)
+        cache = eng.constraints
+        old_bound, ConstraintCache.MAX_PERSISTED = \
+            ConstraintCache.MAX_PERSISTED, 5
+        try:
+            assert cache.save(path) <= 5
+        finally:
+            ConstraintCache.MAX_PERSISTED = old_bound
+
+    def test_corrupt_or_missing_file_starts_cold(self, tmp_path):
+        cache = ConstraintCache()
+        assert cache.load(tmp_path / "nope.json") == 0
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert cache.load(bad) == 0
+
+    def test_stable_keys_pin_variable_extents(self):
+        from repro.core.tags import Var
+        from repro.core.verify_engine import stable_constraint_key
+        a = stable_constraint_key(("eq", (Var("v", 4) - 0,)))
+        b = stable_constraint_key(("eq", (Var("v", 8) - 0,)))
+        assert a != b, "same name, different domain => different key"
+
+
 class TestHillclimbDischargeBound:
     def test_icrl_hillclimb_reuses_proofs(self):
         """Acceptance: a 10-step hillclimb on GEMM performs fewer solver
