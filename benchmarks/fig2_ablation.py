@@ -94,8 +94,17 @@ def main():
     print("metric,value")
     print(f"verify_calls,{stats['verify_calls']}")
     print(f"result_cache_hits,{stats['result_hits']}")
+    print(f"program_hits,{stats['program_hits']}")
+    print(f"full_builds,{stats['full_builds']}")
+    print(f"skeleton_rebinds,{stats['skeleton_rebinds']}")
+    builds = stats["full_builds"] + stats["skeleton_rebinds"]
+    print(f"skeleton_reuse_pct,"
+          f"{100 * stats['skeleton_rebinds'] / max(builds, 1):.1f}")
     print(f"constraint_lookups,{stats['constraint_lookups']}")
     print(f"constraint_hits,{stats['constraint_hits']}")
+    print(f"canonical_hits,{stats['canonical_hits']}")
+    print(f"canonical_hit_pct,"
+          f"{100 * stats['canonical_hits'] / max(stats['constraint_hits'], 1):.1f}")
     print(f"solver_discharges,{stats['solver_discharges']}")
     print(f"worst_case_discharges,{worst}")
     print(f"discharges_avoided,{worst - stats['solver_discharges']}")

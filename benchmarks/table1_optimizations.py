@@ -6,6 +6,11 @@ are the knowledge-base skills (with their Table-1 tier and TPU adaptation
 notes), marked ✓ when the family's config space + invariant templates
 support them.  Emitted from the live KB and the live registry so the
 table can never drift from the code.
+
+A second section sweeps every skill context of each family's production
+example through one shared VerificationEngine and reports the
+incremental-verification rates per family: full skeleton builds vs
+config-Expr re-binds, and canonical-key constraint sharing.
 """
 from __future__ import annotations
 
@@ -13,8 +18,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.families import family_names  # noqa: E402
+from repro.core.families import all_families, family_names  # noqa: E402
 from repro.core.harness.knowledge import KNOWLEDGE_BASE  # noqa: E402
+from repro.core.verify_engine import VerificationEngine  # noqa: E402
 
 FAMILIES = family_names()
 
@@ -28,11 +34,44 @@ def rows():
         yield r
 
 
+def cache_rates():
+    """Per family: verify the example config plus every one-step skill
+    context, report skeleton-reuse and canonical-key hit rates."""
+    engine = VerificationEngine()
+    for fam in all_families():
+        if fam.example is None:
+            continue
+        engine.reset_stats()
+        cfg, prob = fam.example()
+        engine.verify(fam.name, cfg, prob)
+        for skill in fam.skills:
+            for _, new_cfg in skill.contexts(cfg, prob):
+                engine.verify(fam.name, new_cfg, prob)
+        s = engine.stats()
+        builds = s["full_builds"] + s["skeleton_rebinds"]
+        yield {"family": fam.name, "configs": s["verify_calls"],
+               "full_builds": s["full_builds"],
+               "skeleton_rebinds": s["skeleton_rebinds"],
+               "skeleton_reuse_pct":
+                   round(100 * s["skeleton_rebinds"] / max(builds, 1), 1),
+               "constraint_hits": s["constraint_hits"],
+               "canonical_hits": s["canonical_hits"],
+               "solver_discharges": s["solver_discharges"]}
+
+
 def main():
     header = ["skill", "tier"] + list(FAMILIES) + ["invariants"]
     print(",".join(header))
     for r in rows():
         print(",".join(str(r[h]) for h in header))
+
+    print("\nverify_cache_rates")
+    header2 = ["family", "configs", "full_builds", "skeleton_rebinds",
+               "skeleton_reuse_pct", "constraint_hits", "canonical_hits",
+               "solver_discharges"]
+    print(",".join(header2))
+    for r in cache_rates():
+        print(",".join(str(r[h]) for h in header2))
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ from repro.core.families import get_family  # noqa: E402
 from repro.core.harness import (KernelState, LoweringAgent, Planner,
                                 Selector, Validator,
                                 optimize_kernel)  # noqa: E402
+from repro.core.verify_engine import VerificationEngine  # noqa: E402
 
 
 def _task(family: str, *prob_args, **prob_kwargs) -> KernelState:
@@ -107,7 +108,10 @@ def build_suite():
 
 
 def run_arm(tasks, *, use_invariants: bool, iterations: int = 8,
-            seed: int = 0):
+            seed: int = 0, engine: VerificationEngine = None):
+    # one engine per arm: cross-task skeleton/constraint reuse is part of
+    # what the arm's cache report (printed by main) measures
+    engine = engine or VerificationEngine()
     rows = []
     for i, t in enumerate(tasks):
         st = KernelState(t.family, t.cfg, t.prob).refresh()
@@ -115,7 +119,8 @@ def run_arm(tasks, *, use_invariants: bool, iterations: int = 8,
             st, planner=Planner(),
             selector=Selector(temperature=0.2, seed=seed + i),
             lowering=LoweringAgent(fault_model=True, seed=seed * 31 + i),
-            validator=Validator(use_invariants=use_invariants),
+            validator=Validator(use_invariants=use_invariants,
+                                engine=engine),
             iterations=iterations)
         first = res.history[0] if res.history else None
         pass1 = bool(first and (first.verdict.ok
@@ -148,9 +153,27 @@ def main():
     header = ["name", "pass@1_pct", "solved_pct", "mean_cost_units",
               "mean_speedup", "silent_corruptions"]
     print(",".join(header))
+    engines = {}
     for arm, inv in (("invariants_on", True), ("invariants_off", False)):
-        s = summarize(arm, run_arm(tasks, use_invariants=inv))
+        engines[arm] = VerificationEngine()
+        s = summarize(arm, run_arm(tasks, use_invariants=inv,
+                                   engine=engines[arm]))
         print(",".join(str(s[h]) for h in header), flush=True)
+
+    # incremental-verification accounting across the 80-problem suite
+    print("\nverify_cache_report")
+    print("arm,verify_calls,full_builds,skeleton_rebinds,"
+          "skeleton_reuse_pct,program_hits,constraint_hits,"
+          "canonical_hits,solver_discharges")
+    for arm, eng in engines.items():
+        s = eng.stats()
+        builds = s["full_builds"] + s["skeleton_rebinds"]
+        print(f"{arm},{s['verify_calls']},{s['full_builds']},"
+              f"{s['skeleton_rebinds']},"
+              f"{100 * s['skeleton_rebinds'] / max(builds, 1):.1f},"
+              f"{s['program_hits']},{s['constraint_hits']},"
+              f"{s['canonical_hits']},{s['solver_discharges']}",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from pathlib import Path
 sys.path.insert(0, "src")
 
 from repro.core.families import all_families, get_family  # noqa: E402
+from repro.core.fslock import locked  # noqa: E402
 from repro.core.harness import (KernelState, LoweringAgent, Planner,
                                 Selector, Validator,
                                 optimize_kernel)  # noqa: E402
@@ -44,7 +45,10 @@ def main():
     fams = names if args.family == "all" else [args.family]
     cache = {}
     if Path(args.out).exists():
-        cache = json.loads(Path(args.out).read_text())
+        # advisory shared lock: worker processes tuning different
+        # families may share these cache files (see repro.core.fslock)
+        with locked(args.out, exclusive=False):
+            cache = json.loads(Path(args.out).read_text())
 
     # one engine across families: repeat configs revalidate for free.
     # The constraint memo persists next to the tuning cache, so repeat
@@ -83,11 +87,26 @@ def main():
               f"{vs.get('constraint_hits', 0)} constraint hits "
               f"({vs.get('persisted_hits', 0)} from disk), "
               f"{vs.get('solver_discharges', 0)} solver discharges")
+        print(f"  build:  {vs.get('full_builds', 0)} full builds, "
+              f"{vs.get('skeleton_rebinds', 0)} skeleton rebinds, "
+              f"{vs.get('program_hits', 0)} program hits, "
+              f"{vs.get('canonical_hits', 0)} canonical-key hits")
         cache[fam_name] = {"problem": dataclasses.asdict(prob),
                            "config": dataclasses.asdict(best.cfg),
                            "est_ms": res.best_time_s * 1e3,
                            "speedup": res.speedup}
-    Path(args.out).write_text(json.dumps(cache, indent=2))
+    with locked(args.out, exclusive=True):
+        # re-read inside the lock: a worker tuning other families may
+        # have written since we loaded — union, ours winning on overlap
+        disk = {}
+        if Path(args.out).exists():
+            try:
+                disk = json.loads(Path(args.out).read_text())
+            except ValueError:
+                disk = {}
+        disk.update(cache)
+        cache = disk
+        Path(args.out).write_text(json.dumps(cache, indent=2))
     n = constraints.save(cache_path)
     print(f"\nwrote {args.out} and {n} constraint verdicts to "
           f"{cache_path}")

@@ -171,7 +171,12 @@ class Analyzer:
         return TileState(lv, fallback)
 
     def _grid_sig(self) -> tuple:
-        return tuple((a.name, a.extent, a.semantics) for a in self.prog.grid)
+        """Cache-key view of the grid: the axis *Vars* (name + extent)
+        plus semantics.  Keying on Vars rather than bare names lets the
+        engine's alpha-renaming canonicalizer share write-set verdicts
+        across families whose grids are congruent up to naming."""
+        return tuple((self.prog.grid_var(a.name), a.semantics)
+                     for a in self.prog.grid)
 
     # -- interpretation ----------------------------------------------------------
     def run(self) -> CheckReport:
@@ -399,7 +404,8 @@ class Analyzer:
         decl = self.prog.tensors[op.tensor]
         axes = op.axes or tuple(a.name for a in self.prog.grid
                                 if a.semantics == "parallel")
-        key = ("disjoint", tuple(decl.shape), axes, self._grid_sig(),
+        key = ("disjoint", tuple(decl.shape),
+               tuple(self._axis_var[a] for a in axes), self._grid_sig(),
                tuple((w.origin, tuple(w.shape)) for w in writes))
         res = self.solve.check_block(
             "disjoint", key,

@@ -441,6 +441,25 @@ class TileProgram:
                    f"assert_in_range({what or 'index'})")
 
     # -- info ---------------------------------------------------------------------
+    def structure_sig(self) -> tuple:
+        """Config-independent structural signature of the trace: grid axis
+        names/semantics, tensor names/kinds/ranks, and the op sequence
+        (op types + stable label suffixes — tile naming is deterministic
+        per trace, so congruent traces agree on it).  Extents, tile
+        shapes and the Exprs bound into origins/assertions are *excluded*:
+        two traces sharing a signature differ only in re-bound
+        config-dependent values, which is what lets
+        :class:`repro.core.verify_engine.VerificationEngine` count the
+        second trace as a skeleton re-bind rather than a full rebuild."""
+        grid = tuple((a.name, a.semantics) for a in self.grid)
+        tensors = tuple((n, d.kind, len(d.shape))
+                        for n, d in self.tensors.items())
+        # label format is "<name>[<op idx>]:<suffix>"; the suffix is the
+        # config-independent part (the program name embeds the config)
+        ops = tuple((type(op).__name__, op.label.partition("]:")[2])
+                    for op in self.ops)
+        return (grid, tensors, ops)
+
     def grid_extent(self) -> int:
         out = 1
         for ax in self.grid:

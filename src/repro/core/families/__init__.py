@@ -5,9 +5,10 @@ point replacing the old hardcoded ``if family == "gemm": ...`` chains in
 the validator, planner, lowering agent, cost model, benchmarks and
 examples.  See docs/families.md for how to add a family.
 """
-from .base import (GENERIC_SKILLS, KernelFamily, Skill, all_families,
-                   family_for_config, family_names, generic_skill,
-                   get_family, register)
+from .base import (GENERIC_SKILLS, MATCH_EXACT, MATCH_NONE, MATCH_STAGE,
+                   BugSignature, KernelFamily, Skill, all_families,
+                   assertion_key, family_for_config, family_names,
+                   generic_skill, get_family, register)
 
 # importing a family module registers it (order fixes registry iteration
 # order, which benchmarks/examples rely on for stable output)
@@ -22,5 +23,6 @@ from . import paged_attention   # noqa: E402,F401
 __all__ = [
     "KernelFamily", "Skill", "GENERIC_SKILLS", "generic_skill",
     "register", "get_family", "family_names", "all_families",
-    "family_for_config",
+    "family_for_config", "BugSignature", "assertion_key",
+    "MATCH_EXACT", "MATCH_STAGE", "MATCH_NONE",
 ]

@@ -95,6 +95,57 @@ def generic_skill(name: str, family: str,
 
 
 # ---------------------------------------------------------------------------
+# Bug signatures (the fault model's ground-truth map, paper §9.4)
+# ---------------------------------------------------------------------------
+
+# match specificity levels returned by BugSignature.specificity
+MATCH_NONE = 0       # the feedback says nothing about this bug
+MATCH_STAGE = 1      # right verification stage, unfamiliar assertion
+MATCH_EXACT = 2      # the bug's own assertion fired at its own stage
+
+
+def assertion_key(assertion_id: str) -> str:
+    """Strip the config-dependent ``<program>[<op index>]:`` prefix from an
+    assertion id, leaving the stable per-family assertion label (e.g.
+    ``assert_conform(t_A_0,t_B_1)``).  Signatures and planner strike
+    accounting key on this."""
+    _, sep, tail = assertion_id.partition("]:")
+    return tail if sep else assertion_id
+
+
+@dataclass(frozen=True)
+class BugSignature:
+    """Which verification findings an injectable bug produces.
+
+    ``stages`` are engine stages ("structural" | "build" | "analysis" |
+    "solver") the bug surfaces at; ``assertions`` are substring patterns
+    matched against the *stable* assertion label (see :func:`assertion_key`
+    — tile numbering can shift with config structure, so patterns should
+    name the least config-sensitive fragment that identifies the
+    assertion).  This is the harness' ground-truth map from counterexample
+    back to candidate latent fault: the lowering agent matches a
+    :class:`repro.core.verify_engine.Feedback` against every compatible
+    bug's signature and repairs the best-matching bug first (targeted
+    repair, paper §9.4).  ``tests/test_families.py`` checks every declared
+    signature against the actually-emitted feedback.
+    """
+
+    bug: str
+    stages: Tuple[str, ...]
+    assertions: Tuple[str, ...]
+
+    def specificity(self, stage: str, assertion_id: str) -> int:
+        """How strongly one (stage, assertion id) finding implicates this
+        bug: MATCH_EXACT ≫ MATCH_STAGE ≫ MATCH_NONE."""
+        if stage not in self.stages:
+            return MATCH_NONE
+        label = assertion_key(assertion_id)
+        if any(pat in label for pat in self.assertions):
+            return MATCH_EXACT
+        return MATCH_STAGE
+
+
+# ---------------------------------------------------------------------------
 # The family protocol
 # ---------------------------------------------------------------------------
 
@@ -114,6 +165,9 @@ class KernelFamily:
     cost: Callable
     skills: Tuple[Skill, ...] = ()
     injectable_bugs: Tuple[str, ...] = ()
+    # ground-truth (stage, assertion) fingerprint per injectable bug —
+    # what targeted repair matches counterexamples against
+    bug_signatures: Tuple[BugSignature, ...] = ()
     # (cfg, prob) -> List[str]; defaults to the full injectable menu
     compatible_bugs: Optional[Callable] = None
     # (cfg, prob) -> bool — interpret-mode run against the jnp oracle

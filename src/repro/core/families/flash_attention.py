@@ -16,7 +16,8 @@ from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
 from ..kernelspec import (DTYPE_BYTES, LANE, StructuralIssue, cdiv,
                           check_alignment, check_masking, check_vmem)
 from ..tags import make_tag
-from .base import KernelFamily, Skill, generic_skill, register
+from .base import (BugSignature, KernelFamily, Skill, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -252,6 +253,19 @@ def compatible_bugs(cfg: FlashAttentionConfig, prob: FlashAttentionProblem):
     return menu
 
 
+# Ground truth (tests/test_families.py checks it against live feedback).
+# assert_stable patterns stay tile-name-free: masking/staging config flags
+# shift the local-tile numbering, and fa carries three stable assertions
+# of which only the running-max one is bug-reachable.
+BUG_SIGNATURES = (
+    BugSignature("wrong_kv_head", ("solver",),
+                 ("assert_conform(sq_1,sq_3)",)),
+    BugSignature("m_depends_kv", ("analysis",), ("assert_stable(",)),
+    BugSignature("q_block_offset", ("solver",),
+                 ("assert_conform(sq_1,mm_5)",)),
+)
+
+
 # -- reference execution ----------------------------------------------------
 
 def reference_check(cfg: FlashAttentionConfig,
@@ -291,6 +305,7 @@ FAMILY = register(KernelFamily(
     cost=flash_attention_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     compatible_bugs=compatible_bugs,
     reference_check=reference_check,
     lower=_lower,

@@ -16,7 +16,8 @@ from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, occupancy
 from ..kernelspec import (DTYPE_BYTES, StructuralIssue, cdiv,
                           check_alignment, check_vmem)
 from ..tags import Expr, make_tag
-from .base import KernelFamily, generic_skill, register
+from .base import (BugSignature, KernelFamily, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -179,6 +180,17 @@ def compatible_bugs(cfg: FlashDecodeConfig, prob: FlashDecodeProblem):
     return menu
 
 
+# Ground truth (tests/test_families.py checks it against live feedback).
+BUG_SIGNATURES = (
+    BugSignature("wrong_kv_head", ("solver",),
+                 ("assert_conform(sq_1,sq_3)",)),
+    BugSignature("split_overlap", ("solver",),
+                 ("assert_disjoint(KV_READ)", "assert_coverage(KV_READ)")),
+    BugSignature("partial_mislabel", ("solver",),
+                 ("assert_conform(mm_9,e_10)",)),
+)
+
+
 # -- reference execution ----------------------------------------------------
 
 def reference_check(cfg: FlashDecodeConfig,
@@ -219,6 +231,7 @@ FAMILY = register(KernelFamily(
     cost=flash_decode_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     compatible_bugs=compatible_bugs,
     reference_check=reference_check,
     lower=_lower,

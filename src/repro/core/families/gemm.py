@@ -17,7 +17,8 @@ from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, STAGGER_DERATE,
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, make_tag
-from .base import KernelFamily, Skill, generic_skill, register
+from .base import (BugSignature, KernelFamily, Skill, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -223,6 +224,24 @@ def compatible_bugs(cfg: GemmConfig, prob: GemmProblem):
     return menu
 
 
+# Ground truth: which assertions each injected bug trips (checked against
+# the live feedback by tests/test_families.py).  swap_b_index and
+# stagger_mismatch both surface as MXU-pairing counterexamples; the two
+# accumulator bugs share the ⊤-carry fingerprint — targeted repair then
+# disambiguates within the matched candidate set.
+BUG_SIGNATURES = (
+    BugSignature("swap_b_index", ("solver",),
+                 ("assert_conform(t_A_0,t_B_1)",)),
+    BugSignature("stagger_mismatch", ("solver",),
+                 ("assert_conform(t_A_0,t_B_1)",)),
+    BugSignature("acc_depends_k", ("analysis",),
+                 ("assert_stable(", "assert_conform(s_2,s_2)")),
+    BugSignature("missing_init", ("analysis",),
+                 ("assert_stable(", "assert_conform(s_2,s_2)")),
+    BugSignature("grid_short", ("solver",), ("assert_coverage(C)",)),
+)
+
+
 # -- reference execution (interpret mode vs the jnp oracle) -----------------
 
 def reference_check(cfg: GemmConfig, prob: GemmProblem) -> bool:
@@ -259,6 +278,7 @@ FAMILY = register(KernelFamily(
     cost=gemm_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     compatible_bugs=compatible_bugs,
     reference_check=reference_check,
     lower=_lower,

@@ -17,7 +17,8 @@ from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, app, make_tag
-from .base import KernelFamily, Skill, generic_skill, register
+from .base import (BugSignature, KernelFamily, Skill, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -224,6 +225,25 @@ def compatible_bugs(cfg: MoEConfig, prob: MoEProblem):
     return menu
 
 
+# Ground truth (tests/test_families.py checks it against live feedback).
+# y_depends_f collapses the carried Y scratch to ⊤, so its analysis-stage
+# fingerprint spans the stability assertion plus the downstream gate/
+# scatter conformity sites the ⊤ poisons.
+BUG_SIGNATURES = (
+    BugSignature("w_by_block_index", ("solver",),
+                 ("assert_conform(g_X_0,t_Wg_1)",
+                  "assert_conform(g_X_0,t_Wu_2)")),
+    BugSignature("combine_other_table", ("solver",), ("scatter Y",)),
+    BugSignature("gate_unpermuted", ("solver",),
+                 ("assert_conform(g_G_8,s_7)",)),
+    BugSignature("down_f_offset", ("solver",),
+                 ("assert_conform(e_5,t_Wd_6)",)),
+    BugSignature("y_depends_f", ("analysis",),
+                 ("assert_stable(s_7)", "assert_conform(g_G_8,s_7)",
+                  "scatter Y")),
+)
+
+
 # -- reference execution ----------------------------------------------------
 
 def reference_check(cfg: MoEConfig, prob: MoEProblem) -> bool:
@@ -264,6 +284,7 @@ FAMILY = register(KernelFamily(
     cost=moe_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     compatible_bugs=compatible_bugs,
     reference_check=reference_check,
     lower=_lower,

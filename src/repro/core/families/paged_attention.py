@@ -42,7 +42,8 @@ from ..costs import (CostEstimate, HBM_BW, PAGE_GATHER_DERATE, PEAK_FLOPS,
 from ..kernelspec import (DTYPE_BYTES, StructuralIssue, cdiv,
                           check_alignment, check_vmem)
 from ..tags import Expr, app, make_tag
-from .base import KernelFamily, generic_skill, register
+from .base import (BugSignature, KernelFamily, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -290,6 +291,32 @@ def compatible_bugs(cfg: PagedAttentionConfig,
     return menu
 
 
+# Ground truth (tests/test_families.py checks it against live feedback).
+# page_replay additionally under-covers the logical KV range, but only
+# the disjointness pattern is *its* fingerprint — a bare coverage
+# counterexample then implicates page_skip exactly and page_replay at
+# stage level only.
+BUG_SIGNATURES = (
+    BugSignature("page_oob", ("analysis",),
+                 ("assert_in_range(physical page",)),
+    BugSignature("v_stale_table", ("solver",),
+                 ("assert_conform(sq_4,sq_6)",
+                  "assert_conform(sq_14,sq_16)")),
+    BugSignature("wrong_kv_head", ("solver",),
+                 ("assert_conform(sq_1,sq_4)",
+                  "assert_conform(sq_1,sq_14)")),
+    BugSignature("page_skip", ("solver",),
+                 ("assert_coverage(KV_READ)",)),
+    BugSignature("page_replay", ("solver",),
+                 ("assert_disjoint(KV_READ)",)),
+    BugSignature("pos_from_physical", ("solver",),
+                 ("assert_conform(mm_10,e_7)", "assert_conform(e_11,e_8)",
+                  "assert_conform(mm_20,e_17)",
+                  "assert_conform(e_21,e_18)")),
+    BugSignature("acc_depends_page", ("analysis",), ("assert_stable(",)),
+)
+
+
 # -- reference execution (interpret mode vs the dense-decode oracle) --------
 
 def reference_check(cfg: PagedAttentionConfig,
@@ -335,6 +362,7 @@ FAMILY = register(KernelFamily(
     cost=paged_attention_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     compatible_bugs=compatible_bugs,
     reference_check=reference_check,
     lower=_lower,

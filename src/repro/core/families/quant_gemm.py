@@ -34,7 +34,8 @@ from ..costs import (CostEstimate, HBM_BW, mxu_util, occupancy,
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, make_tag
-from .base import KernelFamily, Skill, generic_skill, register
+from .base import (BugSignature, KernelFamily, Skill, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -260,6 +261,25 @@ def compatible_bugs(cfg: QuantGemmConfig, prob: QuantGemmProblem):
     return menu
 
 
+# Ground truth (tests/test_families.py checks it against live feedback).
+BUG_SIGNATURES = (
+    BugSignature("swap_b_index", ("solver",),
+                 ("assert_conform(t_A_0,t_B_1)",
+                  "assert_conform(t_B_1,mm_2)")),
+    BugSignature("a_scale_wrong_kslice", ("solver",),
+                 ("assert_conform(mm_2,t_SA_3)",)),
+    BugSignature("a_scale_row_offset", ("solver",),
+                 ("assert_conform(mm_2,t_SA_3)",)),
+    BugSignature("b_scale_stale", ("solver",),
+                 ("assert_conform(mm_2,t_SB_4)",)),
+    BugSignature("acc_depends_k", ("analysis",),
+                 ("assert_stable(", "assert_conform(s_5,s_5)")),
+    BugSignature("missing_init", ("analysis",),
+                 ("assert_stable(", "assert_conform(s_5,s_5)")),
+    BugSignature("grid_short", ("solver",), ("assert_coverage(C)",)),
+)
+
+
 # -- reference execution (interpret mode vs the jnp oracle) -----------------
 
 def reference_check(cfg: QuantGemmConfig, prob: QuantGemmProblem) -> bool:
@@ -302,6 +322,7 @@ FAMILY = register(KernelFamily(
     cost=quant_gemm_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     compatible_bugs=compatible_bugs,
     reference_check=reference_check,
     lower=_lower,

@@ -15,7 +15,8 @@ from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, make_tag
-from .base import KernelFamily, generic_skill, register
+from .base import (BugSignature, KernelFamily, generic_skill,
+                   register)
 
 
 @dataclass(frozen=True)
@@ -159,6 +160,18 @@ SKILLS = (
 INJECTABLE_BUGS = ("b_chunk_offset", "state_depends_c", "xb_mismatch")
 
 
+# Ground truth (tests/test_families.py checks it against live feedback).
+# Both index-map bugs land on the same state-update pairing assertion —
+# the counterexample narrows repair to that candidate pair.
+BUG_SIGNATURES = (
+    BugSignature("b_chunk_offset", ("solver",),
+                 ("assert_conform(mm_7,sq_1)",)),
+    BugSignature("xb_mismatch", ("solver",),
+                 ("assert_conform(mm_7,sq_1)",)),
+    BugSignature("state_depends_c", ("analysis",), ("assert_stable(",)),
+)
+
+
 # -- reference execution ----------------------------------------------------
 
 def reference_check(cfg: SSDConfig, prob: SSDProblem) -> bool:
@@ -196,6 +209,7 @@ FAMILY = register(KernelFamily(
     cost=ssd_cost,
     skills=SKILLS,
     injectable_bugs=INJECTABLE_BUGS,
+    bug_signatures=BUG_SIGNATURES,
     reference_check=reference_check,
     lower=_lower,
     example=_example,

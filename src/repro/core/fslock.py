@@ -1,0 +1,50 @@
+"""Best-effort advisory file locking for the persisted caches.
+
+``constraint_cache.json`` and ``tuning_cache.json`` are meant to be shared
+across worker processes (ROADMAP: multi-process tuning).  ``locked`` takes
+an *advisory* ``fcntl.flock`` on a sidecar ``<path>.lock`` file — a
+sidecar, because the data file itself is replaced whole on save, and a
+lock on a replaced inode protects nobody.  On platforms without ``fcntl``
+(or filesystems that refuse to lock) it degrades to a no-op: the caches
+are merge-on-save and verdict-durable, so the worst unlocked outcome is a
+lost cache entry, never a wrong answer.
+"""
+from __future__ import annotations
+
+import contextlib
+from pathlib import Path
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX platform
+    fcntl = None
+
+
+@contextlib.contextmanager
+def locked(path, *, exclusive: bool):
+    """Hold an advisory lock on ``<path>.lock`` for the duration of the
+    block.  ``exclusive=True`` for writers (``LOCK_EX``), ``False`` for
+    readers (``LOCK_SH``).  Never raises on lock failure — degrades to an
+    unlocked critical section."""
+    if fcntl is None:
+        yield
+        return
+    lock_path = Path(str(path) + ".lock")
+    fh = None
+    try:
+        fh = open(lock_path, "a+")
+        fcntl.flock(fh.fileno(),
+                    fcntl.LOCK_EX if exclusive else fcntl.LOCK_SH)
+    except OSError:
+        if fh is not None:
+            fh.close()
+            fh = None
+    try:
+        yield
+    finally:
+        if fh is not None:
+            try:
+                fcntl.flock(fh.fileno(), fcntl.LOCK_UN)
+            except OSError:
+                pass
+            fh.close()

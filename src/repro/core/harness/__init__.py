@@ -1,12 +1,14 @@
 from .costmodel import CostEstimate, estimate
-from .icrl import OptimizeResult, icrl_train, optimize_kernel
+from .icrl import (OptimizeResult, StepRecord, icrl_train,
+                   optimize_kernel)
 from .knowledge import KNOWLEDGE_BASE, Skill, skills_for
-from .lowering import LoweringAgent
+from .lowering import LoweredState, LoweringAgent, RepairAttempt
 from .planner import KernelState, Planner, PlannerParams
 from .selector import Selector
 from .validator import Validator
 
 __all__ = ["estimate", "CostEstimate", "KNOWLEDGE_BASE", "Skill",
            "skills_for", "Planner", "PlannerParams", "KernelState",
-           "Selector", "LoweringAgent", "Validator", "optimize_kernel",
-           "icrl_train", "OptimizeResult"]
+           "Selector", "LoweringAgent", "LoweredState", "RepairAttempt",
+           "Validator", "optimize_kernel", "icrl_train", "OptimizeResult",
+           "StepRecord"]

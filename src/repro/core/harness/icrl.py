@@ -16,8 +16,9 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..families import assertion_key
 from ..verify_engine import VerificationEngine
-from .lowering import LoweredState, LoweringAgent
+from .lowering import LoweredState, LoweringAgent, RepairAttempt
 from .planner import KernelState, Planner, PlannerParams, Proposal
 from .selector import Selector
 from .validator import Validator, Verdict
@@ -30,6 +31,8 @@ class StepRecord:
     verdict: Verdict
     accepted: bool
     time_s: float
+    # stage-attributed repair rounds taken inside this step (paper §9.4)
+    repairs: List[RepairAttempt] = field(default_factory=list)
 
 
 @dataclass
@@ -47,6 +50,21 @@ class OptimizeResult:
     @property
     def speedup(self) -> float:
         return self.baseline_time_s / self.best_time_s
+
+    def repair_summary(self) -> Dict[str, Dict[str, int]]:
+        """Per-stage repair outcomes across the run: for each evidence
+        stage ("" = blind), how many attempts were made, how many were
+        signature-targeted, and how many landed."""
+        out: Dict[str, Dict[str, int]] = {}
+        for rec in self.history:
+            for att in rec.repairs:
+                row = out.setdefault(att.stage or "blind",
+                                     {"attempts": 0, "targeted": 0,
+                                      "fixed": 0})
+                row["attempts"] += 1
+                row["targeted"] += int(att.targeted)
+                row["fixed"] += int(att.fixed)
+        return out
 
 
 def optimize_kernel(state0: KernelState, *, planner: Planner,
@@ -74,14 +92,17 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
         lowered = lowering.apply(cur, prop)
         verdict = validator.evaluate(lowered, best_t)
         res.cost_units += verdict.cost_units
-        repairs = 0
-        while not verdict.ok and repairs < max_repairs and (
+        attempts: List[RepairAttempt] = []
+        while not verdict.ok and len(attempts) < max_repairs and (
                 verdict.caught_static or verdict.caught_unit):
-            lowered = lowering.repair(lowered,
-                                      targeted=verdict.caught_static)
+            # a static catch hands the structured counterexamples to the
+            # repair agent; a unit-test catch hands it nothing (blind)
+            lowered, att = lowering.repair(
+                lowered,
+                feedback=verdict.feedback if verdict.caught_static else ())
+            attempts.append(att)
             verdict = validator.evaluate(lowered, best_t)
             res.cost_units += verdict.cost_units
-            repairs += 1
         accepted = verdict.ok and verdict.est_time_s < best_t
         if accepted:
             best = lowered.state
@@ -91,7 +112,8 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
             cur = lowered.state      # sideways move keeps exploring
         res.history.append(StepRecord(prop.skill.name, prop.context,
                                       verdict, accepted,
-                                      verdict.est_time_s))
+                                      verdict.est_time_s,
+                                      repairs=attempts))
     res.best_state, res.best_time_s = best, best_t
     res.solved = any(r.verdict.ok for r in res.history) or not res.history
     stats1 = validator.engine.stats()
@@ -121,12 +143,32 @@ def analyze(evals: Dict[str, float]) -> Dict[str, float]:
 
 
 def parameter_update(params: PlannerParams, grads: Dict[str, float],
+                     buffer: Optional[Sequence[StepRecord]] = None,
                      lr: float = 0.5) -> PlannerParams:
+    """θ update.  With the episode ``buffer``, lessons become
+    *stage-attributed*: a skill with negative advantage is annotated with
+    the assertion (and pipeline stage) its rewrites kept tripping, and
+    every violation is recorded as an assertion strike — which is what
+    :meth:`PlannerParams.strike_penalty` down-weights in later proposals."""
+    trips: Dict[str, Dict[Tuple[str, str], int]] = {}
+    for rec in buffer or ():
+        if rec.verdict.ok:
+            continue
+        for f in rec.verdict.feedback:
+            if f.ok:
+                continue
+            akey = assertion_key(f.assertion_id)
+            per = trips.setdefault(rec.skill, {})
+            per[(f.stage, akey)] = per.get((f.stage, akey), 0) + 1
+            params.strike(rec.skill, akey)
     for k, g in grads.items():
         params.skill_bias[k] = params.skill_bias.get(k, 0.0) + lr * g
         direction = "prefer" if g > 0 else "avoid"
-        params.lessons.append(
-            f"{direction} {k} (advantage {g:+.3f}) on this task family")
+        lesson = f"{direction} {k} (advantage {g:+.3f}) on this task family"
+        if g < 0 and k in trips:
+            (stage, akey), n = max(trips[k].items(), key=lambda kv: kv[1])
+            lesson += f" — trips {akey} at the {stage} stage ×{n}"
+        params.lessons.append(lesson)
     return params
 
 
@@ -159,5 +201,5 @@ def icrl_train(tasks: Sequence[KernelState], *, episodes: int = 8,
         results.append(res)
         evals = policy_eval(res.history)
         grads = analyze(evals)
-        params = parameter_update(params, grads)
+        params = parameter_update(params, grads, buffer=res.history)
     return params, results

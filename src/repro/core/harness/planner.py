@@ -44,15 +44,36 @@ class KernelState:
         return self
 
 
+# score penalty scale for skills that repeatedly trip the same assertion
+STRIKE_PENALTY = 0.15
+
+
 @dataclass
 class PlannerParams:
     """θ — the mutable policy parameters the ICRL loop updates."""
 
     skill_bias: Dict[str, float] = field(default_factory=dict)
     lessons: List[str] = field(default_factory=list)   # textual trace
+    # skill -> stable assertion key -> violation count, recorded by
+    # icrl.parameter_update from the verdicts' stage-attributed feedback
+    assertion_strikes: Dict[str, Dict[str, int]] = field(
+        default_factory=dict)
 
     def bias(self, skill: str) -> float:
         return self.skill_bias.get(skill, 0.0)
+
+    def strike(self, skill: str, assertion: str) -> None:
+        per = self.assertion_strikes.setdefault(skill, {})
+        per[assertion] = per.get(assertion, 0) + 1
+
+    def strike_penalty(self, skill: str) -> float:
+        """Down-weight proposals from skills whose rewrites keep tripping
+        the *same* invariant: scattered one-off violations are noise, a
+        repeat offender on one assertion is a systematic mis-lowering."""
+        per = self.assertion_strikes.get(skill)
+        if not per:
+            return 0.0
+        return STRIKE_PENALTY * math.log1p(max(per.values()) - 1)
 
 
 class Planner:
@@ -73,7 +94,8 @@ class Planner:
                     continue
                 speedup = base / est.time_s if est.time_s > 0 else 0.0
                 score = math.log(max(speedup, 1e-6)) \
-                    + self.params.bias(skill.name)
+                    + self.params.bias(skill.name) \
+                    - self.params.strike_penalty(skill.name)
                 out.append(Proposal(skill, label, new_cfg, score,
                                     est.time_s,
                                     note=f"bound={est.bound}"))

@@ -43,6 +43,28 @@ class Verdict:
     violation_report: str = ""
     est_time_s: float = 0.0
     feedback: List[Feedback] = field(default_factory=list)
+    # which pipeline stage decided a failing verdict: "build" | "analysis"
+    # | "solver" | "structural" | "unit" | "" (passing) — the key the
+    # ICRL lessons and fig_repair aggregate on
+    caught_stage: str = ""
+
+
+# stage-attributed static-catch rewards: the earlier (cheaper) the stage
+# that caught the fault, the milder the penalty — lattice-level analysis
+# verdicts arrive before any counterexample search even starts
+STATIC_CATCH_REWARD = {"build": -1.0, "analysis": -0.45, "solver": -0.55,
+                       "structural": -0.5}
+
+
+def _catch_stage(feedback: List[Feedback]) -> str:
+    """The most decisive failing stage: build > analysis > solver (a ⊤
+    poisoning the lattice also fails downstream solver assertions — the
+    analysis finding is the root cause)."""
+    stages = {f.stage for f in feedback if not f.ok}
+    for stage in ("build", "analysis", "solver", "structural"):
+        if stage in stages:
+            return stage
+    return ""
 
 
 class Validator:
@@ -68,11 +90,15 @@ class Validator:
                 return Verdict(False, caught_static=True, cost_units=cost,
                                reward=-1.0,
                                violation_report=res.build_error,
-                               feedback=res.violations)
+                               feedback=res.violations,
+                               caught_stage="build")
             if not res.hard_ok:
+                stage = _catch_stage(res.violations)
                 return Verdict(False, caught_static=True, cost_units=cost,
-                               reward=-0.5, violation_report=res.render(),
-                               feedback=res.violations)
+                               reward=STATIC_CATCH_REWARD.get(stage, -0.5),
+                               violation_report=res.render(),
+                               feedback=res.violations,
+                               caught_stage=stage)
             # structural warnings degrade the profile but do not reject
         else:
             # config-validity errors still surface when lowering runs
@@ -81,7 +107,8 @@ class Validator:
                 return Verdict(False, caught_unit=True,
                                cost_units=COST_UNIT_TEST, reward=-1.0,
                                violation_report=res.build_error,
-                               feedback=res.violations)
+                               feedback=res.violations,
+                               caught_stage="build")
 
         # unit-test round (real or modeled)
         cost += COST_UNIT_TEST
@@ -90,7 +117,8 @@ class Validator:
                 return Verdict(False, caught_unit=True, cost_units=cost,
                                reward=-0.8,
                                violation_report="unit test mismatch "
-                               f"(latent {lowered.latent_bug})")
+                               f"(latent {lowered.latent_bug})",
+                               caught_stage="unit")
             # bug slips through tests: silent wrong kernel — heavy penalty
             return Verdict(False, caught_unit=False, cost_units=cost,
                            reward=-2.0,
@@ -99,7 +127,8 @@ class Validator:
             ok = self._run_real(state)
             if not ok:
                 return Verdict(False, caught_unit=True, cost_units=cost,
-                               reward=-0.8, violation_report="allclose fail")
+                               reward=-0.8, violation_report="allclose fail",
+                               caught_stage="unit")
 
         est = state.est.time_s
         reward = math.log(max(incumbent_s, 1e-12) / max(est, 1e-12))

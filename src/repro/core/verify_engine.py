@@ -28,11 +28,27 @@ Results are returned as structured :class:`Feedback` objects (stage,
 assertion id, counterexample, repair hint) rather than strings, so the
 harness can route counterexamples into targeted repair prompts.
 
-A whole-result memo (keyed on the frozen (family, config, problem, bug)
-tuple) additionally makes exact re-verification — repairs, sideways moves,
-revisited configs — free.  ``stats()`` reports verify calls, result hits,
-constraint hits/misses and solver discharges; ``benchmarks/fig2_ablation.py``
-prints them next to the wall-clock win.
+Three more layers make the loop incremental end to end:
+
+* **Whole-result memo** (keyed on the frozen (family, config, problem,
+  bug) tuple): exact re-verification — repairs, sideways moves, revisited
+  configs — is free.
+* **Program-skeleton memo**: traced ``TileProgram``\\ s are memoized on the
+  same key, and their *structural signatures* (op sequence, grid
+  semantics — everything except the config-bound Exprs) are interned per
+  (family, problem, bug).  The first config of a structural class is a
+  full build; every later congruent trace is counted (and reported) as a
+  skeleton re-bind, with the constraint cache re-proving only the
+  assertions whose expressions actually changed.
+* **Alpha-renaming canonicalizer** (:func:`canonical_key`): constraint
+  keys are normalized to De Bruijn-style variable indices before lookup,
+  so congruent proofs are shared across configs that number their trace
+  locals differently, across assertion reorderings, and across families —
+  including through the persisted ``constraint_cache.json``.
+
+``stats()`` reports verify calls, result/program hits, full builds vs
+skeleton re-binds, constraint/canonical hits and solver discharges;
+``benchmarks/fig2_ablation.py`` prints them next to the wall-clock win.
 """
 from __future__ import annotations
 
@@ -45,6 +61,7 @@ from pathlib import Path
 
 from .analysis import Analyzer, CheckReport, Discharger
 from .families import get_family
+from .fslock import locked
 from .kernelspec import VerifyResult
 from .solver import (Counterexample, ProofResult, Status, prove_injective,
                      prove_tags_distinct, prove_tags_equal, prove_zero)
@@ -187,6 +204,94 @@ def stable_constraint_key(key: tuple) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Alpha-renaming canonicalizer (De Bruijn-style variable indices)
+# ---------------------------------------------------------------------------
+
+class _Canon:
+    """One canonicalization pass: renames every :class:`Var` to ``x<i>``
+    (preserving its extent — the extents are what verdicts quantify over)
+    in order of first appearance, rebuilding ``Expr``/atom structure
+    untouched.  Uninterpreted-table names (:class:`AppAtom`) are *kept*:
+    two different tables are genuinely different functions, and the
+    solver's finite-model interpretation keys on the name.
+
+    Index assignment must not depend on the *original* names (the whole
+    point is erasing them), so within each expression terms are visited
+    in a name-free structural order — (coefficient, atom shape) — not in
+    ``Expr.terms``' name-sorted storage order.  Same-shaped variables at
+    the same coefficient still tie and fall back to name order; such a
+    tie canonicalizing apart costs a cache miss, never a wrong answer."""
+
+    def __init__(self):
+        self._map: Dict[Var, Var] = {}
+
+    def var(self, v: Var) -> Var:
+        c = self._map.get(v)
+        if c is None:
+            c = Var(f"x{len(self._map)}", v.extent)
+            self._map[v] = c
+        return c
+
+    @staticmethod
+    def _shape(a) -> tuple:
+        """Name-free structural rank of an atom (extents, op kinds and
+        nesting only; table names are semantic, so AppAtom keeps its)."""
+        if isinstance(a, Var):
+            return (0, a.extent)
+        if isinstance(a, OpAtom):
+            return (1, 0 if a.kind == "floordiv" else 1, a.k,
+                    _Canon._shape_expr(a.inner))
+        if isinstance(a, AppAtom):
+            return (2, a.extent, a.name, _Canon._shape_expr(a.inner))
+        return (3, repr(a))
+
+    @staticmethod
+    def _shape_expr(e: Expr) -> tuple:
+        return (e.const,
+                tuple(sorted((c, _Canon._shape(a)) for a, c in e.terms)))
+
+    def atom(self, a):
+        if isinstance(a, Var):
+            return self.var(a)
+        if isinstance(a, OpAtom):
+            return OpAtom(a.kind, self.expr(a.inner), a.k)
+        if isinstance(a, AppAtom):
+            return AppAtom(a.name, self.expr(a.inner), a.extent)
+        return a
+
+    def expr(self, e: Expr) -> Expr:
+        terms: Dict[object, int] = {}
+        for a, c in sorted(e.terms,
+                           key=lambda ac: (ac[1], self._shape(ac[0]))):
+            ca = self.atom(a)
+            terms[ca] = terms.get(ca, 0) + c
+        return Expr(terms, e.const)
+
+    def walk(self, item):
+        if isinstance(item, Expr):
+            return self.expr(item)
+        if isinstance(item, Var):
+            return self.var(item)
+        if isinstance(item, tuple):
+            return tuple(self.walk(x) for x in item)
+        return item
+
+
+def canonical_key(key: tuple) -> tuple:
+    """Alpha-rename a constraint key into its canonical form.
+
+    Renaming is a bijection that preserves every extent, and verdicts
+    depend only on expression structure and variable domains — never on
+    names — so two keys with equal canonical forms are obligations of the
+    same theorem.  This is what shares proofs across configs whose traces
+    number their locals differently, across assertion reorderings, and
+    across families (sound but not complete: congruent keys whose term
+    *sort order* differs under renaming may still canonicalize apart,
+    which costs a cache miss, never a wrong answer)."""
+    return _Canon().walk(key)
+
+
+# ---------------------------------------------------------------------------
 # Normalized-constraint memo cache
 # ---------------------------------------------------------------------------
 
@@ -198,11 +303,17 @@ class ConstraintCache:
     combination over atoms with reduced ``//``/``%`` structure), and the
     analyzer names variables deterministically per run, so two builds of
     the same — or a partially mutated — program produce *syntactically
-    identical* expressions for every unchanged assertion.  The key is
-    therefore the expression tuple itself (hashable), plus the obligation
-    kind.  Verdicts depend only on the expressions and their variables'
-    extents (both captured by the key), never on which config produced
-    them, so sharing across configs is sound.
+    identical* expressions for every unchanged assertion.  Every key is
+    additionally passed through :func:`canonical_key` before lookup:
+    variables are alpha-renamed to De Bruijn-style indices (extents
+    preserved), so congruent obligations hit even when the traces that
+    produced them numbered their locals differently — across configs,
+    assertion reorderings and families.  Verdicts depend only on the
+    expressions and their variables' extents (both captured by the
+    canonical key), never on which config produced them or what its
+    variables were called, so the sharing is sound.  ``canonical_hits``
+    counts the hits that only the renaming made possible (the raw key had
+    never been seen).
     """
 
     # bound on retained verdicts: FIFO-evict beyond this (an optimization
@@ -214,7 +325,17 @@ class ConstraintCache:
     MAX_PERSISTED = 4096
 
     def __init__(self):
+        # memo keyed on CANONICAL keys (see canonical_key)
         self._memo: Dict[tuple, ProofResult] = {}
+        # raw key -> its canonical key: makes repeat lookups (the dominant
+        # hillclimb case) a single dict get instead of a tree rebuild, and
+        # marks which raw keys were seen — a memo hit whose raw key is
+        # unseen was enabled purely by the canonicalization.  FIFO-bounded;
+        # canonical_hits is therefore approximate on runs exceeding
+        # MAX_ENTRIES distinct raw keys, and persisted-store hits are
+        # accounted under persisted_hits only (the saving process' raw
+        # naming is unknowable here).
+        self._raw_seen: Dict[tuple, tuple] = {}
         # warm-start store loaded from disk: stable key -> (note, stage).
         # Only PROVEN verdicts are persisted — they are the ones repeat
         # tuning runs re-discharge, and they need no counterexample
@@ -226,6 +347,7 @@ class ConstraintCache:
         self.hits = 0
         self.misses = 0
         self.persisted_hits = 0
+        self.canonical_hits = 0
 
     def __len__(self) -> int:
         return len(self._memo)
@@ -233,12 +355,21 @@ class ConstraintCache:
     def discharge(self, key: tuple, thunk, *,
                   program_point: str = "") -> ProofResult:
         self.lookups += 1
-        hit = self._memo.get(key)
+        ckey = self._raw_seen.get(key)
+        raw_seen = ckey is not None
+        if not raw_seen:
+            ckey = canonical_key(key)
+            if len(self._raw_seen) >= self.MAX_ENTRIES:
+                self._raw_seen.pop(next(iter(self._raw_seen)))
+            self._raw_seen[key] = ckey
+        hit = self._memo.get(ckey)
         if hit is not None:
             self.hits += 1
+            if not raw_seen:
+                self.canonical_hits += 1
             return self._restamp(hit, program_point)
         if self._persisted:
-            sk = stable_constraint_key(key)
+            sk = stable_constraint_key(ckey)
             entry = self._persisted.get(sk)
             if entry is not None:
                 self.hits += 1
@@ -249,41 +380,65 @@ class ConstraintCache:
                 res = ProofResult(Status.PROVEN, note=note, stage=stage)
                 if len(self._memo) >= self.MAX_ENTRIES:
                     self._memo.pop(next(iter(self._memo)))
-                self._memo[key] = res
+                self._memo[ckey] = res
                 return res
         self.misses += 1
         res = thunk()
         if len(self._memo) >= self.MAX_ENTRIES:
             self._memo.pop(next(iter(self._memo)))
-        self._memo[key] = res
+        self._memo[ckey] = res
         return res
 
     # -- persistence (warm-start across processes) ---------------------------
+    # Format version 2: keys are serialized from *canonical* (alpha-
+    # renamed) constraint keys, so a persisted proof warms congruent
+    # obligations from any config or family.  Version-1 files (raw
+    # analyzer naming) load as empty — a cold start, never a wrong answer.
+    PERSIST_VERSION = 2
+
     def save(self, path) -> int:
-        """Serialize the proven verdicts (stable keys, insertion order) to
-        ``path``, merging over what was loaded and FIFO-evicting beyond
-        :data:`MAX_PERSISTED`.  Returns the number of entries written."""
-        entries = dict(self._persisted)
+        """Serialize the proven verdicts (stable canonical keys, insertion
+        order) to ``path``, merging over what is on disk and FIFO-evicting
+        beyond :data:`MAX_PERSISTED`.  Returns the number of entries
+        written.  Read-merge-write happens under one advisory exclusive
+        lock (see :mod:`repro.core.fslock`): the merge base is re-read
+        *inside* the lock, so two workers saving concurrently union their
+        verdicts instead of the later one clobbering the earlier's."""
+        ours = dict(self._persisted)
         for key, res in self._memo.items():
             if res.ok:
-                sk = stable_constraint_key(key)
-                entries.pop(sk, None)    # refresh recency for this run
-                entries[sk] = [res.note or res.status.value, res.stage]
-        items = list(entries.items())
-        if len(items) > self.MAX_PERSISTED:
-            items = items[-self.MAX_PERSISTED:]
-        Path(path).write_text(json.dumps(
-            {"version": 1, "constraints": items}, indent=0))
+                sk = stable_constraint_key(key)   # key is already canonical
+                ours.pop(sk, None)    # refresh recency for this run
+                ours[sk] = [res.note or res.status.value, res.stage]
+        with locked(path, exclusive=True):
+            merged: Dict[str, list] = {}
+            try:
+                data = json.loads(Path(path).read_text())
+                if data.get("version") == self.PERSIST_VERSION:
+                    merged = dict(data["constraints"])
+            except (OSError, ValueError, KeyError, TypeError):
+                pass
+            for sk, entry in ours.items():    # this run's entries win
+                merged.pop(sk, None)          # recency
+                merged[sk] = list(entry)
+            items = list(merged.items())
+            if len(items) > self.MAX_PERSISTED:
+                items = items[-self.MAX_PERSISTED:]
+            Path(path).write_text(json.dumps(
+                {"version": self.PERSIST_VERSION, "constraints": items},
+                indent=0))
         return len(items)
 
     def load(self, path) -> int:
         """Load previously persisted verdicts; silently starts cold on a
-        missing or unreadable file.  Returns the number of entries newly
-        added to the store."""
+        missing, unreadable or old-format file.  Returns the number of
+        entries newly added to the store.  Reads under an advisory shared
+        lock so a concurrent writer cannot hand us a torn file."""
         before = len(self._persisted)
         try:
-            data = json.loads(Path(path).read_text())
-            if data.get("version") != 1:
+            with locked(path, exclusive=False):
+                data = json.loads(Path(path).read_text())
+            if data.get("version") != self.PERSIST_VERSION:
                 return 0
             self._persisted.update(
                 {k: (str(note), str(stage))
@@ -414,6 +569,10 @@ class VerificationEngine:
     # lru_cache(512) gates this engine replaced; keeps long-lived serving
     # processes from growing the memo without limit)
     MAX_RESULTS = 512
+    # FIFO bound on retained traced programs — wider than MAX_RESULTS so
+    # a program outlives its result and a revisit after result eviction
+    # still skips the re-trace
+    MAX_PROGRAMS = 2048
 
     def __init__(self, *, use_cache: bool = True,
                  constraints: Optional[ConstraintCache] = None):
@@ -424,8 +583,41 @@ class VerificationEngine:
         self.constraints = (constraints if constraints is not None
                             else ConstraintCache())
         self._results: Dict[tuple, EngineResult] = {}
+        # traced-program memo: (family, cfg, prob, bug) -> TileProgram
+        self._programs: Dict[tuple, object] = {}
+        # interned program skeletons: (family, prob, bug, structure_sig).
+        # The first config of a structural class is a *full build*; every
+        # later congruent trace only re-binds config-dependent Exprs into
+        # a known skeleton (the constraint cache then re-proves only the
+        # assertions whose expressions actually changed).
+        self._skeletons: set = set()
         self.verify_calls = 0
         self.result_hits = 0
+        self.program_hits = 0
+        self.full_builds = 0
+        self.skeleton_rebinds = 0
+
+    def _program(self, fam, family: str, cfg, prob, inject_bug):
+        """Incremental program build: exact-trace memo first, then trace
+        and intern the structural skeleton for the accounting above."""
+        key = (family, cfg, prob, inject_bug)
+        if self.use_cache:
+            prog = self._programs.get(key)
+            if prog is not None:
+                self.program_hits += 1
+                return prog
+        prog = fam.build_program(cfg, prob, inject_bug=inject_bug)
+        sig = (family, prob, inject_bug, prog.structure_sig())
+        if sig in self._skeletons:
+            self.skeleton_rebinds += 1
+        else:
+            self.full_builds += 1
+            self._skeletons.add(sig)
+        if self.use_cache:
+            if len(self._programs) >= self.MAX_PROGRAMS:
+                self._programs.pop(next(iter(self._programs)))
+            self._programs[key] = prog
+        return prog
 
     # -- the single entry point ---------------------------------------------
     def verify(self, family: str, cfg, prob, *,
@@ -450,7 +642,7 @@ class VerificationEngine:
         report: Optional[CheckReport] = None
         build_error: Optional[str] = None
         try:
-            prog = fam.build_program(cfg, prob, inject_bug=inject_bug)
+            prog = self._program(fam, family, cfg, prob, inject_bug)
         except Exception as e:
             build_error = str(e)
             feedback.append(Feedback(
@@ -483,8 +675,12 @@ class VerificationEngine:
         return {
             "verify_calls": self.verify_calls,
             "result_hits": self.result_hits,
+            "program_hits": self.program_hits,
+            "full_builds": self.full_builds,
+            "skeleton_rebinds": self.skeleton_rebinds,
             "constraint_lookups": c.lookups,
             "constraint_hits": c.hits,
+            "canonical_hits": c.canonical_hits,
             "persisted_hits": c.persisted_hits,
             "solver_discharges": c.misses,
             "cached_constraints": len(c),
@@ -493,8 +689,19 @@ class VerificationEngine:
     def reset_stats(self) -> None:
         self.verify_calls = 0
         self.result_hits = 0
+        self.program_hits = 0
+        self.full_builds = 0
+        self.skeleton_rebinds = 0
         c = self.constraints
-        c.lookups = c.hits = c.misses = c.persisted_hits = 0
+        c.lookups = c.hits = c.misses = 0
+        c.persisted_hits = c.canonical_hits = 0
+
+    def drop_results(self) -> None:
+        """Forget memoized EngineResults (but keep traced programs and
+        the constraint memo) — what a fresh process attached to warm
+        caches looks like; tests and benchmarks use it to exercise the
+        incremental re-verification path."""
+        self._results.clear()
 
 
 _STRUCT_HINTS = {

@@ -24,6 +24,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.invariants import FlashAttentionConfig
 
+from .._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -139,7 +141,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

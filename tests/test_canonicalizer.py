@@ -1,0 +1,243 @@
+"""Alpha-renaming canonicalizer: renamed / assertion-reordered programs
+produce identical constraint-cache keys and identical verdicts, and a
+canonical warm cache (in-memory or persisted) yields 0 solver discharges
+across different configs — and differently-*named* programs — with
+congruent constraints."""
+import pytest
+
+from repro.core import dsl
+from repro.core.analysis import Analyzer
+from repro.core.families import get_family
+from repro.core.tags import Expr, Var, make_tag
+from repro.core.verify_engine import (CachingDischarger, ConstraintCache,
+                                      VerificationEngine, canonical_key)
+
+
+# ---------------------------------------------------------------------------
+# canonical_key directly
+# ---------------------------------------------------------------------------
+
+class TestCanonicalKey:
+    def test_alpha_renamed_keys_identical(self):
+        k1 = ("zero", (Var("g_i", 4) * 128 + Var("g_j", 8),))
+        k2 = ("zero", (Var("p", 4) * 128 + Var("q", 8),))
+        assert canonical_key(k1) == canonical_key(k2)
+
+    def test_extents_are_load_bearing(self):
+        k1 = ("zero", (Var("g_i", 4) * 128 + Var("g_j", 8),))
+        k3 = ("zero", (Var("g_i", 4) * 128 + Var("g_j", 16),))
+        assert canonical_key(k1) != canonical_key(k3), \
+            "same shape, different domain must not collide"
+
+    def test_rename_that_flips_sort_order_still_shares(self):
+        # "a" < "l0" but "z" > "b": the stored (name-sorted) term order
+        # differs between these congruent keys; the canonicalizer must
+        # assign indices in a name-free order to share them
+        k1 = ("zero", (Var("a", 4) * 128 + Var("l0", 128),))
+        k2 = ("zero", (Var("z", 4) * 128 + Var("b", 128),))
+        assert canonical_key(k1) == canonical_key(k2)
+
+    def test_mod_structure_and_tables_survive(self):
+        from repro.core.tags import app
+        e1 = (Var("g_k", 8) + Var("g_i", 4)) % 8 + app("tbl", Var("g_i", 4),
+                                                       20)
+        e2 = (Var("r", 8) + Var("p", 4)) % 8 + app("tbl", Var("p", 4), 20)
+        assert canonical_key(("inj", e1)) == canonical_key(("inj", e2))
+        # a different table is a different function — must NOT share
+        e3 = (Var("r", 8) + Var("p", 4)) % 8 + app("other", Var("p", 4), 20)
+        assert canonical_key(("inj", e1)) != canonical_key(("inj", e3))
+
+    def test_property_random_renamings_share(self):
+        pytest.importorskip(
+            "hypothesis",
+            reason="hypothesis not installed — "
+                   "pip install -r requirements-dev.txt")
+        from hypothesis import given, settings, strategies as st
+
+        @given(st.integers(0, 2 ** 31), st.permutations(list(range(5))))
+        @settings(max_examples=60, deadline=None)
+        def prop(seed, perm):
+            import random
+            rng = random.Random(seed)
+            extents = [rng.choice((2, 4, 8, 128)) for _ in range(5)]
+            names_a = [f"v{i}" for i in range(5)]
+            names_b = [f"w{perm[i]}" for i in range(5)]   # renamed/permuted
+
+            def build(names):
+                vs = [Var(n, e) for n, e in zip(names, extents)]
+                e = Expr.of(rng.randrange(-4, 5))
+                state = rng.getstate()
+                for v in vs:
+                    c = rng.randrange(-256, 257)
+                    e = e + v * c
+                    if rng.random() < 0.3:
+                        e = e % rng.choice((4, 8, 256))
+                return e, state
+
+            rng.seed(seed)
+            e_a, _ = build(names_a)
+            rng.seed(seed)
+            e_b, _ = build(names_b)
+            assert canonical_key(("zero", (e_a,))) \
+                == canonical_key(("zero", (e_b,)))
+
+        prop()
+
+
+# ---------------------------------------------------------------------------
+# Congruent tile programs (renamed axes/tensors, reordered assertions)
+# ---------------------------------------------------------------------------
+
+def _mini_stagger_gemm(axes=("i", "j", "k"), tensors=("A", "B", "C"),
+                       reorder=False) -> dsl.TileProgram:
+    """A small stagger-K GEMM whose constraint set spans conformity,
+    injectivity, stability, disjointness and coverage."""
+    p = dsl.TileProgram(f"mini_{axes[0]}{tensors[0]}")
+    i = p.add_grid(axes[0], 4)
+    j = p.add_grid(axes[1], 4)
+    k = p.add_grid(axes[2], 8, "arbitrary")
+    A, B, C = tensors
+    p.tensor(A, (512, 1024))
+    p.tensor(B, (1024, 512))
+    p.tensor(C, (512, 512), kind="output")
+    k_idx = (Expr.of(k) + i + j) % 8
+    a = p.load(A, (i * 128, k_idx * 128), (128, 128))
+    b = p.load(B, (k_idx * 128, j * 128), (128, 128))
+    acc = p.alloc((128, 128), "f32")
+    p.assert_contraction(a, b, components=((1,), (0,)))
+    p.matmul(a, b, accumulate=True, acc=acc,
+             retag=lambda li, lj: make_tag(i * 128 + li, j * 128 + lj))
+    p.store(C, acc, (i * 128, j * 128))
+    asserts = [lambda: p.assert_injective(k_idx, (axes[2],)),
+               lambda: p.assert_stable(acc, axes[2]),
+               lambda: p.assert_disjoint_writes(C),
+               lambda: p.assert_coverage(C)]
+    if reorder:
+        asserts.reverse()
+    for add in asserts:
+        add()
+    return p
+
+
+def _statuses(report):
+    return sorted(r.status.value for _, r in report.results)
+
+
+class TestCongruentPrograms:
+    def test_renamed_reordered_program_same_verdict_zero_discharges(self):
+        cache = ConstraintCache()
+        r1 = Analyzer(_mini_stagger_gemm(),
+                      discharger=CachingDischarger(cache)).run()
+        misses_cold = cache.misses
+        assert r1.ok and misses_cold > 0
+        r2 = Analyzer(
+            _mini_stagger_gemm(axes=("p", "q", "r"),
+                               tensors=("X", "Y", "Z"), reorder=True),
+            discharger=CachingDischarger(cache)).run()
+        assert r2.ok
+        assert _statuses(r1) == _statuses(r2)
+        assert cache.misses == misses_cold, \
+            "congruent renamed program must re-discharge nothing"
+        assert cache.canonical_hits > 0, \
+            "the sharing must come from canonical keys, not raw ones"
+
+    def test_canonical_warm_cache_persists_across_naming(self, tmp_path):
+        path = tmp_path / "constraint_cache.json"
+        cache = ConstraintCache()
+        Analyzer(_mini_stagger_gemm(),
+                 discharger=CachingDischarger(cache)).run()
+        assert cache.save(path) > 0
+
+        warm = ConstraintCache()
+        assert warm.load(path) > 0
+        r = Analyzer(
+            _mini_stagger_gemm(axes=("p", "q", "r"),
+                               tensors=("X", "Y", "Z"), reorder=True),
+            discharger=CachingDischarger(warm)).run()
+        assert r.ok
+        assert warm.misses == 0, \
+            "persisted canonical verdicts must warm the renamed program"
+        assert warm.persisted_hits > 0
+
+
+class TestCrossConfigSharing:
+    """Different *configs* with congruent constraints: flash attention
+    with and without the in-kernel causal mask traces one elementwise op
+    less, shifting every later tile/local number — raw keys would
+    diverge wherever locals survive, canonical keys must not."""
+
+    FA = get_family("flash_attention")
+
+    def _prob(self):
+        return self.FA.problem_cls(2, 8, 2, 2048, 2048, 128)
+
+    def test_zero_discharges_across_congruent_configs(self):
+        eng = VerificationEngine()
+        r1 = eng.verify("flash_attention", self.FA.config_cls(), self._prob())
+        assert r1.hard_ok
+        before = eng.stats()["solver_discharges"]
+        r2 = eng.verify("flash_attention",
+                        self.FA.config_cls(applies_mask=False), self._prob())
+        assert r2.hard_ok
+        assert eng.stats()["solver_discharges"] == before, \
+            "congruent constraints across configs must all hit the cache"
+
+    def test_warm_start_across_congruent_configs(self, tmp_path):
+        path = tmp_path / "constraint_cache.json"
+        cold = VerificationEngine()
+        cold.verify("flash_attention", self.FA.config_cls(), self._prob())
+        assert cold.constraints.save(path) > 0
+
+        warm_cache = ConstraintCache()
+        warm_cache.load(path)
+        warm = VerificationEngine(constraints=warm_cache)
+        warm.verify("flash_attention",
+                    self.FA.config_cls(applies_mask=False), self._prob())
+        s = warm.stats()
+        assert s["solver_discharges"] == 0, s
+        assert s["persisted_hits"] > 0
+
+
+class TestSkeletonReuse:
+    """The engine's incremental program build: one full build per
+    structural class, re-binds for every congruent config, and no
+    re-traces at all once the program memo is warm."""
+
+    GEMM = get_family("gemm")
+
+    def test_one_full_build_then_rebinds(self):
+        eng = VerificationEngine()
+        prob = self.GEMM.problem_cls(2048, 2048, 2048, "bf16")
+        cfgs = [self.GEMM.config_cls(bm=bm, bn=bn)
+                for bm, bn in ((128, 128), (256, 128), (128, 256),
+                               (256, 256), (512, 128))]
+        for cfg in cfgs:
+            eng.verify("gemm", cfg, prob)
+        s = eng.stats()
+        assert s["full_builds"] == 1, s
+        assert s["skeleton_rebinds"] == len(cfgs) - 1, s
+
+    def test_structural_change_is_a_full_build(self):
+        eng = VerificationEngine()
+        prob = self.GEMM.problem_cls(2048, 2048, 2048, "bf16")
+        eng.verify("gemm", self.GEMM.config_cls(), prob)
+        eng.verify("gemm", self.GEMM.config_cls(split_k=2), prob)
+        s = eng.stats()
+        # split_k adds a grid axis: a genuinely new skeleton
+        assert s["full_builds"] == 2 and s["skeleton_rebinds"] == 0, s
+
+    def test_repeat_run_never_retraces(self):
+        eng = VerificationEngine()
+        prob = self.GEMM.problem_cls(2048, 2048, 2048, "bf16")
+        cfgs = [self.GEMM.config_cls(bm=bm) for bm in (128, 256, 512)]
+        for cfg in cfgs:
+            eng.verify("gemm", cfg, prob)
+        # fresh-process analogue: results gone, programs + constraints warm
+        eng.drop_results()
+        eng.reset_stats()
+        for cfg in cfgs:
+            eng.verify("gemm", cfg, prob)
+        s = eng.stats()
+        assert s["full_builds"] == 0 and s["skeleton_rebinds"] == 0, s
+        assert s["program_hits"] == len(cfgs), s
+        assert s["solver_discharges"] == 0, s

@@ -115,6 +115,30 @@ class TestRoundTrip:
                                    "solver")
                 assert f.assertion_id and f.repair_hint
 
+    def test_bug_signatures_are_ground_truth(self, name):
+        """Every injectable bug declares a BugSignature, and injecting
+        the bug actually produces a violation the signature matches at
+        *exact* specificity (on the bug-friendly fixture and on the
+        production example) — the property targeted repair rests on."""
+        from repro.core.families import MATCH_EXACT
+        from repro.core.verify_engine import VerificationEngine
+        fam = get_family(name)
+        sigs = {s.bug: s for s in fam.bug_signatures}
+        assert set(sigs) == set(fam.injectable_bugs), \
+            f"{name}: fault menu and signature map disagree"
+        eng = VerificationEngine()
+        fixtures = [_fixture(name)[1:]]
+        if fam.example is not None:
+            fixtures.append(fam.example())
+        for cfg, prob in fixtures:
+            for bug in fam.bugs_for(cfg, prob):
+                res = eng.verify(name, cfg, prob, inject_bug=bug)
+                best = max((sigs[bug].specificity(f.stage, f.assertion_id)
+                            for f in res.violations), default=0)
+                assert best == MATCH_EXACT, \
+                    (f"{name}:{bug} signature missed its own feedback: "
+                     f"{[(f.stage, f.assertion_id) for f in res.violations]}")
+
     def test_example_is_tunable(self, name):
         """examples/argus_optimize.py tunes every family's example() —
         it must verify clean and enumerate at least one skill context."""

@@ -187,6 +187,10 @@ class TestSSDKernel:
 
 class TestDispatchProperties:
     def test_capacity_respected_and_dests_valid(self):
+        pytest.importorskip(
+            "hypothesis",
+            reason="hypothesis not installed — "
+                   "pip install -r requirements-dev.txt")
         from hypothesis import given, settings, strategies as st
 
         @given(st.integers(0, 10_000), st.integers(2, 16),

@@ -112,7 +112,11 @@ class TestFaultTolerance:
 class TestShardingRules:
     def _mesh(self):
         from jax.sharding import AbstractMesh
-        return AbstractMesh((16, 16), ("data", "model"))
+        try:
+            return AbstractMesh((16, 16), ("data", "model"))
+        except TypeError:
+            # jax 0.4.x spelling: one tuple of (axis name, size) pairs
+            return AbstractMesh((("data", 16), ("model", 16)))
 
     def test_divisibility_fallback(self):
         mesh = self._mesh()

@@ -234,6 +234,30 @@ class TestConstraintPersistence:
         finally:
             ConstraintCache.MAX_PERSISTED = old_bound
 
+    def test_concurrent_saves_union_instead_of_clobber(self, tmp_path):
+        """Two workers saving to one file must union their verdicts (the
+        merge base is re-read inside the exclusive lock), not have the
+        later save clobber the earlier one's entries."""
+        path = tmp_path / "constraint_cache.json"
+        qg = get_family("quant_gemm")
+        qg_cfg, qg_prob = qg.example()
+
+        worker_a = VerificationEngine()
+        worker_a.verify("gemm", GEMM.config_cls(), PROB)
+        worker_b = VerificationEngine()
+        worker_b.verify("quant_gemm", qg_cfg, qg_prob)
+        n_a = worker_a.constraints.save(path)
+        n_b = worker_b.constraints.save(path)
+        assert n_b > n_a, "B's save must keep A's on-disk entries"
+
+        warm_cache = ConstraintCache()
+        warm_cache.load(path)
+        warm = VerificationEngine(constraints=warm_cache)
+        warm.verify("gemm", GEMM.config_cls(), PROB)
+        warm.verify("quant_gemm", qg_cfg, qg_prob)
+        assert warm.stats()["solver_discharges"] == 0, \
+            "the union must warm both workers' constraint sets"
+
     def test_corrupt_or_missing_file_starts_cold(self, tmp_path):
         cache = ConstraintCache()
         assert cache.load(tmp_path / "nope.json") == 0
