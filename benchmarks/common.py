@@ -1,16 +1,17 @@
 """Shared benchmark utilities: wall-clock measurement of jitted callables
-on this host (XLA:CPU — relative numbers) + CSV emission."""
+on this host (XLA:CPU — relative numbers), CSV emission, and the fleet-
+journal cache report the paper tables print when pointed at an
+orchestrator run (``--journal``)."""
 from __future__ import annotations
 
 import time
 from typing import Callable, Iterable, List
 
-import jax
-
 
 def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5,
                 min_s: float = 0.5) -> float:
     """Mean µs/call after warmup (compiles on first call)."""
+    import jax    # lazy: journal-report users need no accelerator stack
     for _ in range(warmup):
         out = fn(*args)
     jax.block_until_ready(out)
@@ -31,3 +32,25 @@ def emit_csv(rows: Iterable[dict], header: List[str]) -> None:
     print(",".join(header))
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
+
+
+def print_fleet_journal_report(journal_path) -> None:
+    """Aggregate VerificationEngine stats across every worker's journaled
+    items (``fleet_journal.jsonl`` from :mod:`repro.core.tuning`) and
+    print them as a CSV section — the cross-worker cache-sharing rates
+    (canonical hits, skeleton re-binds, persisted warm-starts) the
+    scaling story rests on."""
+    from repro.core.tuning import Journal
+    from repro.core.verify_engine import merge_stats
+
+    records = Journal(journal_path).records()
+    stats = merge_stats(r.get("verify_stats", {})
+                        for r in records.values())
+    workers = sorted({r.get("worker") for r in records.values()})
+    print(f"\nfleet_cache_report ({journal_path}: "
+          f"{len(records)} items, workers {workers})")
+    print("metric,value")
+    for k in ("verify_calls", "result_hits", "program_hits",
+              "full_builds", "skeleton_rebinds", "constraint_hits",
+              "canonical_hits", "persisted_hits", "solver_discharges"):
+        print(f"{k},{stats.get(k, 0)}")

@@ -1,0 +1,114 @@
+"""Fleet-tuner scaling: wall-clock and solver discharges vs worker count.
+
+Runs the orchestrator (:mod:`repro.core.tuning`) over the registered
+families at several ``--workers`` values, each in a fresh directory
+(cold caches — the point is what the *shared* persisted caches do within
+one fleet run), and reports per worker count: wall-clock, total solver
+discharges summed across workers, constraint/persisted/canonical hits,
+and whether the dispatch table is bitwise-identical to the solo run's.
+
+The two headline properties (hard-asserted under ``--smoke``, which CI
+runs):
+
+* **determinism** — the dispatch table from ``--workers N`` is byte-for-
+  byte the solo table for every N: results depend on (jobs, seeds), not
+  on scheduling;
+* **cache-sharing sublinearity** — total solver discharges at N workers
+  stay *strictly below* N× the solo run's: workers union their proofs
+  through ``constraint_cache.json`` (flock'd read-merge-write) instead
+  of re-proving each other's obligations.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.core.tuning import enumerate_jobs, run_fleet  # noqa: E402
+
+
+def run_at(jobs, workers: int, *, base_budget: int, max_budget: int,
+           out_root: Path):
+    out = out_root / f"workers{workers}"
+    t0 = time.perf_counter()
+    rep = run_fleet(jobs, workers=workers, out_dir=out,
+                    base_budget=base_budget, max_budget=max_budget)
+    wall = time.perf_counter() - t0
+    table_bytes = (out / "dispatch_table.json").read_bytes()
+    return rep, wall, table_bytes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, nargs="+",
+                    default=[1, 2, 4],
+                    help="worker counts to sweep (1 must be included: "
+                         "it is the determinism/discharge baseline)")
+    ap.add_argument("--family", action="append", default=None,
+                    help="restrict to these families (repeatable); "
+                         "default: every registered family")
+    ap.add_argument("--base-budget", type=int, default=4)
+    ap.add_argument("--max-budget", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny budgets, workers 1 and 4, and "
+                         "assert determinism + sublinear discharges")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.workers = [1, 4]
+        args.base_budget, args.max_budget = 2, 4
+    if 1 not in args.workers:
+        args.workers = [1] + args.workers
+
+    jobs = enumerate_jobs(args.family, seed=0)
+    print(f"# {len(jobs)} jobs, budgets {args.base_budget}.."
+          f"{args.max_budget}", file=sys.stderr)
+
+    header = ["workers", "wall_s", "solver_discharges", "constraint_hits",
+              "persisted_hits", "canonical_hits", "skeleton_rebinds",
+              "table_identical_to_solo"]
+    print(",".join(header))
+    rows = {}
+    solo_table = None
+    with tempfile.TemporaryDirectory(prefix="fleet_scaling_") as root:
+        for n in sorted(set(args.workers)):
+            rep, wall, table = run_at(jobs, n,
+                                      base_budget=args.base_budget,
+                                      max_budget=args.max_budget,
+                                      out_root=Path(root))
+            if n == 1:
+                solo_table = table
+            s = rep.stats
+            rows[n] = {"workers": n, "wall_s": round(wall, 2),
+                       "solver_discharges": s.get("solver_discharges", 0),
+                       "constraint_hits": s.get("constraint_hits", 0),
+                       "persisted_hits": s.get("persisted_hits", 0),
+                       "canonical_hits": s.get("canonical_hits", 0),
+                       "skeleton_rebinds": s.get("skeleton_rebinds", 0),
+                       "table_identical_to_solo": table == solo_table}
+            print(",".join(str(rows[n][h]) for h in header), flush=True)
+
+    solo = rows[1]["solver_discharges"]
+    failures = []
+    for n, row in rows.items():
+        if not row["table_identical_to_solo"]:
+            failures.append(f"workers={n} dispatch table diverged from "
+                            f"the solo run")
+        if n > 1 and not row["solver_discharges"] < n * solo:
+            failures.append(
+                f"workers={n} discharged {row['solver_discharges']} — "
+                f"not below {n}x the solo run's {solo} (cache sharing "
+                f"broken?)")
+    verdict = ("dispatch tables identical across worker counts; "
+               "discharges scale sublinearly"
+               if not failures else "; ".join(failures))
+    print(f"\n{verdict}")
+    if args.smoke and failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,9 +37,13 @@ def main() -> None:
                          "benchmarks.roofline"))
 
     from importlib import import_module
+    from inspect import signature
     for title, mod in sections:
         print(f"\n### {title}")
-        import_module(mod).main()
+        fn = import_module(mod).main
+        # sections with their own CLI (e.g. --journal) must not see the
+        # umbrella's section argument
+        fn([]) if signature(fn).parameters else fn()
 
 
 if __name__ == "__main__":

@@ -11,13 +11,24 @@ A second section sweeps every skill context of each family's production
 example through one shared VerificationEngine and reports the
 incremental-verification rates per family: full skeleton builds vs
 config-Expr re-binds, and canonical-key constraint sharing.
+
+With ``--journal <fleet_journal.jsonl>`` (an orchestrator run's journal,
+see :mod:`repro.core.tuning`), a third section aggregates the verify
+stats across every worker's journaled items — canonical hits, skeleton
+re-binds, persisted warm-starts — so the cross-worker cache-sharing
+story shows up in the paper table.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
+try:
+    from .common import print_fleet_journal_report  # noqa: E402
+except ImportError:     # run as a script: benchmarks/ is sys.path[0]
+    from common import print_fleet_journal_report  # noqa: E402
 from repro.core.families import all_families, family_names  # noqa: E402
 from repro.core.harness.knowledge import KNOWLEDGE_BASE  # noqa: E402
 from repro.core.verify_engine import VerificationEngine  # noqa: E402
@@ -59,7 +70,14 @@ def cache_rates():
                "solver_discharges": s["solver_discharges"]}
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--journal", default=None,
+                    help="fleet_journal.jsonl from an orchestrator run: "
+                         "also print the aggregated cross-worker cache "
+                         "stats")
+    args = ap.parse_args(argv)
+
     header = ["skill", "tier"] + list(FAMILIES) + ["invariants"]
     print(",".join(header))
     for r in rows():
@@ -72,6 +90,9 @@ def main():
     print(",".join(header2))
     for r in cache_rates():
         print(",".join(str(r[h]) for h in header2))
+
+    if args.journal:
+        print_fleet_journal_report(args.journal)
 
 
 if __name__ == "__main__":

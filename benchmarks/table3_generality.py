@@ -15,14 +15,24 @@ Reported per arm: Pass@1 (first lowering correct or statically repaired
 before any unit test), solved%, mean validator cost units (the token-budget
 analogue), mean speedup of the best valid config.  Paper: invariants raise
 Pass@1 15–17 points and cut cost ~5–17% (§9.4).
+
+With ``--journal <fleet_journal.jsonl>`` (an orchestrator run, see
+:mod:`repro.core.tuning`), a final section aggregates the verify stats
+across every worker's journaled items — the cross-worker canonical-hit /
+skeleton-rebind rates behind the fleet scaling story.
 """
 from __future__ import annotations
 
+import argparse
 import statistics
 import sys
 
 sys.path.insert(0, "src")
 
+try:
+    from .common import print_fleet_journal_report  # noqa: E402
+except ImportError:     # run as a script: benchmarks/ is sys.path[0]
+    from common import print_fleet_journal_report  # noqa: E402
 from repro.core.families import get_family  # noqa: E402
 from repro.core.harness import (KernelState, LoweringAgent, Planner,
                                 Selector, Validator,
@@ -148,7 +158,13 @@ def summarize(name, rows):
     }
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--journal", default=None,
+                    help="fleet_journal.jsonl from an orchestrator run: "
+                         "also print the aggregated cross-worker cache "
+                         "stats")
+    args = ap.parse_args(argv)
     tasks = build_suite()
     header = ["name", "pass@1_pct", "solved_pct", "mean_cost_units",
               "mean_speedup", "silent_corruptions"]
@@ -174,6 +190,9 @@ def main():
               f"{s['program_hits']},{s['constraint_hits']},"
               f"{s['canonical_hits']},{s['solver_discharges']}",
               flush=True)
+
+    if args.journal:
+        print_fleet_journal_report(args.journal)
 
 
 if __name__ == "__main__":

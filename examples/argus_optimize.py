@@ -1,115 +1,106 @@
-"""ARGUS kernel tuning: the paper's workflow as a framework feature.
+"""ARGUS fleet tuning: the paper's workflow at production scale.
 
-    PYTHONPATH=src python examples/argus_optimize.py --family gemm \
-        --iterations 20 [--run-kernels]
+    PYTHONPATH=src python examples/argus_optimize.py --workers 4 \
+        [--family gemm --family quant_gemm] [--base-budget 4] \
+        [--max-budget 32] [--out-dir .] [--run-kernels]
 
-Runs the agentic harness (planner -> selector -> lowering -> validator,
-invariant-gated) on each registered kernel family's production problem —
-from dense GEMM and attention through MoE, SSD, quantized GEMM and
-paged-attention decode — printing the trajectory and writing the winning
-configs to ``tuning_cache.json``, the file the training/serving
-launchers consult for kernel configs.  Families come straight from the
-registry (:mod:`repro.core.families`): registering a new family makes it
-tunable here with no changes to this script.  The solver's constraint
-verdicts persist to ``constraint_cache.json`` alongside, so repeat runs
-start warm.  ``--run-kernels`` additionally
-executes every accepted candidate in Pallas interpret mode against the
-jnp oracle (slow; CI uses small shapes).
+Thin CLI over :mod:`repro.core.tuning`: tuning jobs are enumerated from
+the kernel-family registry (one per registered family's production
+problem), budgets are allocated successive-halving style (every job gets
+``--base-budget`` iterations, survivors by verified cost-model score get
+doubled budgets up to ``--max-budget``), and work items run on
+``--workers`` cache-sharing worker processes (``--workers 1`` keeps the
+old serial behavior).  Progress is journaled to
+``fleet_journal.jsonl`` — a killed run re-invoked with the same flags
+resumes without re-running finished items — and the output is a
+versioned ``dispatch_table.json`` (family -> shape bucket -> winning
+config + provenance) that the serving/launch paths consult, plus the
+legacy ``tuning_cache.json`` mirror and the shared
+``constraint_cache.json`` solver warm start.  The dispatch table is
+bitwise-identical for any ``--workers`` value.
+
+``--expect-resume`` asserts that a re-invocation ran nothing (CI uses it
+to gate journal resumability); ``--fresh`` discards a stale journal.
 """
 import argparse
-import dataclasses
-import json
 import sys
-from pathlib import Path
 
 sys.path.insert(0, "src")
 
-from repro.core.families import all_families, get_family  # noqa: E402
-from repro.core.fslock import locked  # noqa: E402
-from repro.core.harness import (KernelState, LoweringAgent, Planner,
-                                Selector, Validator,
-                                optimize_kernel)  # noqa: E402
-from repro.core.verify_engine import (ConstraintCache,
-                                      VerificationEngine)  # noqa: E402
+from repro.core.families import all_families  # noqa: E402
+from repro.core.tuning import enumerate_jobs, run_fleet  # noqa: E402
 
 
-def main():
+def main(argv=None):
     names = [f.name for f in all_families() if f.example is not None]
     ap = argparse.ArgumentParser()
-    ap.add_argument("--family", default="all", choices=["all"] + names)
-    ap.add_argument("--iterations", type=int, default=20)
-    ap.add_argument("--run-kernels", action="store_true")
-    ap.add_argument("--out", default="tuning_cache.json")
-    args = ap.parse_args()
+    ap.add_argument("--family", action="append", choices=names,
+                    help="tune only this family (repeatable); "
+                         "default: all registered families")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker processes (1 = serial, in-process)")
+    ap.add_argument("--base-budget", type=int, default=4,
+                    help="rung-0 iterations for every job")
+    ap.add_argument("--max-budget", type=int, default=32,
+                    help="per-rung iteration cap (budgets double per "
+                         "rung up to this)")
+    ap.add_argument("--eta", type=int, default=2,
+                    help="successive-halving keep fraction 1/eta")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--run-kernels", action="store_true",
+                    help="execute accepted candidates in Pallas "
+                         "interpret mode against the jnp oracle (slow)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where the journal, caches and dispatch table "
+                         "live")
+    ap.add_argument("--fresh", action="store_true",
+                    help="discard an existing journal for a different "
+                         "job set")
+    ap.add_argument("--expect-resume", action="store_true",
+                    help="assert everything was already journaled "
+                         "(nothing ran) — CI resumability gate")
+    args = ap.parse_args(argv)
 
-    fams = names if args.family == "all" else [args.family]
-    cache = {}
-    if Path(args.out).exists():
-        # advisory shared lock: worker processes tuning different
-        # families may share these cache files (see repro.core.fslock)
-        with locked(args.out, exclusive=False):
-            cache = json.loads(Path(args.out).read_text())
+    jobs = enumerate_jobs(args.family, seed=args.seed)
+    print(f"fleet: {len(jobs)} jobs, {args.workers} worker(s), "
+          f"budgets {args.base_budget}..{args.max_budget} (eta "
+          f"{args.eta})")
+    report = run_fleet(jobs, workers=args.workers, out_dir=args.out_dir,
+                       base_budget=args.base_budget,
+                       max_budget=args.max_budget, eta=args.eta,
+                       run_kernels=args.run_kernels, fresh=args.fresh,
+                       log=print)
 
-    # one engine across families: repeat configs revalidate for free.
-    # The constraint memo persists next to the tuning cache, so repeat
-    # tuning runs start warm (ROADMAP "solver-cache persistence").
-    constraints = ConstraintCache()
-    cache_path = Path(args.out).with_name("constraint_cache.json")
-    loaded = constraints.load(cache_path)
-    if loaded:
-        print(f"warm-started {loaded} persisted constraint verdicts "
-              f"from {cache_path}")
-    engine = VerificationEngine(constraints=constraints)
-    for fam_name in fams:
-        fam = get_family(fam_name)
-        cfg, prob = fam.example()
-        st = KernelState(fam_name, cfg, prob).refresh()
-        print(f"\n=== {fam_name}: baseline {st.est.time_s*1e3:.3f} ms "
-              f"({st.est.bound}-bound, {st.est.tflops():.0f} TFLOPS)")
-        res = optimize_kernel(
-            st, planner=Planner(), selector=Selector(temperature=0.15),
-            lowering=LoweringAgent(fault_model=False),
-            validator=Validator(run_kernels=args.run_kernels,
-                                engine=engine),
-            iterations=args.iterations)
-        for r in res.history:
-            mark = "✓" if r.accepted else ("·" if r.verdict.ok else "✗")
-            print(f"  {mark} {r.skill:22s} {r.context:18s} "
-                  f"{r.time_s*1e3:9.3f} ms"
-                  + (f"   [{r.verdict.violation_report.splitlines()[0][:60]}]"
-                     if not r.verdict.ok else ""))
-        best = res.best_state
-        print(f"  best: {best.cfg.name()}  {res.best_time_s*1e3:.3f} ms "
-              f"({res.speedup:.2f}x, {best.est.tflops():.0f} TFLOPS)")
-        vs = res.verify_stats
-        print(f"  verify: {vs.get('verify_calls', 0)} calls, "
-              f"{vs.get('result_hits', 0)} result hits, "
-              f"{vs.get('constraint_hits', 0)} constraint hits "
-              f"({vs.get('persisted_hits', 0)} from disk), "
-              f"{vs.get('solver_discharges', 0)} solver discharges")
-        print(f"  build:  {vs.get('full_builds', 0)} full builds, "
-              f"{vs.get('skeleton_rebinds', 0)} skeleton rebinds, "
-              f"{vs.get('program_hits', 0)} program hits, "
-              f"{vs.get('canonical_hits', 0)} canonical-key hits")
-        cache[fam_name] = {"problem": dataclasses.asdict(prob),
-                           "config": dataclasses.asdict(best.cfg),
-                           "est_ms": res.best_time_s * 1e3,
-                           "speedup": res.speedup}
-    with locked(args.out, exclusive=True):
-        # re-read inside the lock: a worker tuning other families may
-        # have written since we loaded — union, ours winning on overlap
-        disk = {}
-        if Path(args.out).exists():
-            try:
-                disk = json.loads(Path(args.out).read_text())
-            except ValueError:
-                disk = {}
-        disk.update(cache)
-        cache = disk
-        Path(args.out).write_text(json.dumps(cache, indent=2))
-    n = constraints.save(cache_path)
-    print(f"\nwrote {args.out} and {n} constraint verdicts to "
-          f"{cache_path}")
+    print(f"\nfleet done: {report.rungs} rungs, {report.ran} items ran, "
+          f"{report.skipped} resumed from the journal, "
+          f"{report.wall_s:.1f}s wall")
+    for family, buckets in sorted(report.table.entries.items()):
+        for bucket, e in sorted(buckets.items()):
+            p = e["provenance"]
+            print(f"  {family:18s} {e['est_ms']:9.3f} ms "
+                  f"({e['speedup']:.2f}x, {p['rungs']} rungs, "
+                  f"budget {p['budget']}, {p['repairs']} repairs)")
+    s = report.stats
+    if s:
+        print(f"verify (aggregated across workers, this run): "
+              f"{s.get('verify_calls', 0)} calls, "
+              f"{s.get('result_hits', 0)} result hits, "
+              f"{s.get('constraint_hits', 0)} constraint hits "
+              f"({s.get('persisted_hits', 0)} from disk, "
+              f"{s.get('canonical_hits', 0)} canonical), "
+              f"{s.get('solver_discharges', 0)} solver discharges")
+        print(f"build  (aggregated across workers, this run): "
+              f"{s.get('full_builds', 0)} full builds, "
+              f"{s.get('skeleton_rebinds', 0)} skeleton rebinds, "
+              f"{s.get('program_hits', 0)} program hits")
+    print(f"wrote {args.out_dir}/dispatch_table.json "
+          f"({report.table.summary()})")
+
+    if args.expect_resume and report.ran:
+        raise SystemExit(
+            f"--expect-resume: journal should have covered everything "
+            f"but {report.ran} items ran")
+    return report
 
 
 if __name__ == "__main__":

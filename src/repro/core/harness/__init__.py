@@ -1,6 +1,6 @@
 from .costmodel import CostEstimate, estimate
-from .icrl import (OptimizeResult, StepRecord, icrl_train,
-                   optimize_kernel)
+from .icrl import (OptimizeCheckpoint, OptimizeResult, StepRecord,
+                   icrl_train, optimize_kernel)
 from .knowledge import KNOWLEDGE_BASE, Skill, skills_for
 from .lowering import LoweredState, LoweringAgent, RepairAttempt
 from .planner import KernelState, Planner, PlannerParams
@@ -11,4 +11,4 @@ __all__ = ["estimate", "CostEstimate", "KNOWLEDGE_BASE", "Skill",
            "skills_for", "Planner", "PlannerParams", "KernelState",
            "Selector", "LoweringAgent", "LoweredState", "RepairAttempt",
            "Validator", "optimize_kernel", "icrl_train", "OptimizeResult",
-           "StepRecord"]
+           "OptimizeCheckpoint", "StepRecord"]

@@ -36,6 +36,22 @@ class StepRecord:
 
 
 @dataclass
+class OptimizeCheckpoint:
+    """Resumable hillclimb state — what a budgeted run hands to its
+    continuation.  The fleet tuner (:mod:`repro.core.tuning`) runs
+    successive-halving rungs as budgeted :func:`optimize_kernel` slices:
+    each rung resumes from the previous rung's checkpoint, so doubling a
+    survivor's budget continues its trajectory instead of restarting it.
+    Configs are stored as config instances; ``baseline_time_s`` is the
+    *original* rung-0 baseline so speedups stay cumulative."""
+
+    cur_cfg: object
+    best_cfg: object
+    baseline_time_s: float
+    iterations_done: int = 0
+
+
+@dataclass
 class OptimizeResult:
     best_state: KernelState
     best_time_s: float
@@ -46,10 +62,21 @@ class OptimizeResult:
     # VerificationEngine accounting for THIS run (deltas, so a shared
     # engine reports per-run numbers) — fig2_ablation prints them
     verify_stats: Dict[str, int] = field(default_factory=dict)
+    # where the walk ended (≠ best_state after a sideways move) and the
+    # cumulative iteration count — what checkpoint() snapshots
+    final_state: Optional[KernelState] = None
+    iterations_done: int = 0
 
     @property
     def speedup(self) -> float:
         return self.baseline_time_s / self.best_time_s
+
+    def checkpoint(self) -> OptimizeCheckpoint:
+        """Snapshot this run so a later budgeted run can continue it."""
+        cur = self.final_state or self.best_state
+        return OptimizeCheckpoint(cur.cfg, self.best_state.cfg,
+                                  self.baseline_time_s,
+                                  self.iterations_done)
 
     def repair_summary(self) -> Dict[str, Dict[str, int]]:
         """Per-stage repair outcomes across the run: for each evidence
@@ -72,18 +99,32 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
                     lowering: Optional[LoweringAgent] = None,
                     validator: Optional[Validator] = None,
                     iterations: int = 10,
-                    max_repairs: int = 2) -> OptimizeResult:
+                    max_repairs: int = 2,
+                    checkpoint: Optional[OptimizeCheckpoint] = None
+                    ) -> OptimizeResult:
+    """Inner hillclimb (one s₀, ``iterations`` steps, keep the best valid
+    candidate).  With ``checkpoint``, the walk resumes where a previous
+    budgeted slice left off: current/best configs come from the
+    checkpoint (their estimates are re-derived from the cost model, so a
+    serialized checkpoint cannot smuggle in a stale score) and the
+    baseline stays the original run's."""
     selector = selector or Selector()
     lowering = lowering or LoweringAgent()
     validator = validator or Validator()
     stats0 = validator.engine.stats()
 
     state0.refresh()
-    best = state0
-    best_t = state0.est.time_s
-    res = OptimizeResult(best, best_t, best_t)
-
-    cur = state0
+    if checkpoint is not None:
+        best = KernelState(state0.family, checkpoint.best_cfg,
+                           state0.prob).refresh()
+        cur = KernelState(state0.family, checkpoint.cur_cfg,
+                          state0.prob).refresh()
+        best_t = best.est.time_s
+        res = OptimizeResult(best, best_t, checkpoint.baseline_time_s)
+    else:
+        best = cur = state0
+        best_t = state0.est.time_s
+        res = OptimizeResult(best, best_t, best_t)
     for _ in range(iterations):
         props = planner.propose(cur)
         prop = selector.select(props)
@@ -115,6 +156,9 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
                                       verdict.est_time_s,
                                       repairs=attempts))
     res.best_state, res.best_time_s = best, best_t
+    res.final_state = cur
+    res.iterations_done = len(res.history) + (
+        checkpoint.iterations_done if checkpoint is not None else 0)
     res.solved = any(r.verdict.ok for r in res.history) or not res.history
     stats1 = validator.engine.stats()
     res.verify_stats = {k: stats1[k] - stats0.get(k, 0) for k in stats1}

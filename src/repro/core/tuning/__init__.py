@@ -1,0 +1,36 @@
+"""Fleet tuner: multi-process autotuning orchestration (docs/tuning.md).
+
+The subsystem that takes the paper's per-kernel agentic search to
+production scale: jobs enumerated from the kernel-family registry
+(:mod:`.jobs`), successive-halving budget allocation (:mod:`.scheduler`),
+a crash-resumable JSONL journal (:mod:`.journal`), cache-sharing worker
+processes (:mod:`.pool`), and a versioned serving dispatch table
+(:mod:`.dispatch`) that the serve/launch paths consult.
+
+    PYTHONPATH=src python examples/argus_optimize.py --workers 4
+"""
+from .dispatch import (DispatchTable, build_table, configured, install,
+                       shape_bucket)
+from .dispatch import load as load_dispatch_table
+from .jobs import TuningJob, enumerate_jobs, make_job, stable_seed
+
+# The orchestration half (pool pulls in multiprocessing + the whole
+# harness) loads lazily: the serving/kernel paths import this package
+# only for the dispatch hooks above and must not pay for the fleet.
+_LAZY = {"Journal": ".journal", "JournalMismatch": ".journal",
+         "SuccessiveHalving": ".scheduler", "WorkItem": ".scheduler",
+         "FleetReport": ".pool", "ItemRunner": ".pool",
+         "fleet_fingerprint": ".pool", "run_fleet": ".pool"}
+
+__all__ = ["TuningJob", "enumerate_jobs", "make_job", "stable_seed",
+           "DispatchTable", "build_table", "load_dispatch_table",
+           "configured", "install", "shape_bucket", *_LAZY]
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    from importlib import import_module
+    return getattr(import_module(target, __name__), name)

@@ -1,0 +1,341 @@
+"""Multi-process fleet orchestration: workers, rung barriers, resume.
+
+``run_fleet`` drives the whole pipeline: enumerate → schedule →
+execute → journal → dispatch table.  Work items execute either inline
+(``--workers 1`` — the old serial ``argus_optimize`` behavior, one
+long-lived engine) or on a pool of ``multiprocessing`` *spawn* workers.
+Each worker owns a :class:`repro.core.verify_engine.VerificationEngine`
+whose :class:`ConstraintCache` warm-starts from the shared
+``constraint_cache.json`` before every item and publishes back (a
+read-merge-write union under the :mod:`repro.core.fslock` advisory lock)
+after every item — so worker B re-uses the canonicalized proofs worker A
+just discharged instead of re-proving them, which is why N workers
+discharge far fewer than N× a solo run
+(``benchmarks/fig_tuner_scaling.py``).
+
+Determinism: an item's outcome depends only on (job, rung, previous-rung
+checkpoint) — selector/lowering RNG streams are content-seeded via
+:func:`repro.core.tuning.jobs.stable_seed`, verdicts and cost scores are
+cache-independent — so the dispatch table is bitwise-identical for any
+worker count.  Crash safety: the parent journals every completed item;
+re-invoking replays the deterministic schedule and runs only the items
+the journal is missing.  Workers are daemonic *and* watch their parent
+pid, so a SIGKILLed orchestrator does not leave orphans grinding on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import multiprocessing
+import os
+import queue
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+from ..families import get_family
+from ..harness import (KernelState, LoweringAgent, OptimizeCheckpoint,
+                       Planner, Selector, Validator, optimize_kernel)
+from ..verify_engine import ConstraintCache, VerificationEngine, merge_stats
+from .dispatch import DispatchTable, build_table, update_legacy_tuning_cache
+from .jobs import TuningJob, stable_seed
+from .journal import Journal
+from .scheduler import SuccessiveHalving, WorkItem
+
+JOURNAL_NAME = "fleet_journal.jsonl"
+TABLE_NAME = "dispatch_table.json"
+CONSTRAINTS_NAME = "constraint_cache.json"
+LEGACY_CACHE_NAME = "tuning_cache.json"
+
+# how long the parent waits with a dead worker and zero results before
+# re-dispatching the missing items to the survivors (a dead worker loses
+# at most its one in-flight item; re-running it is deterministic and
+# idempotent, so over-eager re-dispatch costs time, never correctness)
+_STALL_S = 60.0
+
+
+def fleet_fingerprint(jobs: List[TuningJob], *, base_budget: int,
+                      max_budget: int, eta: int,
+                      run_kernels: bool = False) -> str:
+    """Content hash pinning (jobs, seeds, budget schedule, and whether
+    candidates execute against the oracle) — what makes a journal safely
+    resumable.  ``run_kernels`` is included because it changes verdicts:
+    a journal written without the interpret-mode gate must not satisfy a
+    ``--run-kernels`` run.  Worker count is deliberately excluded: a run
+    killed at ``--workers 4`` may resume at ``--workers 1``."""
+    desc = {
+        "jobs": [{"job": j.job_id, "seed": j.seed,
+                  "start_cfg": dataclasses.asdict(j.start_cfg)}
+                 for j in sorted(jobs, key=lambda j: j.job_id)],
+        "base_budget": base_budget, "max_budget": max_budget, "eta": eta,
+        "run_kernels": run_kernels,
+    }
+    blob = json.dumps(desc, sort_keys=True)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
+
+
+def _to_wire(item: WorkItem) -> dict:
+    """Flatten a WorkItem to a picklable/JSON-able dict (the worker and
+    the journal both speak this)."""
+    j = item.job
+    ckpt = None
+    if item.checkpoint is not None:
+        ckpt = {k: item.checkpoint[k] for k in
+                ("cur_cfg", "best_cfg", "baseline_time_s",
+                 "iterations_done")}
+    return {"item": item.item_id, "job": j.job_id, "family": j.family,
+            "rung": item.rung, "budget": item.budget, "seed": j.seed,
+            "problem": dataclasses.asdict(j.problem),
+            "start_cfg": dataclasses.asdict(j.start_cfg),
+            "checkpoint": ckpt}
+
+
+class ItemRunner:
+    """Executes work items against one long-lived engine, warm-starting
+    from and publishing to the shared persisted constraint cache around
+    every item."""
+
+    def __init__(self, cache_dir, *, run_kernels: bool = False,
+                 temperature: float = 0.15, worker: int = 0):
+        self.cache_path = Path(cache_dir) / CONSTRAINTS_NAME
+        self.run_kernels = run_kernels
+        self.temperature = temperature
+        self.worker = worker
+        self.constraints = ConstraintCache()   # run() warm-loads per item
+        self.engine = VerificationEngine(constraints=self.constraints)
+
+    def run(self, wire: dict) -> dict:
+        fam = get_family(wire["family"])
+        prob = fam.problem_cls(**wire["problem"])
+        start_cfg = fam.config_cls(**wire["start_cfg"])
+        ckpt = None
+        if wire.get("checkpoint"):
+            c = wire["checkpoint"]
+            ckpt = OptimizeCheckpoint(
+                cur_cfg=fam.config_cls(**c["cur_cfg"]),
+                best_cfg=fam.config_cls(**c["best_cfg"]),
+                baseline_time_s=c["baseline_time_s"],
+                iterations_done=c["iterations_done"])
+        # pick up proofs peers published since our last item
+        self.constraints.load(self.cache_path)
+        t0 = time.perf_counter()
+        st = KernelState(wire["family"], start_cfg, prob).refresh()
+        res = optimize_kernel(
+            st, planner=Planner(),
+            selector=Selector(
+                temperature=self.temperature,
+                seed=stable_seed(wire["seed"], wire["rung"], "selector")),
+            lowering=LoweringAgent(
+                fault_model=False,
+                seed=stable_seed(wire["seed"], wire["rung"], "lowering")),
+            validator=Validator(run_kernels=self.run_kernels,
+                                engine=self.engine),
+            iterations=wire["budget"], checkpoint=ckpt)
+        # publish our proofs for the peers (read-merge-write union)
+        self.constraints.save(self.cache_path)
+        stages: Dict[str, int] = {}
+        for rec in res.history:
+            key = rec.verdict.caught_stage or "ok"
+            stages[key] = stages.get(key, 0) + 1
+        return {
+            "kind": "result", "item": wire["item"], "job": wire["job"],
+            "family": wire["family"], "rung": wire["rung"],
+            "budget": wire["budget"], "seed": wire["seed"],
+            "problem": wire["problem"], "start_cfg": wire["start_cfg"],
+            "best_cfg": dataclasses.asdict(res.best_state.cfg),
+            "cur_cfg": dataclasses.asdict(res.final_state.cfg),
+            "baseline_time_s": res.baseline_time_s,
+            "best_time_s": res.best_time_s,
+            "speedup": res.speedup,
+            "iterations_done": res.iterations_done,
+            "cost_units": res.cost_units,
+            "solved": res.solved,
+            "accepted": sum(r.accepted for r in res.history),
+            "repairs": sum(len(r.repairs) for r in res.history),
+            "verdict_stages": stages,
+            "verify_stats": res.verify_stats,
+            "worker": self.worker,
+            "wall_s": time.perf_counter() - t0,
+        }
+
+
+def _worker_main(wid: int, cache_dir: str, run_kernels: bool,
+                 work_q, result_q) -> None:
+    parent = os.getppid()
+    runner = ItemRunner(cache_dir, run_kernels=run_kernels, worker=wid)
+    while True:
+        try:
+            wire = work_q.get(timeout=2.0)
+        except queue.Empty:
+            if os.getppid() != parent:
+                return          # orchestrator was killed: don't orphan
+            continue
+        if wire is None:
+            return
+        if os.getppid() != parent:
+            return              # don't grind through a dead parent's rung
+        try:
+            result_q.put(runner.run(wire))
+        except Exception as e:   # report, keep serving the queue
+            result_q.put({"kind": "error", "item": wire.get("item"),
+                          "worker": wid,
+                          "error": f"{type(e).__name__}: {e}"})
+
+
+class WorkerPool:
+    def __init__(self, workers: int, cache_dir, *,
+                 run_kernels: bool = False):
+        ctx = multiprocessing.get_context("spawn")
+        self.work_q = ctx.Queue()
+        self.result_q = ctx.Queue()
+        self.procs = [
+            ctx.Process(target=_worker_main,
+                        args=(i, str(cache_dir), run_kernels,
+                              self.work_q, self.result_q),
+                        daemon=True, name=f"fleet-worker-{i}")
+            for i in range(workers)]
+        for p in self.procs:
+            p.start()
+
+    def run(self, wires: List[dict],
+            on_result: Optional[Callable] = None) -> List[dict]:
+        pending = {w["item"]: w for w in wires}
+        for w in wires:
+            self.work_q.put(w)
+        out: List[dict] = []
+        requeued: set = set()
+        last_progress = time.monotonic()
+        while pending:
+            try:
+                rec = self.result_q.get(timeout=1.0)
+            except queue.Empty:
+                dead = [p.name for p in self.procs if not p.is_alive()]
+                if len(dead) == len(self.procs):
+                    raise RuntimeError(
+                        f"all workers died mid-rung ({dead}); completed "
+                        f"items are journaled — re-run to resume")
+                if dead and time.monotonic() - last_progress > _STALL_S:
+                    # a dead worker took its in-flight item with it; once
+                    # the survivors have gone quiet, hand the missing
+                    # items back to them.  Each item is re-dispatched at
+                    # most once — a slow-but-alive item must not pile up
+                    # duplicate wires that would leak into the next rung
+                    # (duplicate *results* are deduped below either way)
+                    for item, w in pending.items():
+                        if item not in requeued:
+                            requeued.add(item)
+                            self.work_q.put(w)
+                    last_progress = time.monotonic()
+                continue
+            last_progress = time.monotonic()
+            if rec.get("kind") == "error":
+                raise RuntimeError(
+                    f"worker {rec.get('worker')} failed on "
+                    f"{rec.get('item')}: {rec.get('error')}")
+            if rec["item"] not in pending:
+                continue    # duplicate from a re-dispatch — same result
+            del pending[rec["item"]]
+            if on_result is not None:
+                on_result(rec)
+            out.append(rec)
+        return out
+
+    def close(self) -> None:
+        for _ in self.procs:
+            self.work_q.put(None)
+        for p in self.procs:
+            p.join(timeout=10)
+            if p.is_alive():
+                p.terminate()
+
+
+@dataclass
+class FleetReport:
+    """What one orchestrator invocation did (resumed + ran)."""
+
+    table: DispatchTable
+    records: Dict[str, dict] = field(default_factory=dict)
+    ran: int = 0
+    skipped: int = 0
+    rungs: int = 0
+    stats: Dict[str, int] = field(default_factory=dict)
+    wall_s: float = 0.0
+
+
+def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
+              out_dir=".", base_budget: int = 4, max_budget: int = 32,
+              eta: int = 2, run_kernels: bool = False,
+              fresh: bool = False,
+              log: Optional[Callable] = None) -> FleetReport:
+    """Orchestrate the full successive-halving tune of ``jobs``.
+
+    Writes into ``out_dir``: the crash-resumable journal, the shared
+    ``constraint_cache.json``, the versioned ``dispatch_table.json`` and
+    the legacy ``tuning_cache.json`` mirror.  Re-invoking with the same
+    (jobs, budgets) resumes from the journal; items already journaled
+    are *not* re-run."""
+    log = log or (lambda msg: None)
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    sched = SuccessiveHalving(jobs, base_budget=base_budget,
+                              max_budget=max_budget, eta=eta)
+    fp = fleet_fingerprint(jobs, base_budget=base_budget,
+                           max_budget=max_budget, eta=eta,
+                           run_kernels=run_kernels)
+    journal = Journal(out / JOURNAL_NAME)
+    done = journal.start(fp, fresh=fresh)
+    if done:
+        log(f"journal: resuming {len(done)} finished work items")
+
+    report = FleetReport(table=None)
+    pool = (WorkerPool(workers, out, run_kernels=run_kernels)
+            if workers > 1 else None)
+    runner = (ItemRunner(out, run_kernels=run_kernels)
+              if pool is None else None)
+    t0 = time.perf_counter()
+    run_stats: List[Dict[str, int]] = []
+
+    def finish(rec: dict) -> None:
+        journal.append(rec)
+        report.records[rec["item"]] = rec
+        run_stats.append(rec["verify_stats"])
+        report.ran += 1
+        log(f"  {rec['job']} r{rec['rung']}: "
+            f"{rec['best_time_s'] * 1e3:.3f} ms "
+            f"({rec['speedup']:.2f}x, {rec['accepted']} accepted, "
+            f"{rec['verify_stats'].get('solver_discharges', 0)} "
+            f"discharges, worker {rec['worker']})")
+
+    try:
+        items = sched.first_rung()
+        while items:
+            cached = [it for it in items if it.item_id in done]
+            pending = [it for it in items if it.item_id not in done]
+            for it in cached:
+                report.records[it.item_id] = done[it.item_id]
+            report.skipped += len(cached)
+            log(f"rung {sched.rung}: {len(items)} jobs × "
+                f"{items[0].budget} iterations "
+                f"({len(pending)} to run, {len(cached)} from journal)")
+            wires = [_to_wire(it) for it in pending]
+            if pool is not None:
+                pool.run(wires, on_result=finish)
+            else:
+                for w in wires:
+                    finish(runner.run(w))
+            rung_records = {r["job"]: r for r in
+                            (report.records[it.item_id] for it in items)}
+            items = sched.next_rung(rung_records)
+    finally:
+        if pool is not None:
+            pool.close()
+
+    report.rungs = sched.rung
+    report.stats = merge_stats(run_stats)
+    report.wall_s = time.perf_counter() - t0
+    report.table = build_table(report.records.values())
+    report.table.save(out / TABLE_NAME)
+    update_legacy_tuning_cache(out / LEGACY_CACHE_NAME, report.table)
+    return report

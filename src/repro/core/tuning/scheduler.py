@@ -1,0 +1,94 @@
+"""Successive-halving budget scheduler (ASHA-style, synchronous rungs).
+
+Solver time is the fleet's scarce resource, so budgets concentrate where
+the verified cost model says they pay off: every job first gets a small
+iteration budget (rung 0), then the survivors — ranked by *verified*
+cost-model score, i.e. the speedup their best invariant-passing config
+achieved — continue with a doubled budget, and so on until the per-rung
+budget exceeds ``max_budget``.  Each rung runs as a budgeted
+:func:`repro.core.harness.optimize_kernel` slice resuming from the
+previous rung's :class:`repro.core.harness.OptimizeCheckpoint`, so a
+promoted job's trajectory continues instead of restarting.
+
+Everything here is deterministic given (jobs, results): survivor
+selection sorts by (speedup desc, job id), budgets follow the fixed
+``base_budget · eta^rung`` schedule, and work items are identified by
+``job_id@r<rung>`` — which is what makes the journal resumable and the
+dispatch table independent of worker count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .jobs import TuningJob
+
+
+@dataclass(frozen=True)
+class WorkItem:
+    """One budgeted optimize slice: run ``budget`` more iterations of
+    ``job`` at rung ``rung``, resuming from ``checkpoint`` (the previous
+    rung's journal record, ``None`` at rung 0)."""
+
+    job: TuningJob
+    rung: int
+    budget: int
+    checkpoint: Optional[dict] = None
+
+    @property
+    def item_id(self) -> str:
+        return f"{self.job.job_id}@r{self.rung}"
+
+
+class SuccessiveHalving:
+    """Synchronous successive halving over the job list.
+
+    ``first_rung()`` yields every job at ``base_budget``; after each rung
+    completes, ``next_rung(records)`` keeps the top ``1/eta`` fraction
+    (at least one) and doubles the per-rung budget, embedding each
+    survivor's rung record as the next slice's checkpoint.  Jobs cut at
+    rung *r* keep their rung-*r* result — the dispatch table is built
+    from every job's highest completed rung, so nothing is lost, only
+    not refined further.
+    """
+
+    def __init__(self, jobs: List[TuningJob], *, base_budget: int = 4,
+                 max_budget: int = 32, eta: int = 2):
+        if base_budget < 1 or eta < 2:
+            raise ValueError("need base_budget >= 1 and eta >= 2")
+        self.jobs = sorted(jobs, key=lambda j: (-j.priority, j.job_id))
+        self.eta = eta
+        self.budgets: List[int] = [base_budget]
+        while self.budgets[-1] * eta <= max_budget:
+            self.budgets.append(self.budgets[-1] * eta)
+        self._alive = list(self.jobs)
+        self._rung = 0
+
+    @property
+    def rung(self) -> int:
+        return self._rung
+
+    def first_rung(self) -> List[WorkItem]:
+        return [WorkItem(j, 0, self.budgets[0]) for j in self._alive]
+
+    def next_rung(self, records: Dict[str, dict]) -> List[WorkItem]:
+        """Promote survivors of the just-finished rung.  ``records`` maps
+        job_id -> that job's journal record for the current rung (it must
+        cover every alive job).  Returns ``[]`` when the schedule is
+        exhausted."""
+        missing = [j.job_id for j in self._alive
+                   if j.job_id not in records]
+        if missing:
+            raise ValueError(f"rung {self._rung} incomplete: {missing}")
+        self._rung += 1
+        if self._rung >= len(self.budgets):
+            return []
+        ranked = sorted(
+            self._alive,
+            key=lambda j: (-records[j.job_id]["speedup"], j.job_id))
+        keep = max(1, len(ranked) // self.eta)
+        self._alive = sorted(ranked[:keep],
+                             key=lambda j: (-j.priority, j.job_id))
+        return [WorkItem(j, self._rung, self.budgets[self._rung],
+                         checkpoint=records[j.job_id])
+                for j in self._alive]

@@ -61,7 +61,7 @@ from pathlib import Path
 
 from .analysis import Analyzer, CheckReport, Discharger
 from .families import get_family
-from .fslock import locked
+from .fslock import locked, merge_save
 from .kernelspec import VerifyResult
 from .solver import (Counterexample, ProofResult, Status, prove_injective,
                      prove_tags_distinct, prove_tags_equal, prove_zero)
@@ -400,34 +400,34 @@ class ConstraintCache:
         """Serialize the proven verdicts (stable canonical keys, insertion
         order) to ``path``, merging over what is on disk and FIFO-evicting
         beyond :data:`MAX_PERSISTED`.  Returns the number of entries
-        written.  Read-merge-write happens under one advisory exclusive
-        lock (see :mod:`repro.core.fslock`): the merge base is re-read
-        *inside* the lock, so two workers saving concurrently union their
-        verdicts instead of the later one clobbering the earlier's."""
+        written.  The read-merge-write goes through
+        :func:`repro.core.fslock.merge_save`: the merge base is re-read
+        inside one exclusive advisory lock, so two workers saving
+        concurrently union their verdicts instead of the later one
+        clobbering the earlier's."""
         ours = dict(self._persisted)
         for key, res in self._memo.items():
             if res.ok:
                 sk = stable_constraint_key(key)   # key is already canonical
                 ours.pop(sk, None)    # refresh recency for this run
                 ours[sk] = [res.note or res.status.value, res.stage]
-        with locked(path, exclusive=True):
+
+        def merge(disk):
             merged: Dict[str, list] = {}
             try:
-                data = json.loads(Path(path).read_text())
-                if data.get("version") == self.PERSIST_VERSION:
-                    merged = dict(data["constraints"])
-            except (OSError, ValueError, KeyError, TypeError):
-                pass
+                if disk and disk.get("version") == self.PERSIST_VERSION:
+                    merged = dict(disk["constraints"])
+            except (KeyError, TypeError, ValueError):
+                merged = {}
             for sk, entry in ours.items():    # this run's entries win
                 merged.pop(sk, None)          # recency
                 merged[sk] = list(entry)
             items = list(merged.items())
             if len(items) > self.MAX_PERSISTED:
                 items = items[-self.MAX_PERSISTED:]
-            Path(path).write_text(json.dumps(
-                {"version": self.PERSIST_VERSION, "constraints": items},
-                indent=0))
-        return len(items)
+            return {"version": self.PERSIST_VERSION, "constraints": items}
+
+        return len(merge_save(path, merge, indent=0)["constraints"])
 
     def load(self, path) -> int:
         """Load previously persisted verdicts; silently starts cold on a
@@ -702,6 +702,21 @@ class VerificationEngine:
         caches looks like; tests and benchmarks use it to exercise the
         incremental re-verification path."""
         self._results.clear()
+
+
+def merge_stats(stats_seq) -> Dict[str, int]:
+    """Aggregate ``stats()`` dicts across engines — e.g. across the fleet
+    tuner's worker processes (each journal record carries its item's
+    per-run stat deltas).  Counters sum; the ``cached_constraints`` gauge
+    takes the max (it measures one engine's live memo, not work done)."""
+    out: Dict[str, int] = {}
+    for s in stats_seq:
+        for k, v in s.items():
+            if k == "cached_constraints":
+                out[k] = max(out.get(k, 0), v)
+            else:
+                out[k] = out.get(k, 0) + v
+    return out
 
 
 _STRUCT_HINTS = {

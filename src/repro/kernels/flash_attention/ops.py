@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.families.flash_attention import (FlashAttentionConfig,
                                                  FlashAttentionProblem)
+from repro.core.tuning.dispatch import configured
 from repro.core.verify_engine import default_engine
 
 from . import ref
@@ -79,15 +80,15 @@ def mha_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                                   FlashDecodeProblem)
     B, Hq, _, D = q.shape
     _, Hkv, S, _ = k.shape
-    cfg = cfg or FlashDecodeConfig(
-        kv_splits=max(1, min(16, S // max(S // 16, 128))))
-    while S % cfg.kv_splits:
-        cfg = FlashDecodeConfig(kv_splits=cfg.kv_splits - 1)
     prob = FlashDecodeProblem(
         batch=int(B), q_heads=int(Hq), kv_heads=int(Hkv), seq_kv=int(S),
         head_dim=int(D),
         dtype={"bfloat16": "bf16", "float32": "f32"}.get(str(q.dtype),
                                                          str(q.dtype)))
+    cfg = cfg or configured("flash_decode", prob) or FlashDecodeConfig(
+        kv_splits=max(1, min(16, S // max(S // 16, 128))))
+    while S % cfg.kv_splits:
+        cfg = FlashDecodeConfig(kv_splits=cfg.kv_splits - 1)
     _validate_decode(cfg, prob)
     from .decode import flash_decode
     return flash_decode(q, k, v, kv_len, cfg=cfg, scale=scale,
@@ -105,12 +106,13 @@ def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         return ref.mha_ref(q, k, v, causal=causal, scale=scale)
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
-    cfg = cfg or default_config(Sq, Skv, D)
     prob = FlashAttentionProblem(
         batch=int(B), q_heads=int(Hq), kv_heads=int(Hkv), seq_q=int(Sq),
         seq_kv=int(Skv), head_dim=int(D), causal=bool(causal),
         dtype={"bfloat16": "bf16", "float32": "f32"}.get(str(q.dtype),
                                                          str(q.dtype)))
+    cfg = cfg or configured("flash_attention", prob) \
+        or default_config(Sq, Skv, D)
     if prob.causal is False and cfg.causal_block_skip:
         cfg = FlashAttentionConfig(cfg.block_q, cfg.block_kv,
                                    cfg.v_transposed_staging, False,

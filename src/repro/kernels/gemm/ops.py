@@ -15,6 +15,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core.families.gemm import GemmConfig, GemmProblem
+from repro.core.tuning.dispatch import configured
 from repro.core.verify_engine import default_engine
 
 from . import ref
@@ -37,13 +38,17 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *,
            out_dtype=None, interpret: bool = False,
            use_kernel: bool = True) -> jnp.ndarray:
     """Validated GEMM.  ``use_kernel=False`` falls back to the oracle
-    (used on hosts without Pallas lowering support)."""
+    (used on hosts without Pallas lowering support).  With no explicit
+    ``cfg``, the installed fleet dispatch table
+    (:mod:`repro.core.tuning.dispatch`) is consulted for this problem's
+    shape bucket before the shape-adaptive default."""
     if not use_kernel:
         return ref.matmul_ref(a, b, out_dtype=out_dtype)
-    cfg = cfg or default_config(a.shape[0], b.shape[1], a.shape[1])
-    prob = GemmProblem(m=int(a.shape[0]), n=int(b.shape[1]),
-                       k=int(a.shape[1]), dtype=str(a.dtype))
-    _validate(cfg, _normalize(prob))
+    prob = _normalize(GemmProblem(m=int(a.shape[0]), n=int(b.shape[1]),
+                                  k=int(a.shape[1]), dtype=str(a.dtype)))
+    cfg = cfg or configured("gemm", prob) \
+        or default_config(a.shape[0], b.shape[1], a.shape[1])
+    _validate(cfg, prob)
     return gemm(a, b, cfg=cfg, out_dtype=out_dtype, interpret=interpret)
 
 

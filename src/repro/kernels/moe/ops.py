@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.families.moe import MoEConfig, MoEProblem
 from repro.core.kernelspec import cdiv
+from repro.core.tuning.dispatch import configured
 from repro.core.verify_engine import default_engine
 
 from . import ref
@@ -60,11 +61,12 @@ def moe_ffn(x: jnp.ndarray, gates: jnp.ndarray, expert_idx: jnp.ndarray,
     K = gates.shape[1]
     if not use_kernel:
         return ref.moe_ffn_ref(x, gates, expert_idx, wg, wu, wd)
-    cfg = cfg or default_config(DM, DF)
-    _validate(cfg, MoEProblem(tokens=int(T), d_model=int(DM), d_ff=int(DF),
-                              n_experts=int(E), top_k=int(K),
-                              dtype={"bfloat16": "bf16"}.get(str(x.dtype),
-                                                             str(x.dtype))))
+    prob = MoEProblem(tokens=int(T), d_model=int(DM), d_ff=int(DF),
+                      n_experts=int(E), top_k=int(K),
+                      dtype={"bfloat16": "bf16"}.get(str(x.dtype),
+                                                     str(x.dtype)))
+    cfg = cfg or configured("moe", prob) or default_config(DM, DF)
+    _validate(cfg, prob)
     C = capacity_for(T, K, E, cfg.block_t, capacity_factor)
 
     dest, keep = compute_dispatch(expert_idx, E, C)          # (T, K)

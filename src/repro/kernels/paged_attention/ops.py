@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.families.paged_attention import (PagedAttentionConfig,
                                                  PagedAttentionProblem)
+from repro.core.tuning.dispatch import configured
 from repro.core.verify_engine import default_engine
 
 from .paged_attention import paged_decode as _paged_decode_kernel
@@ -46,11 +47,11 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
     B, Hq, _, D = q.shape
     P, Hkv, PS, _ = k_pages.shape
     NP = int(table.shape[1])
-    cfg = cfg or default_config(NP)
     prob = PagedAttentionProblem(
         batch=int(B), q_heads=int(Hq), kv_heads=int(Hkv),
         seq_kv=NP * int(PS), page_size=int(PS), pool_pages=int(P),
         head_dim=int(D), dtype=_short_dtype(q.dtype))
+    cfg = cfg or configured("paged_attention", prob) or default_config(NP)
     _validate(cfg, prob)
     return _paged_decode_kernel(q, k_pages, v_pages, table, cfg=cfg,
                                 scale=scale, interpret=interpret)

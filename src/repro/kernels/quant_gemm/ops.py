@@ -13,6 +13,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core.families.quant_gemm import QuantGemmConfig, QuantGemmProblem
+from repro.core.tuning.dispatch import configured
 from repro.core.verify_engine import default_engine
 
 from .quant_gemm import quant_gemm
@@ -40,10 +41,11 @@ def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, sa: jnp.ndarray,
     if not use_kernel:
         return quant_gemm_ref(a, b, sa, sb, group=group,
                               out_dtype=out_dtype)
-    cfg = cfg or default_config(a.shape[0], b.shape[1], a.shape[1], group)
     prob = QuantGemmProblem(m=int(a.shape[0]), n=int(b.shape[1]),
                             k=int(a.shape[1]), group=int(group),
                             dtype="i8")
+    cfg = cfg or configured("quant_gemm", prob) \
+        or default_config(a.shape[0], b.shape[1], a.shape[1], group)
     _validate(cfg, prob)
     return quant_gemm(a, b, sa, sb, group=group, cfg=cfg,
                       out_dtype=out_dtype, interpret=interpret)

@@ -6,6 +6,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core.families.ssd import SSDConfig, SSDProblem
+from repro.core.tuning.dispatch import configured
 from repro.core.verify_engine import default_engine
 
 from . import ref
@@ -31,10 +32,11 @@ def ssd(x: jnp.ndarray, da: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
     if not use_kernel:
         return ref.ssd_ref(x, da, Bm, Cm, (cfg or SSDConfig()).chunk)[0]
     BH, S, P = x.shape
-    cfg = cfg or SSDConfig(chunk=min(128, S))
-    _validate(cfg, SSDProblem(batch_heads=int(BH), seq=int(S),
-                              head_dim=int(P), d_state=int(Bm.shape[-1]),
-                              dtype={"float32": "f32",
-                                     "bfloat16": "bf16"}.get(str(x.dtype),
-                                                             str(x.dtype))))
+    prob = SSDProblem(batch_heads=int(BH), seq=int(S),
+                      head_dim=int(P), d_state=int(Bm.shape[-1]),
+                      dtype={"float32": "f32",
+                             "bfloat16": "bf16"}.get(str(x.dtype),
+                                                     str(x.dtype)))
+    cfg = cfg or configured("ssd", prob) or SSDConfig(chunk=min(128, S))
+    _validate(cfg, prob)
     return ssd_chunk_scan(x, da, Bm, Cm, cfg=cfg, interpret=interpret)

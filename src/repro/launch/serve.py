@@ -31,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dispatch-table", default=None,
+                    help="fleet tuner dispatch_table.json with tuned "
+                         "kernel configs (examples/argus_optimize.py)")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -44,8 +47,15 @@ def main(argv=None):
         params = state["params"]
         print(f"restored step {state['meta']['step']} from {ckpt_dir}")
 
+    table = None
+    if args.dispatch_table:
+        from repro.core.tuning import load_dispatch_table
+        table = load_dispatch_table(args.dispatch_table)
+        print(f"dispatch table: {table.summary()}")
+
     eng = ServingEngine(model, params, n_slots=args.slots,
-                        max_len=args.max_len, eos_id=-1)
+                        max_len=args.max_len, eos_id=-1,
+                        dispatch_table=table)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.max_len // 4))

@@ -50,7 +50,16 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--dispatch-table", default=None,
+                    help="fleet tuner dispatch_table.json with tuned "
+                         "kernel configs (examples/argus_optimize.py)")
     args = ap.parse_args(argv)
+
+    if args.dispatch_table:
+        # tuned kernel configs for any validated kernel the step reaches
+        from repro.core.tuning import install, load_dispatch_table
+        table = install(load_dispatch_table(args.dispatch_table))
+        print(f"dispatch table: {table.summary()}")
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))

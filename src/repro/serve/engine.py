@@ -5,6 +5,17 @@ slots are refilled from the request queue via a single-sequence prefill
 whose cache slab is inserted into the batched cache (the slot dimension is
 the data-sharded batch axis at scale).  One jitted decode step advances all
 active slots per tick — the standard TPU continuous-batching layout.
+
+Kernel configs come from the fleet tuner's ``dispatch_table.json``
+(:mod:`repro.core.tuning.dispatch`): pass ``dispatch_table=`` (a path or
+a loaded table) and the engine installs it process-wide, so every
+validated kernel entry point reached under decode (paged/flash decode,
+quantized GEMMs, ...) resolves its config from the tuned table's shape
+buckets instead of the shape-adaptive defaults — the serving-side
+consumer of the orchestrator's output.  The install is deliberately
+process-global (the kernel entry points have no engine handle): one
+table per process, last install wins — construct multiple engines with
+different tables only if you mean the last one's configs to apply.
 """
 from __future__ import annotations
 
@@ -15,6 +26,8 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.tuning import dispatch as _dispatch
 
 
 @dataclass
@@ -35,13 +48,18 @@ class _Slot:
 class ServingEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, eos_id: int = 1,
-                 greedy: bool = True):
+                 greedy: bool = True, dispatch_table=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        # tuned kernel configs: install the fleet dispatch table so the
+        # validated kernel entry points under decode consult it
+        self.dispatch = (_dispatch.install(dispatch_table)
+                         if dispatch_table is not None
+                         else _dispatch.active())
         self.cache = model.init_cache(n_slots, max_len)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: List[Request] = []

@@ -114,3 +114,15 @@ def test_families_doc_has_verbatim_worked_example():
     blocks = [m.group("path") for m in VERBATIM.finditer(text)]
     assert any("quant_gemm" in p for p in blocks), \
         "families.md tutorial lost its verbatim quant_gemm example"
+
+
+def test_tuning_doc_has_verbatim_schema_and_journal_format():
+    """docs/tuning.md must document the dispatch-table schema and the
+    journal record format with blocks checked verbatim against the
+    tuning subsystem's source."""
+    text = (ROOT / "docs" / "tuning.md").read_text()
+    blocks = [m.group("path") for m in VERBATIM.finditer(text)]
+    assert any("tuning/dispatch.py" in p for p in blocks), \
+        "tuning.md lost its verbatim dispatch-table schema example"
+    assert any("tuning/journal.py" in p for p in blocks), \
+        "tuning.md lost its verbatim journal record format"

@@ -1,0 +1,94 @@
+"""fslock under real contention: concurrent ``merge_save`` writers must
+union their entries (no lost updates), and a stale ``.lock`` sidecar
+left behind by a killed process must not wedge the next taker."""
+import json
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core.fslock import locked, merge_save, replace_file
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+# each subprocess hammers merge_save, adding its own keys one at a time —
+# any read-merge-write race between the two would drop keys
+_HAMMER = """
+import sys
+sys.path.insert(0, sys.argv[4])
+from repro.core.fslock import merge_save
+wid, rounds, path = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+for i in range(rounds):
+    def merge(disk):
+        d = dict(disk) if isinstance(disk, dict) else {}
+        d[f"{wid}:{i}"] = i
+        return d
+    merge_save(path, merge)
+"""
+
+
+class TestMergeSave:
+    def test_merges_over_disk_and_returns_document(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text(json.dumps({"a": 1}))
+        out = merge_save(path, lambda disk: {**disk, "b": 2})
+        assert out == {"a": 1, "b": 2}
+        assert json.loads(path.read_text()) == {"a": 1, "b": 2}
+
+    def test_corrupt_or_missing_file_reads_as_none(self, tmp_path):
+        path = tmp_path / "cache.json"
+        assert merge_save(path, lambda disk: {"fresh": disk is None}) \
+            == {"fresh": True}
+        path.write_text("{not json")
+        assert merge_save(path, lambda disk: {"fresh": disk is None}) \
+            == {"fresh": True}
+
+    @pytest.mark.multiproc
+    def test_two_processes_hammering_one_file_lose_no_updates(
+            self, tmp_path):
+        path = tmp_path / "cache.json"
+        rounds = 40
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", _HAMMER, wid, str(rounds), str(path),
+             SRC]) for wid in ("a", "b")]
+        for p in procs:
+            assert p.wait(timeout=120) == 0
+        data = json.loads(path.read_text())
+        missing = [f"{w}:{i}" for w in ("a", "b") for i in range(rounds)
+                   if f"{w}:{i}" not in data]
+        assert not missing, f"lost updates under contention: {missing}"
+
+    def test_stale_lock_sidecar_does_not_deadlock(self, tmp_path):
+        """A ``.lock`` file left by a killed process holds no flock (the
+        lock dies with its holder) — the next writer must just take it."""
+        path = tmp_path / "cache.json"
+        Path(str(path) + ".lock").write_text("stale pid 12345\n")
+        done = threading.Event()
+
+        def write():
+            merge_save(path, lambda disk: {"survived": True})
+            done.set()
+
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        assert done.wait(timeout=10), \
+            "merge_save wedged on a stale .lock sidecar"
+        assert json.loads(path.read_text()) == {"survived": True}
+
+    def test_replace_file_is_whole_file_and_leaves_no_temp(self,
+                                                           tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text("old")
+        replace_file(path, "new")
+        assert path.read_text() == "new"
+        assert not list(tmp_path.glob("*.tmp")), \
+            "replace_file must clean up its temp file"
+
+    def test_locked_is_reentrant_across_processes_shared(self, tmp_path):
+        """Two shared locks coexist (readers don't serialize)."""
+        path = tmp_path / "cache.json"
+        with locked(path, exclusive=False):
+            with locked(path, exclusive=False):
+                pass

@@ -1,0 +1,398 @@
+"""Fleet tuner: job model, successive-halving scheduler, journal
+resumability (including a real mid-run SIGKILL), worker-count
+determinism of the dispatch table, and the serving dispatch hooks."""
+import copy
+import json
+import os
+import re
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core.families import all_families, get_family
+from repro.core.harness import (KernelState, OptimizeCheckpoint, Planner,
+                                Selector, Validator, optimize_kernel)
+from repro.core.tuning import (DispatchTable, Journal, JournalMismatch,
+                               SuccessiveHalving, enumerate_jobs,
+                               make_job, run_fleet, shape_bucket,
+                               stable_seed)
+from repro.core.tuning import dispatch as dispatch_mod
+from repro.core.tuning.dispatch import SCHEMA_EXAMPLE
+from repro.core.verify_engine import VerificationEngine, merge_stats
+
+ROOT = Path(__file__).resolve().parent.parent
+GEMM = get_family("gemm")
+
+FAST_FAMILIES = ["gemm", "quant_gemm"]
+FAST = dict(base_budget=2, max_budget=4)
+
+
+def _fleet(tmp, workers=1, families=FAST_FAMILIES, **kw):
+    jobs = enumerate_jobs(families, seed=0)
+    merged = {**FAST, **kw}
+    return run_fleet(jobs, workers=workers, out_dir=tmp, **merged)
+
+
+# ---------------------------------------------------------------------------
+# Job model
+# ---------------------------------------------------------------------------
+
+class TestJobs:
+    def test_every_example_family_becomes_a_job(self):
+        jobs = enumerate_jobs(seed=0)
+        expect = {f.name for f in all_families() if f.example is not None}
+        assert {j.family for j in jobs} == expect
+
+    def test_seeds_are_stable_and_decorrelated(self):
+        a = enumerate_jobs(seed=0)
+        b = enumerate_jobs(seed=0)
+        assert [j.seed for j in a] == [j.seed for j in b]
+        assert len({j.seed for j in a}) == len(a), \
+            "per-job seeds must differ across (family, problem)"
+        c = enumerate_jobs(seed=1)
+        assert all(x.seed != y.seed for x, y in zip(a, c)), \
+            "the base seed must reshuffle every job's stream"
+
+    def test_stable_seed_is_content_derived(self):
+        assert stable_seed("gemm", "p", 0) == stable_seed("gemm", "p", 0)
+        assert stable_seed("gemm", "p", 0) != stable_seed("moe", "p", 0)
+
+    def test_priority_orders_by_modeled_cost(self):
+        jobs = enumerate_jobs(seed=0)
+        assert [j.priority for j in jobs] == \
+            sorted((j.priority for j in jobs), reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def _fake_jobs(n):
+    return [make_job("gemm", GEMM.problem_cls(512 * (i + 1), 512, 512))
+            for i in range(n)]
+
+
+class TestSuccessiveHalving:
+    def test_budgets_double_and_survivors_halve(self):
+        jobs = _fake_jobs(4)
+        sched = SuccessiveHalving(jobs, base_budget=2, max_budget=8)
+        rung0 = sched.first_rung()
+        assert len(rung0) == 4 and all(it.budget == 2 for it in rung0)
+        records = {it.job.job_id: {"speedup": 1.0 + i}
+                   for i, it in enumerate(rung0)}
+        rung1 = sched.next_rung(records)
+        assert len(rung1) == 2 and all(it.budget == 4 for it in rung1)
+        best_two = sorted(records, key=lambda j: -records[j]["speedup"])[:2]
+        assert {it.job.job_id for it in rung1} == set(best_two)
+        assert all(it.checkpoint is records[it.job.job_id]
+                   for it in rung1)
+        records1 = {it.job.job_id: {"speedup": 2.0} for it in rung1}
+        rung2 = sched.next_rung(records1)
+        assert len(rung2) == 1 and rung2[0].budget == 8
+        assert sched.next_rung(
+            {rung2[0].job.job_id: {"speedup": 2.0}}) == []
+
+    def test_incomplete_rung_is_an_error(self):
+        sched = SuccessiveHalving(_fake_jobs(2), base_budget=1,
+                                  max_budget=2)
+        sched.first_rung()
+        with pytest.raises(ValueError, match="incomplete"):
+            sched.next_rung({})
+
+    def test_single_job_rides_every_rung(self):
+        sched = SuccessiveHalving(_fake_jobs(1), base_budget=1,
+                                  max_budget=4)
+        items = sched.first_rung()
+        budgets = []
+        while items:
+            budgets.append(items[0].budget)
+            items = sched.next_rung(
+                {items[0].job.job_id: {"speedup": 1.0}})
+        assert budgets == [1, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Journal
+# ---------------------------------------------------------------------------
+
+class TestJournal:
+    def test_round_trip_and_torn_tail(self, tmp_path):
+        j = Journal(tmp_path / "j.jsonl")
+        assert j.start("fp") == {}
+        j.append({"kind": "result", "item": "a@r0", "x": 1})
+        j.append({"kind": "result", "item": "b@r0", "x": 2})
+        # simulate a kill mid-append: torn, unparseable final line
+        with open(j.path, "a") as fh:
+            fh.write('{"kind": "result", "item": "c@r0", "x"')
+        got = j.start("fp")
+        assert set(got) == {"a@r0", "b@r0"}
+        assert got["a@r0"]["x"] == 1
+
+    def test_fingerprint_mismatch_refuses_unless_fresh(self, tmp_path):
+        j = Journal(tmp_path / "j.jsonl")
+        j.start("fp1")
+        j.append({"kind": "result", "item": "a@r0"})
+        with pytest.raises(JournalMismatch):
+            j.start("fp2")
+        assert j.start("fp2", fresh=True) == {}
+
+    def test_append_after_torn_tail_seals_the_fragment(self, tmp_path):
+        """A resumed run appending after a kill-mid-append must not
+        concatenate onto the torn fragment (which would lose the new
+        record too) — the fragment gets sealed with a newline first."""
+        j = Journal(tmp_path / "j.jsonl")
+        j.start("fp")
+        j.append({"kind": "result", "item": "a@r0", "x": 1})
+        with open(j.path, "a") as fh:
+            fh.write('{"kind": "result", "item": "b@r0", "x"')
+        j.append({"kind": "result", "item": "b@r0", "x": 2})
+        got = j.start("fp")
+        assert set(got) == {"a@r0", "b@r0"}
+        assert got["b@r0"]["x"] == 2
+
+    def test_later_record_wins_for_same_item(self, tmp_path):
+        j = Journal(tmp_path / "j.jsonl")
+        j.start("fp")
+        j.append({"kind": "result", "item": "a@r0", "x": 1})
+        j.append({"kind": "result", "item": "a@r0", "x": 2})
+        assert j.records()["a@r0"]["x"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Dispatch table
+# ---------------------------------------------------------------------------
+
+class TestDispatchTable:
+    def test_schema_example_validates(self):
+        DispatchTable(copy.deepcopy(SCHEMA_EXAMPLE))
+
+    def test_missing_field_and_bad_config_are_rejected(self):
+        broken = copy.deepcopy(SCHEMA_EXAMPLE)
+        entry = next(iter(next(iter(
+            broken["entries"].values())).values()))
+        del entry["provenance"]
+        with pytest.raises(ValueError, match="provenance"):
+            DispatchTable(broken)
+        broken = copy.deepcopy(SCHEMA_EXAMPLE)
+        next(iter(next(iter(
+            broken["entries"].values())).values()))["config"]["bogus"] = 1
+        with pytest.raises(ValueError, match="reconstruct"):
+            DispatchTable(broken)
+        broken = copy.deepcopy(SCHEMA_EXAMPLE)
+        broken["entries"]["no_such_family"] = {}
+        with pytest.raises(ValueError, match="unregistered"):
+            DispatchTable(broken)
+
+    def test_shape_bucket_rounds_ints_up_to_pow2(self):
+        a = shape_bucket(GEMM.problem_cls(5000, 8000, 4100, "bf16"))
+        b = shape_bucket(GEMM.problem_cls(8192, 8192, 8192, "bf16"))
+        assert a == b == "m=8192,n=8192,k=8192,dtype=bf16"
+
+    def test_lookup_and_config_for(self):
+        t = DispatchTable(copy.deepcopy(SCHEMA_EXAMPLE))
+        prob = GEMM.problem_cls(5000, 8000, 4100, "bf16")
+        cfg = t.config_for("gemm", prob)
+        assert isinstance(cfg, GEMM.config_cls) and cfg.stagger_k
+        assert t.config_for("gemm",
+                            GEMM.problem_cls(64, 64, 64, "bf16")) is None
+
+    def test_install_and_configured(self):
+        prob = GEMM.problem_cls(8192, 8192, 8192, "bf16")
+        try:
+            dispatch_mod.install(copy.deepcopy(SCHEMA_EXAMPLE))
+            cfg = dispatch_mod.configured("gemm", prob)
+            assert cfg == GEMM.config_cls(bm=256, bn=256, bk=512,
+                                          stagger_k=True)
+        finally:
+            dispatch_mod.install(None)
+        assert dispatch_mod.configured("gemm", prob) is None
+
+    def test_configured_skips_configs_invalid_for_the_exact_problem(self):
+        """Buckets are coarse: a winner tuned at the bucket
+        representative may be invalid for a smaller in-bucket shape.
+        ``configured`` must return None there (caller falls back to its
+        default) instead of letting the gate crash the call."""
+        table = copy.deepcopy(SCHEMA_EXAMPLE)
+        entry = table["entries"]["gemm"]["m=8192,n=8192,k=8192,dtype=bf16"]
+        entry["config"]["split_k"] = 4          # 8192/512 = 16 K blocks
+        try:
+            dispatch_mod.install(table)
+            rep = GEMM.problem_cls(8192, 8192, 8192, "bf16")
+            assert dispatch_mod.configured("gemm", rep) is not None
+            # k=5000 buckets up to 8192 but has 10 K blocks — split_k=4
+            # does not divide it, so the tuned config must be skipped
+            odd = GEMM.problem_cls(8192, 8192, 5000, "bf16")
+            assert dispatch_mod.configured("gemm", odd) is None
+        finally:
+            dispatch_mod.install(None)
+
+
+# ---------------------------------------------------------------------------
+# Budgeted optimize_kernel checkpoints
+# ---------------------------------------------------------------------------
+
+class TestOptimizeCheckpoint:
+    def test_resumed_slice_continues_the_budgeted_run(self):
+        prob = GEMM.problem_cls(2048, 2048, 2048, "bf16")
+        engine = VerificationEngine()
+
+        def slice_(ckpt, seed):
+            st = KernelState("gemm", GEMM.config_cls(), prob).refresh()
+            return optimize_kernel(
+                st, planner=Planner(),
+                selector=Selector(temperature=0.1, seed=seed),
+                validator=Validator(engine=engine),
+                iterations=3, checkpoint=ckpt)
+
+        r0 = slice_(None, 1)
+        ck = r0.checkpoint()
+        assert isinstance(ck, OptimizeCheckpoint)
+        assert ck.iterations_done == len(r0.history)
+        r1 = slice_(ck, 2)
+        assert r1.baseline_time_s == r0.baseline_time_s, \
+            "resume must keep the original baseline (cumulative speedup)"
+        assert r1.best_time_s <= r0.best_time_s, \
+            "a resumed slice can only improve on the incumbent"
+        assert r1.iterations_done == ck.iterations_done + len(r1.history)
+
+
+# ---------------------------------------------------------------------------
+# Fleet orchestration
+# ---------------------------------------------------------------------------
+
+class TestFleet:
+    def test_serial_run_produces_valid_artifacts(self, tmp_path):
+        rep = _fleet(tmp_path)
+        assert rep.ran > 0 and rep.skipped == 0
+        table = dispatch_mod.load(tmp_path / "dispatch_table.json")
+        assert set(table.entries) == set(FAST_FAMILIES)
+        legacy = json.loads((tmp_path / "tuning_cache.json").read_text())
+        assert set(legacy) == set(FAST_FAMILIES)
+        assert all("config" in v and "est_ms" in v
+                   for v in legacy.values())
+        assert rep.stats.get("verify_calls", 0) > 0
+
+    def test_rerun_resumes_everything_from_journal(self, tmp_path):
+        r1 = _fleet(tmp_path)
+        before = (tmp_path / "dispatch_table.json").read_bytes()
+        r2 = _fleet(tmp_path)
+        assert r2.ran == 0 and r2.skipped == r1.ran
+        assert (tmp_path / "dispatch_table.json").read_bytes() == before
+
+    def test_truncated_journal_reruns_only_missing_items(self, tmp_path):
+        _fleet(tmp_path)
+        ref = (tmp_path / "dispatch_table.json").read_bytes()
+        jpath = tmp_path / "fleet_journal.jsonl"
+        lines = jpath.read_text().splitlines()
+        jpath.write_text("\n".join(lines[:-1]) + "\n")   # lose last item
+        r = _fleet(tmp_path)
+        assert r.ran == 1 and r.skipped == len(lines) - 2
+        assert (tmp_path / "dispatch_table.json").read_bytes() == ref
+
+    def test_changed_budgets_refuse_stale_journal(self, tmp_path):
+        _fleet(tmp_path)
+        with pytest.raises(JournalMismatch):
+            _fleet(tmp_path, max_budget=8)
+        r = _fleet(tmp_path, max_budget=8, fresh=True)   # --fresh
+        assert r.ran > 0
+
+    def test_run_kernels_flag_is_part_of_the_fingerprint(self, tmp_path):
+        """A journal written without the interpret-mode oracle gate must
+        not satisfy a --run-kernels run: the flag changes verdicts."""
+        _fleet(tmp_path)
+        with pytest.raises(JournalMismatch):
+            _fleet(tmp_path, run_kernels=True)
+
+    @pytest.mark.multiproc
+    def test_dispatch_table_identical_across_worker_counts(
+            self, tmp_path):
+        """The acceptance determinism property, in miniature: parallel
+        workers sharing caches must produce byte-for-byte the serial
+        run's dispatch table."""
+        r1 = _fleet(tmp_path / "serial", workers=1)
+        r2 = _fleet(tmp_path / "fleet", workers=2)
+        t1 = (tmp_path / "serial" / "dispatch_table.json").read_bytes()
+        t2 = (tmp_path / "fleet" / "dispatch_table.json").read_bytes()
+        assert t1 == t2
+        assert r2.stats["solver_discharges"] \
+            < 2 * max(r1.stats["solver_discharges"], 1), \
+            "cache sharing should keep 2 workers below 2x solo discharges"
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume regression (the orchestrator must survive SIGKILL)
+# ---------------------------------------------------------------------------
+
+_CLI = [sys.executable, "examples/argus_optimize.py",
+        "--workers", "2", "--family", "gemm", "--family", "quant_gemm",
+        "--family", "moe", "--base-budget", "2", "--max-budget", "4"]
+_DONE = re.compile(r"fleet done: \d+ rungs, (\d+) items ran, "
+                   r"(\d+) resumed from the journal")
+
+
+@pytest.mark.multiproc
+def test_kill_mid_run_resumes_without_rerunning_finished(tmp_path):
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    ref_dir, out_dir = tmp_path / "ref", tmp_path / "killed"
+
+    # uninterrupted reference
+    ref = subprocess.run(_CLI + ["--out-dir", str(ref_dir)], cwd=ROOT,
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert ref.returncode == 0, ref.stderr
+
+    # start, wait for the first journaled result, SIGKILL the orchestrator
+    proc = subprocess.Popen(_CLI + ["--out-dir", str(out_dir)], cwd=ROOT,
+                            env=env, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    journal = out_dir / "fleet_journal.jsonl"
+    deadline = time.monotonic() + 120
+    while time.monotonic() < deadline and proc.poll() is None:
+        if journal.exists() and \
+                '"kind": "result"' in journal.read_text():
+            break
+        time.sleep(0.05)
+    if proc.poll() is None:
+        proc.send_signal(signal.SIGKILL)
+    proc.wait(timeout=30)
+    finished_before = len(Journal(journal).records())
+    assert journal.exists(), "journal never appeared before the kill"
+
+    # resume: must complete, skipping exactly the journaled items
+    res = subprocess.run(_CLI + ["--out-dir", str(out_dir)], cwd=ROOT,
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert res.returncode == 0, res.stderr
+    m = _DONE.search(res.stdout)
+    assert m, res.stdout
+    assert int(m.group(2)) == finished_before, \
+        "every journaled item must resume, none re-run"
+    assert (out_dir / "dispatch_table.json").read_bytes() == \
+        (ref_dir / "dispatch_table.json").read_bytes(), \
+        "a killed+resumed run must converge to the uninterrupted table"
+
+    # third invocation: everything journaled, --expect-resume gate holds
+    res2 = subprocess.run(
+        _CLI + ["--out-dir", str(out_dir), "--expect-resume"], cwd=ROOT,
+        env=env, capture_output=True, text=True, timeout=300)
+    assert res2.returncode == 0, res2.stdout + res2.stderr
+
+
+# ---------------------------------------------------------------------------
+# Cross-worker stats aggregation
+# ---------------------------------------------------------------------------
+
+def test_merge_stats_sums_counters_and_maxes_the_gauge():
+    merged = merge_stats([
+        {"verify_calls": 3, "solver_discharges": 5,
+         "cached_constraints": 40},
+        {"verify_calls": 2, "solver_discharges": 1,
+         "cached_constraints": 7},
+    ])
+    assert merged["verify_calls"] == 5
+    assert merged["solver_discharges"] == 6
+    assert merged["cached_constraints"] == 40
