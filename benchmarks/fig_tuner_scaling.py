@@ -1,4 +1,5 @@
-"""Fleet-tuner scaling: wall-clock and solver discharges vs worker count.
+"""Fleet-tuner scaling: wall-clock and solver discharges vs worker count,
+plus the fleet-learning properties (async promotion, shared lessons).
 
 Runs the orchestrator (:mod:`repro.core.tuning`) over the registered
 families at several ``--workers`` values, each in a fresh directory
@@ -17,10 +18,23 @@ runs):
   stay *strictly below* N× the solo run's: workers union their proofs
   through ``constraint_cache.json`` (flock'd read-merge-write) instead
   of re-proving each other's obligations.
+
+``--async`` adds the fleet-learning suite (CI gates it via
+``--smoke --async``):
+
+* **async determinism** — the *reconciled* async dispatch table is
+  byte-identical to the sync table at every worker count;
+* **straggler resilience** — with one job's items inflated ``--factor``×
+  in a discrete-event model of the pool (real scheduler classes,
+  simulated execution), async modeled iterations-to-completion beats
+  the rung-barriered sync schedule;
+* **lesson reuse** — a multi-worker ``--sweep --lessons`` run imports
+  a non-zero number of *cross-family* lessons from the shared store.
 """
 from __future__ import annotations
 
 import argparse
+import heapq
 import sys
 import tempfile
 import time
@@ -28,18 +42,205 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-from repro.core.tuning import enumerate_jobs, run_fleet  # noqa: E402
+from repro.core.tuning import (AsyncSuccessiveHalving,  # noqa: E402
+                               SuccessiveHalving, enumerate_jobs,
+                               reconcile_schedule, run_fleet, stable_seed)
 
 
 def run_at(jobs, workers: int, *, base_budget: int, max_budget: int,
-           out_root: Path):
-    out = out_root / f"workers{workers}"
+           out_root: Path, async_mode: bool = False,
+           lessons: bool = False):
+    tag = "async" if async_mode else "sync"
+    if lessons:
+        tag += "_lessons"
+    out = out_root / f"{tag}_workers{workers}"
     t0 = time.perf_counter()
     rep = run_fleet(jobs, workers=workers, out_dir=out,
-                    base_budget=base_budget, max_budget=max_budget)
+                    base_budget=base_budget, max_budget=max_budget,
+                    async_mode=async_mode, lessons=lessons)
     wall = time.perf_counter() - t0
     table_bytes = (out / "dispatch_table.json").read_bytes()
     return rep, wall, table_bytes
+
+
+# ---------------------------------------------------------------------------
+# Straggler model: the real schedulers over simulated execution
+# ---------------------------------------------------------------------------
+
+def _sim_record(item, straggler):
+    """Deterministic stand-in journal record: a stable pseudo-speedup
+    per (job, rung) drives promotion ranking; the straggler is pinned to
+    the worst score so the comparison measures the *barrier*, not a
+    lucky promotion of the slow job."""
+    spd = 0.0 if item.job.job_id == straggler else \
+        1.0 + (stable_seed("sim", item.job.job_id, item.rung) % 997) / 997
+    return {"kind": "result", "item": item.item_id,
+            "job": item.job.job_id, "rung": item.rung, "speedup": spd}
+
+
+def simulate_makespan(jobs, *, mode: str, workers: int, base_budget: int,
+                      max_budget: int, eta: int = 2,
+                      straggler=None, factor: float = 8.0) -> float:
+    """Modeled iterations-to-completion of one fleet run.
+
+    Every work item costs its iteration budget in modeled time units
+    (the straggler job's items cost ``factor``×); ``workers`` pull
+    greedily.  The scheduling logic is the *real*
+    :class:`SuccessiveHalving` / :class:`AsyncSuccessiveHalving` —
+    including, for async, the final reconciliation top-up — only item
+    execution is simulated, so the number is scheduling overhead alone:
+    sync pays the rung barrier on the straggler, async does not."""
+    def dur(item):
+        return item.budget * (factor if item.job.job_id == straggler
+                              else 1.0)
+
+    if mode == "sync":
+        sched = SuccessiveHalving(jobs, base_budget=base_budget,
+                                  max_budget=max_budget, eta=eta)
+        items, t = sched.first_rung(), 0.0
+        while items:
+            free = [0.0] * workers
+            for it in items:
+                w = min(range(workers), key=lambda i: free[i])
+                free[w] += dur(it)
+            t += max(free)          # the rung barrier
+            items = sched.next_rung(
+                {it.job.job_id: _sim_record(it, straggler)
+                 for it in items})
+        return t
+
+    asched = AsyncSuccessiveHalving(jobs, base_budget=base_budget,
+                                    max_budget=max_budget, eta=eta)
+    free = [0.0] * workers
+    heap, n = [], 0
+
+    def assign(item, ready):
+        nonlocal n
+        w = min(range(workers), key=lambda i: (free[i], i))
+        fin = max(free[w], ready) + dur(item)
+        free[w] = fin
+        heapq.heappush(heap, (fin, n, item))
+        n += 1
+
+    for it in asched.initial_items():
+        assign(it, 0.0)
+    records, makespan = {}, 0.0
+    while heap:
+        fin, _, it = heapq.heappop(heap)
+        makespan = max(makespan, fin)
+        rec = _sim_record(it, straggler)
+        records[it.item_id] = rec
+        for promoted in asched.on_result(rec):
+            assign(promoted, fin)
+    # deterministic reconciliation top-up, modeled at the drain point
+    while True:
+        _selected, missing = reconcile_schedule(
+            jobs, records, base_budget=base_budget,
+            max_budget=max_budget, eta=eta)
+        if not missing:
+            break
+        free = [makespan] * workers
+        for it in missing:
+            w = min(range(workers), key=lambda i: free[i])
+            free[w] += dur(it)
+            records[it.item_id] = _sim_record(it, straggler)
+        makespan = max(free)
+    return makespan
+
+
+# ---------------------------------------------------------------------------
+# Experiments
+# ---------------------------------------------------------------------------
+
+def base_sweep(jobs, args, root: Path):
+    """Sync scaling table; returns (solo table bytes, failures)."""
+    header = ["workers", "wall_s", "solver_discharges", "constraint_hits",
+              "persisted_hits", "canonical_hits", "skeleton_rebinds",
+              "table_identical_to_solo"]
+    print(",".join(header))
+    rows, solo_table = {}, None
+    for n in sorted(set(args.workers)):
+        rep, wall, table = run_at(jobs, n, base_budget=args.base_budget,
+                                  max_budget=args.max_budget,
+                                  out_root=root)
+        if n == 1:
+            solo_table = table
+        s = rep.stats
+        rows[n] = {"workers": n, "wall_s": round(wall, 2),
+                   "solver_discharges": s.get("solver_discharges", 0),
+                   "constraint_hits": s.get("constraint_hits", 0),
+                   "persisted_hits": s.get("persisted_hits", 0),
+                   "canonical_hits": s.get("canonical_hits", 0),
+                   "skeleton_rebinds": s.get("skeleton_rebinds", 0),
+                   "table_identical_to_solo": table == solo_table}
+        print(",".join(str(rows[n][h]) for h in header), flush=True)
+
+    solo = rows[1]["solver_discharges"]
+    failures = []
+    for n, row in rows.items():
+        if not row["table_identical_to_solo"]:
+            failures.append(f"workers={n} dispatch table diverged from "
+                            f"the solo run")
+        if n > 1 and not row["solver_discharges"] < n * solo:
+            failures.append(
+                f"workers={n} discharged {row['solver_discharges']} — "
+                f"not below {n}x the solo run's {solo} (cache sharing "
+                f"broken?)")
+    return solo_table, failures
+
+
+def fleet_learning_suite(jobs, args, root: Path, solo_table):
+    """Async determinism + straggler model + lesson reuse."""
+    failures = []
+
+    for n in sorted(set(args.workers)):
+        _rep, wall, table = run_at(jobs, n,
+                                   base_budget=args.base_budget,
+                                   max_budget=args.max_budget,
+                                   out_root=root, async_mode=True)
+        same = table == solo_table
+        print(f"async,workers={n},wall_s={round(wall, 2)},"
+              f"reconciled_table_identical_to_sync={same}", flush=True)
+        if not same:
+            failures.append(f"async workers={n} reconciled table "
+                            f"diverged from the sync solo table")
+
+    straggler = jobs[0].job_id     # the highest-priority job drags
+    sim_workers = max(n for n in args.workers)
+    sync_t = simulate_makespan(jobs, mode="sync", workers=sim_workers,
+                               base_budget=args.base_budget,
+                               max_budget=args.max_budget,
+                               straggler=straggler, factor=args.factor)
+    async_t = simulate_makespan(jobs, mode="async", workers=sim_workers,
+                                base_budget=args.base_budget,
+                                max_budget=args.max_budget,
+                                straggler=straggler, factor=args.factor)
+    print(f"straggler_model,workers={sim_workers},"
+          f"factor={args.factor},straggler={straggler},"
+          f"sync_iterations={sync_t:.0f},async_iterations={async_t:.0f}",
+          flush=True)
+    if not async_t < sync_t:
+        failures.append(
+            f"straggler model: async {async_t:.0f} modeled iterations "
+            f"did not beat sync {sync_t:.0f}")
+
+    sweep_jobs = enumerate_jobs(args.family, seed=0, sweep=True)
+    rep, wall, _table = run_at(sweep_jobs, sim_workers,
+                               base_budget=args.base_budget,
+                               max_budget=args.max_budget,
+                               out_root=root, async_mode=True,
+                               lessons=True)
+    les = rep.lessons
+    print(f"lessons,workers={sim_workers},sweep_jobs={len(sweep_jobs)},"
+          f"wall_s={round(wall, 2)},"
+          f"published={les['lessons_published']},"
+          f"imported={les['lessons_imported']},"
+          f"reused_cross_family={les['lessons_reused']}", flush=True)
+    if not les["lessons_reused"] > 0:
+        failures.append(
+            f"lesson store: {sim_workers}-worker sweep run reused "
+            f"0 cross-family lessons")
+    return failures
 
 
 def main(argv=None):
@@ -53,9 +254,16 @@ def main(argv=None):
                          "default: every registered family")
     ap.add_argument("--base-budget", type=int, default=4)
     ap.add_argument("--max-budget", type=int, default=16)
+    ap.add_argument("--async", dest="async_suite", action="store_true",
+                    help="also run the fleet-learning suite: async "
+                         "reconciled-table identity, the straggler "
+                         "model, and a --sweep --lessons reuse run")
+    ap.add_argument("--factor", type=float, default=8.0,
+                    help="straggler model: duration multiplier for the "
+                         "injected straggler's items")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny budgets, workers 1 and 4, and "
-                         "assert determinism + sublinear discharges")
+                         "hard-assert every property that ran")
     args = ap.parse_args(argv)
     if args.smoke:
         args.workers = [1, 4]
@@ -67,43 +275,17 @@ def main(argv=None):
     print(f"# {len(jobs)} jobs, budgets {args.base_budget}.."
           f"{args.max_budget}", file=sys.stderr)
 
-    header = ["workers", "wall_s", "solver_discharges", "constraint_hits",
-              "persisted_hits", "canonical_hits", "skeleton_rebinds",
-              "table_identical_to_solo"]
-    print(",".join(header))
-    rows = {}
-    solo_table = None
     with tempfile.TemporaryDirectory(prefix="fleet_scaling_") as root:
-        for n in sorted(set(args.workers)):
-            rep, wall, table = run_at(jobs, n,
-                                      base_budget=args.base_budget,
-                                      max_budget=args.max_budget,
-                                      out_root=Path(root))
-            if n == 1:
-                solo_table = table
-            s = rep.stats
-            rows[n] = {"workers": n, "wall_s": round(wall, 2),
-                       "solver_discharges": s.get("solver_discharges", 0),
-                       "constraint_hits": s.get("constraint_hits", 0),
-                       "persisted_hits": s.get("persisted_hits", 0),
-                       "canonical_hits": s.get("canonical_hits", 0),
-                       "skeleton_rebinds": s.get("skeleton_rebinds", 0),
-                       "table_identical_to_solo": table == solo_table}
-            print(",".join(str(rows[n][h]) for h in header), flush=True)
+        solo_table, failures = base_sweep(jobs, args, Path(root))
+        if args.async_suite:
+            failures += fleet_learning_suite(jobs, args, Path(root),
+                                             solo_table)
 
-    solo = rows[1]["solver_discharges"]
-    failures = []
-    for n, row in rows.items():
-        if not row["table_identical_to_solo"]:
-            failures.append(f"workers={n} dispatch table diverged from "
-                            f"the solo run")
-        if n > 1 and not row["solver_discharges"] < n * solo:
-            failures.append(
-                f"workers={n} discharged {row['solver_discharges']} — "
-                f"not below {n}x the solo run's {solo} (cache sharing "
-                f"broken?)")
-    verdict = ("dispatch tables identical across worker counts; "
-               "discharges scale sublinearly"
+    verdict = ("dispatch tables identical across worker counts"
+               + (", sync and async; straggler model favors async; "
+                  "cross-family lessons reused"
+                  if args.async_suite else "")
+               + "; discharges scale sublinearly"
                if not failures else "; ".join(failures))
     print(f"\n{verdict}")
     if args.smoke and failures:

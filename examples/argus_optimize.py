@@ -1,23 +1,33 @@
 """ARGUS fleet tuning: the paper's workflow at production scale.
 
     PYTHONPATH=src python examples/argus_optimize.py --workers 4 \
+        [--async] [--sweep] [--lessons] \
         [--family gemm --family quant_gemm] [--base-budget 4] \
         [--max-budget 32] [--out-dir .] [--run-kernels]
 
 Thin CLI over :mod:`repro.core.tuning`: tuning jobs are enumerated from
 the kernel-family registry (one per registered family's production
-problem), budgets are allocated successive-halving style (every job gets
-``--base-budget`` iterations, survivors by verified cost-model score get
-doubled budgets up to ``--max-budget``), and work items run on
-``--workers`` cache-sharing worker processes (``--workers 1`` keeps the
-old serial behavior).  Progress is journaled to
-``fleet_journal.jsonl`` — a killed run re-invoked with the same flags
+problem — or, with ``--sweep``, one per problem in the family's
+shape-bucket sweep grid), budgets are allocated successive-halving style
+(every job gets ``--base-budget`` iterations, survivors by verified
+cost-model score get doubled budgets up to ``--max-budget``), and work
+items run on ``--workers`` cache-sharing worker processes
+(``--workers 1`` keeps the old serial behavior).  Progress is journaled
+to ``fleet_journal.jsonl`` — a killed run re-invoked with the same flags
 resumes without re-running finished items — and the output is a
 versioned ``dispatch_table.json`` (family -> shape bucket -> winning
 config + provenance) that the serving/launch paths consult, plus the
 legacy ``tuning_cache.json`` mirror and the shared
-``constraint_cache.json`` solver warm start.  The dispatch table is
-bitwise-identical for any ``--workers`` value.
+``constraint_cache.json`` solver warm start.
+
+``--async`` switches to rung-free (ASHA) promotion — a straggling job
+stops barriering the pool — followed by a deterministic reconciliation
+pass, so the dispatch table stays bitwise-identical for any
+``--workers`` value, sync or async.  ``--lessons`` turns on the shared
+lesson store (``lessons.json``): workers publish stage-attributed ICRL
+lessons after every item and warm-start their planner from the fleet's
+union before the next, trading strict table reproducibility for
+within-run cross-worker learning.
 
 ``--expect-resume`` asserts that a re-invocation ran nothing (CI uses it
 to gate journal resumability); ``--fresh`` discards a stale journal.
@@ -39,6 +49,17 @@ def main(argv=None):
                          "default: all registered families")
     ap.add_argument("--workers", type=int, default=1,
                     help="worker processes (1 = serial, in-process)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="rung-free (ASHA) promotion + deterministic "
+                         "reconciliation — stragglers stop barriering "
+                         "the pool")
+    ap.add_argument("--sweep", action="store_true",
+                    help="tune every problem in each family's "
+                         "shape-bucket sweep grid, not just example()")
+    ap.add_argument("--lessons", action="store_true",
+                    help="share stage-attributed ICRL lessons across "
+                         "workers via lessons.json (trades strict "
+                         "table reproducibility for in-run learning)")
     ap.add_argument("--base-budget", type=int, default=4,
                     help="rung-0 iterations for every job")
     ap.add_argument("--max-budget", type=int, default=32,
@@ -61,14 +82,17 @@ def main(argv=None):
                          "(nothing ran) — CI resumability gate")
     args = ap.parse_args(argv)
 
-    jobs = enumerate_jobs(args.family, seed=args.seed)
+    jobs = enumerate_jobs(args.family, seed=args.seed, sweep=args.sweep)
     print(f"fleet: {len(jobs)} jobs, {args.workers} worker(s), "
           f"budgets {args.base_budget}..{args.max_budget} (eta "
-          f"{args.eta})")
+          f"{args.eta}), "
+          f"{'async' if args.async_mode else 'sync'} promotion"
+          f"{', shared lessons' if args.lessons else ''}")
     report = run_fleet(jobs, workers=args.workers, out_dir=args.out_dir,
                        base_budget=args.base_budget,
                        max_budget=args.max_budget, eta=args.eta,
                        run_kernels=args.run_kernels, fresh=args.fresh,
+                       async_mode=args.async_mode, lessons=args.lessons,
                        log=print)
 
     print(f"\nfleet done: {report.rungs} rungs, {report.ran} items ran, "
@@ -93,6 +117,12 @@ def main(argv=None):
               f"{s.get('full_builds', 0)} full builds, "
               f"{s.get('skeleton_rebinds', 0)} skeleton rebinds, "
               f"{s.get('program_hits', 0)} program hits")
+    if args.lessons:
+        les = report.lessons
+        print(f"lessons (shared store, this run): "
+              f"{les.get('lessons_published', 0)} published, "
+              f"{les.get('lessons_imported', 0)} imported, "
+              f"{les.get('lessons_reused', 0)} reused cross-family")
     print(f"wrote {args.out_dir}/dispatch_table.json "
           f"({report.table.summary()})")
 

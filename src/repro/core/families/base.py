@@ -18,7 +18,10 @@ system needs to drive it:
 * ``reference_check`` — interpret-mode execution against the jnp oracle;
 * ``lower`` — the validated Pallas entry point (resolved lazily so family
   modules never import :mod:`repro.kernels` at module scope);
-* ``example`` — the family's production tuning problem (examples/benches).
+* ``example`` — the family's production tuning problem (examples/benches);
+* ``sweep_problems`` — the shape-bucket sweep grid the fleet tuner
+  enumerates under ``--sweep`` (one problem per dispatch bucket worth
+  tuning, beyond the single ``example()``).
 
 Adding a sixth family is one module that builds a :class:`KernelFamily`
 and calls :func:`register` — no edits to the validator, planner, lowering
@@ -176,6 +179,13 @@ class KernelFamily:
     lower: Optional[Callable] = None
     # () -> (cfg, prob): the family's production tuning problem
     example: Optional[Callable] = None
+    # () -> [prob, ...]: the family's shape-bucket sweep grid — a small
+    # set of production problem shapes landing in *distinct* dispatch
+    # buckets (repro.core.tuning.dispatch.shape_bucket), tuned with the
+    # example() config as the start point.  Consumed by
+    # repro.core.tuning.jobs.enumerate_jobs(sweep=True); the example
+    # problem is always swept too, so the grid only needs the neighbors.
+    sweep_problems: Optional[Callable] = None
 
     def verify(self, cfg, prob, *, inject_bug: Optional[str] = None
                ) -> VerifyResult:

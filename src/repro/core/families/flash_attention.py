@@ -296,6 +296,17 @@ def _example():
             FlashAttentionProblem(16, 8, 1, 8192, 8192, 128, True, "bf16"))
 
 
+def _sweep():
+    # pow2 bucket grid: the 8k prefill plus a short-context / larger
+    # batch point and a long-context point, same GQA ratio
+    return [FlashAttentionProblem(16, 8, 1, 8192, 8192, 128, True,
+                                  "bf16"),
+            FlashAttentionProblem(32, 8, 1, 2048, 2048, 128, True,
+                                  "bf16"),
+            FlashAttentionProblem(4, 8, 1, 16384, 16384, 128, True,
+                                  "bf16")]
+
+
 FAMILY = register(KernelFamily(
     name="flash_attention",
     config_cls=FlashAttentionConfig,
@@ -310,6 +321,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

@@ -222,6 +222,14 @@ def _example():
             FlashDecodeProblem(32, 8, 1, 8192, 128, "bf16"))
 
 
+def _sweep():
+    # pow2 bucket grid: the 8k-cache serving batch plus a large-batch /
+    # short-cache point and a small-batch / long-cache point
+    return [FlashDecodeProblem(32, 8, 1, 8192, 128, "bf16"),
+            FlashDecodeProblem(128, 8, 1, 2048, 128, "bf16"),
+            FlashDecodeProblem(8, 8, 1, 32768, 128, "bf16")]
+
+
 FAMILY = register(KernelFamily(
     name="flash_decode",
     config_cls=FlashDecodeConfig,
@@ -236,6 +244,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

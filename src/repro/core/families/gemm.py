@@ -269,6 +269,15 @@ def _example():
     return GemmConfig(), GemmProblem(8192, 8192, 8192, "bf16")
 
 
+def _sweep():
+    # pow2 bucket grid: the square production GEMM plus the skinny-M
+    # (serving MLP) and short-K (LoRA/projection) regimes, each in its
+    # own dispatch bucket
+    return [GemmProblem(8192, 8192, 8192, "bf16"),
+            GemmProblem(2048, 8192, 8192, "bf16"),
+            GemmProblem(8192, 8192, 2048, "bf16")]
+
+
 FAMILY = register(KernelFamily(
     name="gemm",
     config_cls=GemmConfig,
@@ -283,6 +292,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

@@ -275,6 +275,14 @@ def _example():
             MoEProblem(16384, 7168, 2048, 32, 8, "bf16"))
 
 
+def _sweep():
+    # pow2 bucket grid: the production token load plus a light-traffic
+    # and a peak-traffic point, same expert topology
+    return [MoEProblem(16384, 7168, 2048, 32, 8, "bf16"),
+            MoEProblem(4096, 7168, 2048, 32, 8, "bf16"),
+            MoEProblem(32768, 7168, 2048, 32, 8, "bf16")]
+
+
 FAMILY = register(KernelFamily(
     name="moe",
     config_cls=MoEConfig,
@@ -289,6 +297,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

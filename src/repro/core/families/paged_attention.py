@@ -353,6 +353,18 @@ def _example():
             PagedAttentionProblem(32, 8, 1, 8192, 128, 2304, 128, "bf16"))
 
 
+def _sweep():
+    # pow2 bucket grid: the 8k serving point plus a large-batch /
+    # short-context and a small-batch / long-context point (pool sized
+    # to batch × pages-per-sequence plus free-list slack, as in prod)
+    return [PagedAttentionProblem(32, 8, 1, 8192, 128, 2304, 128,
+                                  "bf16"),
+            PagedAttentionProblem(128, 8, 1, 2048, 128, 2304, 128,
+                                  "bf16"),
+            PagedAttentionProblem(8, 8, 1, 32768, 128, 2304, 128,
+                                  "bf16")]
+
+
 FAMILY = register(KernelFamily(
     name="paged_attention",
     config_cls=PagedAttentionConfig,
@@ -367,6 +379,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

@@ -313,6 +313,14 @@ def _example():
             QuantGemmProblem(8192, 8192, 8192, group=128, dtype="i8"))
 
 
+def _sweep():
+    # pow2 bucket grid: the production int8 matmul plus the small-batch
+    # decode regime and a short-K projection, same 128-wide scale groups
+    return [QuantGemmProblem(8192, 8192, 8192, group=128, dtype="i8"),
+            QuantGemmProblem(2048, 8192, 8192, group=128, dtype="i8"),
+            QuantGemmProblem(8192, 8192, 2048, group=128, dtype="i8")]
+
+
 FAMILY = register(KernelFamily(
     name="quant_gemm",
     config_cls=QuantGemmConfig,
@@ -327,6 +335,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

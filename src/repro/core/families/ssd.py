@@ -200,6 +200,14 @@ def _example():
     return SSDConfig(chunk=64), SSDProblem(64, 8192, 64, 128, "f32")
 
 
+def _sweep():
+    # pow2 bucket grid: the training-shape scan plus a short-sequence
+    # and a long-sequence point, same head/state widths
+    return [SSDProblem(64, 8192, 64, 128, "f32"),
+            SSDProblem(64, 2048, 64, 128, "f32"),
+            SSDProblem(64, 32768, 64, 128, "f32")]
+
+
 FAMILY = register(KernelFamily(
     name="ssd",
     config_cls=SSDConfig,
@@ -213,6 +221,7 @@ FAMILY = register(KernelFamily(
     reference_check=reference_check,
     lower=_lower,
     example=_example,
+    sweep_problems=_sweep,
 ))
 
 

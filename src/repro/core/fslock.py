@@ -1,8 +1,8 @@
 """Best-effort advisory file locking for the persisted caches.
 
-``constraint_cache.json``, ``tuning_cache.json`` and the fleet tuner's
-``dispatch_table.json`` are shared across worker processes
-(:mod:`repro.core.tuning`).  ``locked`` takes an *advisory*
+``constraint_cache.json``, ``tuning_cache.json``, the fleet tuner's
+``dispatch_table.json`` and its shared lesson store ``lessons.json`` are
+shared across worker processes (:mod:`repro.core.tuning`).  ``locked`` takes an *advisory*
 ``fcntl.flock`` on a sidecar ``<path>.lock`` file — a sidecar, because
 the data file itself is replaced whole on save, and a lock on a replaced
 inode protects nobody.  A stale sidecar left behind by a killed process
@@ -16,7 +16,7 @@ lost cache entry, never a wrong answer.
 JSON cache save goes through: re-read the merge base *inside* the
 exclusive lock, merge, replace the file — so two workers saving
 concurrently union their entries instead of the later one clobbering the
-earlier's.
+earlier's.  ``read_json`` is the matching shared-lock read.
 """
 from __future__ import annotations
 
@@ -82,6 +82,19 @@ def merge_save(path, merge_fn, *, indent=2, sort_keys: bool = False):
         replace_file(p, json.dumps(data, indent=indent,
                                    sort_keys=sort_keys))
     return data
+
+
+def read_json(path, default=None):
+    """Parse a shared JSON file under the shared advisory lock.  Missing,
+    unreadable or corrupt files read as ``default`` — every shared file in
+    this repo is merge-on-save, so a failed read is a cold start, never an
+    error a reader should surface."""
+    p = Path(path)
+    with locked(p, exclusive=False):
+        try:
+            return json.loads(p.read_text())
+        except (OSError, ValueError):
+            return default
 
 
 def replace_file(path, text: str) -> None:

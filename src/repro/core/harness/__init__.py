@@ -1,6 +1,7 @@
 from .costmodel import CostEstimate, estimate
 from .icrl import (OptimizeCheckpoint, OptimizeResult, StepRecord,
-                   icrl_train, optimize_kernel)
+                   export_lessons, icrl_train, import_lessons,
+                   optimize_kernel)
 from .knowledge import KNOWLEDGE_BASE, Skill, skills_for
 from .lowering import LoweredState, LoweringAgent, RepairAttempt
 from .planner import KernelState, Planner, PlannerParams
@@ -11,4 +12,5 @@ __all__ = ["estimate", "CostEstimate", "KNOWLEDGE_BASE", "Skill",
            "skills_for", "Planner", "PlannerParams", "KernelState",
            "Selector", "LoweringAgent", "LoweredState", "RepairAttempt",
            "Validator", "optimize_kernel", "icrl_train", "OptimizeResult",
-           "OptimizeCheckpoint", "StepRecord"]
+           "OptimizeCheckpoint", "StepRecord", "export_lessons",
+           "import_lessons"]

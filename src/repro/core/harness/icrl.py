@@ -166,6 +166,99 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
 
 
 # --------------------------------------------------------------------------
+# Fleet lesson exchange — what the shared lesson store transports
+# --------------------------------------------------------------------------
+
+# bias learning rate for imported fleet lessons (deliberately below the
+# local lr=0.5: a peer's lesson is evidence, not this trajectory's own)
+LESSON_LR = 0.25
+
+
+def export_lessons(result: OptimizeResult, *, family: str,
+                   source: str) -> List[Dict]:
+    """Distill one optimize run into structured, publishable lesson
+    entries — the wire format of the fleet's shared lesson store
+    (:mod:`repro.core.tuning.lessons`).  One entry per skill the episode
+    produced an advantage signal for, stage-attributed with the
+    (stage, assertion) the skill's rewrites tripped most.  ``source``
+    (the work-item id) makes re-publication after a crash/re-dispatch
+    idempotent: the store keys entries on a content hash that includes
+    it."""
+    grads = analyze(policy_eval(result.history))
+    trips = assertion_trips(result.history)
+    entries: List[Dict] = []
+    for skill in sorted(grads):
+        g = grads[skill]
+        stage, akey, strikes = "", "", 0
+        per = trips.get(skill)
+        if per:
+            # deterministic worst offender: count, then label, tie-break
+            (stage, akey), strikes = max(
+                per.items(), key=lambda kv: (kv[1], kv[0]))
+        entries.append({
+            "skill": skill, "family": family, "source": source,
+            "direction": "prefer" if g > 0 else "avoid",
+            "advantage": round(g, 6),
+            "stage": stage, "assertion": akey, "strikes": strikes,
+        })
+    return entries
+
+
+def import_lessons(params: PlannerParams, entries: Sequence[Dict], *,
+                   family: Optional[str] = None,
+                   skills: Optional[set] = None) -> Dict[str, int]:
+    """Warm-start θ from published fleet lessons.
+
+    Entries are grouped by (skill, direction, stage, assertion); each
+    group contributes ``LESSON_LR · mean(advantage) · log1p(#sources)``
+    to the skill bias — repeated observations saturate logarithmically
+    (the store's *decay*: one loud lesson cannot dominate θ however many
+    workers republish it) — and its assertion strikes are folded into
+    :attr:`PlannerParams.assertion_strikes` (by max, so re-imports are
+    idempotent).  Application iterates groups in sorted order, so the
+    resulting θ depends only on the entry *set*, never on merge or
+    arrival order.
+
+    ``skills`` restricts application to the consuming family's skill
+    names (generic skills — retile, software_pipelining, … — are what
+    carries lessons *across* families); ``family`` is the consumer,
+    used only to count cross-family reuse.  Returns counters:
+    ``imported`` (entries applied), ``reused`` (of those, published by a
+    different family), ``strikes`` (assertion strikes folded in)."""
+    groups: Dict[Tuple[str, str, str, str], List[Dict]] = {}
+    counts = {"imported": 0, "reused": 0, "strikes": 0}
+    for e in entries:
+        skill = e.get("skill")
+        if not skill or (skills is not None and skill not in skills):
+            continue
+        key = (skill, e.get("direction", ""), e.get("stage", ""),
+               e.get("assertion", ""))
+        groups.setdefault(key, []).append(e)
+        counts["imported"] += 1
+        if family is not None and e.get("family") != family:
+            counts["reused"] += 1
+    for (skill, _direction, _stage, akey) in sorted(groups):
+        group = sorted(groups[(skill, _direction, _stage, akey)],
+                       key=lambda e: str(e.get("source")))
+        adv = sum(float(e.get("advantage", 0.0)) for e in group) \
+            / len(group)
+        params.skill_bias[skill] = params.skill_bias.get(skill, 0.0) \
+            + LESSON_LR * adv * math.log1p(len(group))
+        strikes = sum(int(e.get("strikes", 0)) for e in group)
+        if akey and strikes:
+            per = params.assertion_strikes.setdefault(skill, {})
+            if strikes > per.get(akey, 0):
+                counts["strikes"] += strikes - per.get(akey, 0)
+                per[akey] = strikes
+        lesson = (f"[fleet] {_direction} {skill} "
+                  f"(advantage {adv:+.3f}, {len(group)} source(s))")
+        if akey:
+            lesson += f" — trips {akey} at the {_stage} stage"
+        params.lessons.append(lesson)
+    return counts
+
+
+# --------------------------------------------------------------------------
 # Algorithm 1 — outer loop
 # --------------------------------------------------------------------------
 
@@ -186,14 +279,11 @@ def analyze(evals: Dict[str, float]) -> Dict[str, float]:
     return {k: v - mean for k, v in evals.items()}
 
 
-def parameter_update(params: PlannerParams, grads: Dict[str, float],
-                     buffer: Optional[Sequence[StepRecord]] = None,
-                     lr: float = 0.5) -> PlannerParams:
-    """θ update.  With the episode ``buffer``, lessons become
-    *stage-attributed*: a skill with negative advantage is annotated with
-    the assertion (and pipeline stage) its rewrites kept tripping, and
-    every violation is recorded as an assertion strike — which is what
-    :meth:`PlannerParams.strike_penalty` down-weights in later proposals."""
+def assertion_trips(buffer: Optional[Sequence[StepRecord]]
+                    ) -> Dict[str, Dict[Tuple[str, str], int]]:
+    """Per skill, how often each (stage, stable assertion key) fired
+    across the episode buffer — the raw material for stage-attributed
+    lessons (both the local textual ones and the fleet's shared store)."""
     trips: Dict[str, Dict[Tuple[str, str], int]] = {}
     for rec in buffer or ():
         if rec.verdict.ok:
@@ -204,7 +294,22 @@ def parameter_update(params: PlannerParams, grads: Dict[str, float],
             akey = assertion_key(f.assertion_id)
             per = trips.setdefault(rec.skill, {})
             per[(f.stage, akey)] = per.get((f.stage, akey), 0) + 1
-            params.strike(rec.skill, akey)
+    return trips
+
+
+def parameter_update(params: PlannerParams, grads: Dict[str, float],
+                     buffer: Optional[Sequence[StepRecord]] = None,
+                     lr: float = 0.5) -> PlannerParams:
+    """θ update.  With the episode ``buffer``, lessons become
+    *stage-attributed*: a skill with negative advantage is annotated with
+    the assertion (and pipeline stage) its rewrites kept tripping, and
+    every violation is recorded as an assertion strike — which is what
+    :meth:`PlannerParams.strike_penalty` down-weights in later proposals."""
+    trips = assertion_trips(buffer)
+    for skill, per in trips.items():
+        for (_stage, akey), n in per.items():
+            for _ in range(n):
+                params.strike(skill, akey)
     for k, g in grads.items():
         params.skill_bias[k] = params.skill_bias.get(k, 0.0) + lr * g
         direction = "prefer" if g > 0 else "avoid"

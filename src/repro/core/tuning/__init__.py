@@ -2,10 +2,13 @@
 
 The subsystem that takes the paper's per-kernel agentic search to
 production scale: jobs enumerated from the kernel-family registry
-(:mod:`.jobs`), successive-halving budget allocation (:mod:`.scheduler`),
-a crash-resumable JSONL journal (:mod:`.journal`), cache-sharing worker
-processes (:mod:`.pool`), and a versioned serving dispatch table
-(:mod:`.dispatch`) that the serve/launch paths consult.
+(:mod:`.jobs`, shape-bucket sweeps included), successive-halving budget
+allocation — synchronous rungs or rung-free async ASHA with a
+deterministic reconciliation pass (:mod:`.scheduler`), a
+crash-resumable JSONL journal (:mod:`.journal`), cache- and
+lesson-sharing worker processes (:mod:`.pool`, :mod:`.lessons`), and a
+versioned serving dispatch table (:mod:`.dispatch`) that the
+serve/launch paths consult.
 
     PYTHONPATH=src python examples/argus_optimize.py --workers 4
 """
@@ -19,6 +22,10 @@ from .jobs import TuningJob, enumerate_jobs, make_job, stable_seed
 # only for the dispatch hooks above and must not pay for the fleet.
 _LAZY = {"Journal": ".journal", "JournalMismatch": ".journal",
          "SuccessiveHalving": ".scheduler", "WorkItem": ".scheduler",
+         "AsyncSuccessiveHalving": ".scheduler",
+         "reconcile_schedule": ".scheduler",
+         "LessonStore": ".lessons", "LESSONS_NAME": ".lessons",
+         "lesson_key": ".lessons",
          "FleetReport": ".pool", "ItemRunner": ".pool",
          "fleet_fingerprint": ".pool", "run_fleet": ".pool"}
 

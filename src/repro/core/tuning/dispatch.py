@@ -16,9 +16,12 @@ problem the same way, so any problem in the bucket resolves to the entry
 tuned for the bucket's representative.
 
 The table is deterministic given (jobs, seeds): entries are built from
-journal records only — never wall-clock or worker ids — and serialized
-with sorted keys, which is what the ``--workers 1`` vs ``--workers 4``
-bitwise-identity check in ``benchmarks/fig_tuner_scaling.py`` asserts.
+the reconciled synchronous-schedule selection only
+(:func:`repro.core.tuning.scheduler.reconcile_schedule` — never from
+speculative async extras, wall-clock or worker ids) and serialized with
+sorted keys, which is what the ``--workers 1`` vs ``--workers 4`` and
+sync-vs-``--async`` bitwise-identity checks in
+``benchmarks/fig_tuner_scaling.py`` assert.
 """
 from __future__ import annotations
 
@@ -159,9 +162,11 @@ def load(path) -> DispatchTable:
 
 
 def build_table(records: Iterable[dict]) -> DispatchTable:
-    """Build the table from journal records: per job keep the highest
-    completed rung; per (family, bucket) keep the best speedup
-    (deterministic job-id tie-break)."""
+    """Build the table from journal records — the caller passes the
+    *reconciled* selection, so sync/async and any worker count feed the
+    same records here: per job keep the highest completed rung; per
+    (family, bucket) keep the best speedup (deterministic job-id
+    tie-break)."""
     per_job: Dict[str, dict] = {}
     for rec in records:
         cur = per_job.get(rec["job"])

@@ -3,8 +3,10 @@
 A *tuning job* is the unit the orchestrator schedules: (family, problem,
 seed, budget).  Jobs are enumerated straight from the kernel-family
 registry — every registered family with a production ``example()``
-becomes one job, so registering a new family makes it fleet-tunable with
-no orchestrator changes — and carry a *priority* from the family's
+becomes one job, and under ``sweep=True`` every problem in the family's
+``sweep_problems()`` shape-bucket grid becomes one, so registering a new
+family (or widening its grid) makes it fleet-tunable with no
+orchestrator changes — and carry a *priority* from the family's
 analytic cost hook (:mod:`repro.core.costs` constants): kernels that
 dominate the modeled wall-clock are dispatched first within each rung.
 
@@ -75,11 +77,17 @@ def make_job(family: str, problem, start_cfg=None, *,
 
 
 def enumerate_jobs(families: Optional[Sequence[str]] = None, *,
-                   seed: int = 0) -> List[TuningJob]:
+                   seed: int = 0, sweep: bool = False) -> List[TuningJob]:
     """One job per registered family's production example (the registry
     is the source of truth; families without an ``example()`` are not
-    tunable and are skipped).  Deterministic order: priority-descending,
-    job-id tie-break."""
+    tunable and are skipped).  With ``sweep``, families declaring a
+    ``sweep_problems()`` grid contribute one job per grid problem — each
+    lands in its own dispatch-table shape bucket, so the table gets
+    populated from measurements across the family's serving regimes
+    instead of a single ``example()`` point.  Every job starts from the
+    example config; the example problem is always included and
+    duplicates (a grid restating the example) collapse by job id.
+    Deterministic order: priority-descending, job-id tie-break."""
     fams = (all_families() if families is None
             else [get_family(n) for n in families])
     jobs = []
@@ -87,6 +95,15 @@ def enumerate_jobs(families: Optional[Sequence[str]] = None, *,
         if fam.example is None:
             continue
         cfg, prob = fam.example()
-        jobs.append(make_job(fam.name, prob, cfg, seed=seed))
+        probs = [prob]
+        if sweep and fam.sweep_problems is not None:
+            probs += list(fam.sweep_problems())
+        seen = set()
+        for p in probs:
+            key = problem_key(p)
+            if key in seen:
+                continue
+            seen.add(key)
+            jobs.append(make_job(fam.name, p, cfg, seed=seed))
     jobs.sort(key=lambda j: (-j.priority, j.job_id))
     return jobs

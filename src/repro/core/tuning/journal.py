@@ -17,12 +17,13 @@ Record format (one JSON object per line):
      "baseline_time_s": ..., "best_time_s": ..., "speedup": ...,
      "iterations_done": n, "cost_units": ..., "solved": true,
      "accepted": n, "repairs": n, "verdict_stages": {stage: count},
-     "verify_stats": {...}, "worker": wid, "wall_s": ...}
+     "verify_stats": {...}, "lessons_imported": n, "lessons_reused": n,
+     "lessons_published": n, "worker": wid, "wall_s": ...}
 
-``worker``/``wall_s`` are provenance of *this* run and are excluded from
-the dispatch table (which must be bitwise-identical across worker
-counts).  Loading tolerates a torn final line — the signature of a
-process killed mid-append — by skipping lines that fail to parse.
+``worker``/``wall_s``/``lessons_*`` are provenance of *this* run and are
+excluded from the dispatch table (which must be bitwise-identical across
+worker counts).  Loading tolerates a torn final line — the signature of
+a process killed mid-append — by skipping lines that fail to parse.
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-"""Successive-halving budget scheduler (ASHA-style, synchronous rungs).
+"""Successive-halving budget schedulers: synchronous rungs + async ASHA.
 
 Solver time is the fleet's scarce resource, so budgets concentrate where
 the verified cost model says they pay off: every job first gets a small
@@ -10,6 +10,25 @@ budget exceeds ``max_budget``.  Each rung runs as a budgeted
 previous rung's :class:`repro.core.harness.OptimizeCheckpoint`, so a
 promoted job's trajectory continues instead of restarting.
 
+Two schedulers share that budget ladder:
+
+* :class:`SuccessiveHalving` — synchronous rungs: rung ``r+1`` starts
+  only when *every* rung-``r`` item has finished, so the pool barriers
+  on its slowest job once per rung.
+* :class:`AsyncSuccessiveHalving` — rung-free (ASHA) promotion: a job
+  promotes the moment it ranks in the top ``1/eta`` of the *completed*
+  rung peers, so a straggler delays only its own trajectory, never an
+  unrelated promotion.
+
+Asynchrony changes *which* items run, not what any item returns — an
+item's result depends only on its own job's previous-rung checkpoint —
+so :func:`reconcile_schedule` can replay the synchronous schedule over
+the accumulated records afterwards and select exactly the records the
+synchronous run would have produced.  That reconciliation is what keeps
+``dispatch_table.json`` byte-identical across sync/async modes, worker
+counts and scheduling orders; async items outside the synchronous
+schedule are speculation, journaled but never in the table.
+
 Everything here is deterministic given (jobs, results): survivor
 selection sorts by (speedup desc, job id), budgets follow the fixed
 ``base_budget · eta^rung`` schedule, and work items are identified by
@@ -19,9 +38,19 @@ dispatch table independent of worker count.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 from .jobs import TuningJob
+
+
+def _budget_ladder(base_budget: int, max_budget: int,
+                   eta: int) -> List[int]:
+    if base_budget < 1 or eta < 2:
+        raise ValueError("need base_budget >= 1 and eta >= 2")
+    budgets = [base_budget]
+    while budgets[-1] * eta <= max_budget:
+        budgets.append(budgets[-1] * eta)
+    return budgets
 
 
 @dataclass(frozen=True)
@@ -54,13 +83,9 @@ class SuccessiveHalving:
 
     def __init__(self, jobs: List[TuningJob], *, base_budget: int = 4,
                  max_budget: int = 32, eta: int = 2):
-        if base_budget < 1 or eta < 2:
-            raise ValueError("need base_budget >= 1 and eta >= 2")
         self.jobs = sorted(jobs, key=lambda j: (-j.priority, j.job_id))
         self.eta = eta
-        self.budgets: List[int] = [base_budget]
-        while self.budgets[-1] * eta <= max_budget:
-            self.budgets.append(self.budgets[-1] * eta)
+        self.budgets = _budget_ladder(base_budget, max_budget, eta)
         self._alive = list(self.jobs)
         self._rung = 0
 
@@ -92,3 +117,95 @@ class SuccessiveHalving:
         return [WorkItem(j, self._rung, self.budgets[self._rung],
                          checkpoint=records[j.job_id])
                 for j in self._alive]
+
+
+class AsyncSuccessiveHalving:
+    """Rung-free (asynchronous) successive halving — the ASHA promotion
+    rule over the same budget ladder.
+
+    ``initial_items()`` issues every job at rung 0; ``on_result(record)``
+    files one completed record and returns the work items it newly
+    unlocks: a job promotes to rung ``r+1`` the moment it ranks in the
+    top ``len(completed) // eta`` of the rung-``r`` records completed *so
+    far* (speedup descending, job-id tie-break).  No barrier: a straggler
+    holds back only its own promotions.  Ranks are re-evaluated on every
+    completion — a job that enters the top fraction later (because a
+    worse peer landed) still promotes; an already-promoted job that falls
+    out is speculation the reconciliation pass will discard.
+
+    Compared to the synchronous scheduler this strictly *under*-promotes
+    while a rung is partially complete (``n // eta`` is 0 until ``eta``
+    peers land, and never applies the sync rule's minimum of one
+    survivor), and can promote jobs the complete ranking would not —
+    both are healed by :func:`reconcile_schedule`, which tops up missing
+    synchronous-schedule items and drops speculative extras.
+    """
+
+    def __init__(self, jobs: List[TuningJob], *, base_budget: int = 4,
+                 max_budget: int = 32, eta: int = 2):
+        self.jobs = sorted(jobs, key=lambda j: (-j.priority, j.job_id))
+        self.eta = eta
+        self.budgets = _budget_ladder(base_budget, max_budget, eta)
+        self._by_id = {j.job_id: j for j in self.jobs}
+        self._completed: Dict[int, Dict[str, dict]] = {}
+        self._issued: Set[str] = set()
+
+    def initial_items(self) -> List[WorkItem]:
+        out = [WorkItem(j, 0, self.budgets[0]) for j in self.jobs]
+        self._issued.update(it.item_id for it in out)
+        return out
+
+    def on_result(self, record: dict) -> List[WorkItem]:
+        """File one completed item's journal record; return the newly
+        promotable work items (possibly for *other* jobs whose rank the
+        new record improved).  Unknown jobs and rungs past the ladder
+        are ignored, so journal replay can feed every record through."""
+        job_id, rung = record.get("job"), record.get("rung")
+        if job_id not in self._by_id or not isinstance(rung, int) \
+                or not 0 <= rung < len(self.budgets):
+            return []
+        self._completed.setdefault(rung, {})[job_id] = record
+        nxt = rung + 1
+        if nxt >= len(self.budgets):
+            return []
+        recs = self._completed[rung]
+        ranked = sorted(recs, key=lambda j: (-recs[j]["speedup"], j))
+        out = []
+        for jid in ranked[:len(ranked) // self.eta]:
+            item = WorkItem(self._by_id[jid], nxt, self.budgets[nxt],
+                            checkpoint=recs[jid])
+            if item.item_id not in self._issued:
+                self._issued.add(item.item_id)
+                out.append(item)
+        return out
+
+
+def reconcile_schedule(jobs: List[TuningJob], records: Dict[str, dict],
+                       *, base_budget: int = 4, max_budget: int = 32,
+                       eta: int = 2
+                       ) -> Tuple[Dict[str, dict], List[WorkItem]]:
+    """Replay the *synchronous* schedule against completed ``records``
+    (item id -> journal record).
+
+    Returns ``(selected, missing)``: ``selected`` maps each item id the
+    synchronous schedule has reached so far to its record; ``missing``
+    is the first incomplete rung's outstanding work items (empty when
+    the schedule is fully covered).  Pure and deterministic — an item's
+    result depends only on its own job's previous-rung record, so a
+    record is valid evidence no matter which mode, worker or scheduling
+    order produced it.  Building the dispatch table from ``selected``
+    (and nothing else) is what makes the table byte-identical across
+    sync/async and any worker count."""
+    sched = SuccessiveHalving(jobs, base_budget=base_budget,
+                              max_budget=max_budget, eta=eta)
+    items = sched.first_rung()
+    selected: Dict[str, dict] = {}
+    while items:
+        missing = [it for it in items if it.item_id not in records]
+        if missing:
+            return selected, missing
+        for it in items:
+            selected[it.item_id] = records[it.item_id]
+        items = sched.next_rung(
+            {it.job.job_id: records[it.item_id] for it in items})
+    return selected, []

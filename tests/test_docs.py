@@ -6,9 +6,13 @@ Checked, per file:
     (attribute tail);
   * repo-relative file paths (src/, tests/, docs/, benchmarks/,
     examples/, .github/) exist;
+  * relative markdown links between docs pages resolve — no dangling
+    links;
   * every registered kernel family is documented in docs/families.md,
     and every family the "Registered families" table names is actually
     registered;
+  * docs/README.md's subsystem index covers every docs page and is
+    linked from docs/architecture.md;
   * code blocks annotated ``<!-- verbatim-from: <path> -->`` appear
     verbatim (contiguously) in the named source file — the tutorial's
     worked example can never drift from the shipped module.
@@ -33,6 +37,8 @@ VERBATIM = re.compile(
     r"```[a-z]*\n(?P<body>.*?)```", re.DOTALL)
 FAMILY_ROW = re.compile(r"^\|\s*`(?P<name>[a-z_0-9]+)`\s*\|",
                         re.MULTILINE)
+# markdown links, excluding bare-anchor (#...) and absolute/external ones
+MD_LINK = re.compile(r"\[[^\]]*\]\((?P<target>[^)#\s]+)(?:#[^)]*)?\)")
 
 
 def _resolve_dotted(path: str) -> bool:
@@ -83,6 +89,40 @@ def test_verbatim_blocks_match_their_source(doc):
             f"{m.group('path')} has drifted from the source")
 
 
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_relative_links_resolve(doc):
+    """No dangling relative links between docs pages (CI's docs step
+    fails here the moment a page is renamed without fixing its
+    referrers)."""
+    text = doc.read_text()
+    dangling = []
+    for m in MD_LINK.finditer(text):
+        target = m.group("target")
+        if "://" in target or target.startswith(("mailto:", "/")):
+            continue
+        if not (doc.parent / target).exists():
+            dangling.append(target)
+    assert not dangling, \
+        f"{doc.name} has dangling relative links: {sorted(set(dangling))}"
+
+
+def test_docs_index_covers_every_docs_page():
+    """docs/README.md is the subsystem → doc page → owning module index;
+    every other docs page must appear in it (as a relative link, so the
+    link checker also guards it), and the index itself must be linked
+    from the architecture tour."""
+    readme = (ROOT / "docs" / "README.md").read_text()
+    unindexed = [p.name for p in DOCS if p.name != "README.md"
+                 and f"[{p.name}]({p.name})" not in readme]
+    assert not unindexed, \
+        f"docs/README.md index does not link: {unindexed}"
+    assert re.search(r"\|\s*subsystem\s*\|", readme), \
+        "docs/README.md lost its subsystem index table"
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "docs/README.md" in arch, \
+        "docs/architecture.md must point readers at the docs index"
+
+
 def test_every_registered_family_is_documented():
     text = (ROOT / "docs" / "families.md").read_text()
     undocumented = [n for n in family_names() if f"`{n}`" not in text]
@@ -117,12 +157,16 @@ def test_families_doc_has_verbatim_worked_example():
 
 
 def test_tuning_doc_has_verbatim_schema_and_journal_format():
-    """docs/tuning.md must document the dispatch-table schema and the
-    journal record format with blocks checked verbatim against the
-    tuning subsystem's source."""
+    """docs/tuning.md must document the dispatch-table schema, the
+    journal record format, the lesson-store schema, the async promotion
+    rule and the sweep-job enumeration with blocks checked verbatim
+    against the tuning subsystem's source."""
     text = (ROOT / "docs" / "tuning.md").read_text()
     blocks = [m.group("path") for m in VERBATIM.finditer(text)]
-    assert any("tuning/dispatch.py" in p for p in blocks), \
-        "tuning.md lost its verbatim dispatch-table schema example"
-    assert any("tuning/journal.py" in p for p in blocks), \
-        "tuning.md lost its verbatim journal record format"
+    for src, what in (("tuning/dispatch.py", "dispatch-table schema"),
+                      ("tuning/journal.py", "journal record format"),
+                      ("tuning/lessons.py", "lesson-store schema"),
+                      ("tuning/scheduler.py", "async promotion rule"),
+                      ("tuning/jobs.py", "sweep-job enumeration")):
+        assert any(src in p for p in blocks), \
+            f"tuning.md lost its verbatim {what} example"

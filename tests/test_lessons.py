@@ -1,0 +1,196 @@
+"""Shared fleet lesson store: content-hash idempotency, order-free
+merges, two-process publication under real contention, and the
+export → store → import round trip that carries a lesson across
+families."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.families import get_family
+from repro.core.harness import (KernelState, Planner, PlannerParams,
+                                Selector, Validator, export_lessons,
+                                import_lessons, optimize_kernel)
+from repro.core.harness.lowering import LoweringAgent
+from repro.core.tuning.lessons import (SCHEMA_EXAMPLE, LessonStore,
+                                       lesson_key)
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def entry(source="job@r0", skill="retile", family="gemm",
+          direction="avoid", advantage=-0.3, stage="solver",
+          assertion="assert_conform(a,b)", strikes=2):
+    return {"skill": skill, "family": family, "source": source,
+            "direction": direction, "advantage": advantage,
+            "stage": stage, "assertion": assertion, "strikes": strikes}
+
+
+# ---------------------------------------------------------------------------
+# Store mechanics
+# ---------------------------------------------------------------------------
+
+class TestLessonStore:
+    def test_schema_example_round_trips(self, tmp_path):
+        path = tmp_path / "lessons.json"
+        path.write_text(json.dumps(SCHEMA_EXAMPLE))
+        store = LessonStore(path)
+        lessons = store.load()
+        assert lessons == SCHEMA_EXAMPLE["lessons"]
+        (key, e), = SCHEMA_EXAMPLE["lessons"].items()
+        assert lesson_key(e) == key, \
+            "SCHEMA_EXAMPLE's key must be the entry's real content hash"
+
+    def test_publish_and_load_entries_sorted(self, tmp_path):
+        store = LessonStore(tmp_path / "lessons.json")
+        a, b = entry(source="a@r0"), entry(source="b@r0", skill="split_k")
+        assert store.publish([a, b]) == 2
+        got = store.load_entries()
+        assert got == [store.load()[k] for k in sorted(store.load())]
+        assert {e["source"] for e in got} == {"a@r0", "b@r0"}
+
+    def test_duplicate_publication_is_idempotent(self, tmp_path):
+        path = tmp_path / "lessons.json"
+        store = LessonStore(path)
+        batch = [entry(source="a@r0"), entry(source="b@r0")]
+        assert store.publish(batch) == 2
+        before = path.read_bytes()
+        assert store.publish(batch) == 0, \
+            "re-publishing the same entries must insert nothing"
+        assert path.read_bytes() == before, \
+            "a duplicate publication must not even rewrite the store"
+
+    def test_advantage_change_still_dedups_onto_original(self, tmp_path):
+        """A re-executed item (lessons runs are not bit-reproducible)
+        publishes the same lesson with a drifted advantage — the content
+        hash excludes the number, so it lands on the original entry."""
+        store = LessonStore(tmp_path / "lessons.json")
+        store.publish([entry(advantage=-0.3)])
+        assert store.publish([entry(advantage=-0.31)]) == 0
+        (e,) = store.load_entries()
+        assert e["advantage"] == -0.3
+
+    def test_publish_order_cannot_change_the_store(self, tmp_path):
+        batch = [entry(source=f"j{i}@r0", advantage=-0.1 * (i + 1))
+                 for i in range(6)]
+        p1, p2 = tmp_path / "fwd.json", tmp_path / "rev.json"
+        s1, s2 = LessonStore(p1), LessonStore(p2)
+        for e in batch:
+            s1.publish([e])
+        for e in reversed(batch):
+            s2.publish([e])
+        assert p1.read_bytes() == p2.read_bytes(), \
+            "merge order must not change the serialized store"
+
+    def test_corrupt_or_wrong_version_reads_empty(self, tmp_path):
+        path = tmp_path / "lessons.json"
+        path.write_text("{not json")
+        assert LessonStore(path).load() == {}
+        path.write_text(json.dumps({"version": 99, "lessons": {"x": {}}}))
+        assert LessonStore(path).load() == {}
+        # and publish recovers the file
+        store = LessonStore(path)
+        store.publish([entry()])
+        assert len(store.load()) == 1
+
+    @pytest.mark.multiproc
+    def test_two_processes_hammering_lose_no_lessons(self, tmp_path):
+        """The fleet case: two workers publishing one lesson at a time
+        into one store — every entry must survive, and re-publication
+        from a re-dispatched item must not duplicate."""
+        path = tmp_path / "lessons.json"
+        rounds = 25
+        hammer = """
+import sys
+sys.path.insert(0, sys.argv[4])
+from repro.core.tuning.lessons import LessonStore
+wid, rounds, path = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+store = LessonStore(path)
+for i in range(rounds):
+    e = {"skill": "retile", "family": wid, "source": f"{wid}:{i}@r0",
+         "direction": "avoid", "advantage": -0.1, "stage": "solver",
+         "assertion": "assert_conform(a,b)", "strikes": 1}
+    store.publish([e])
+    store.publish([e])      # duplicate publication mid-contention
+"""
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", hammer, wid, str(rounds), str(path),
+             SRC]) for wid in ("a", "b")]
+        for p in procs:
+            assert p.wait(timeout=120) == 0
+        entries = LessonStore(path).load_entries()
+        sources = {e["source"] for e in entries}
+        missing = [f"{w}:{i}@r0" for w in ("a", "b")
+                   for i in range(rounds) if f"{w}:{i}@r0" not in sources]
+        assert not missing, f"lost lessons under contention: {missing}"
+        assert len(entries) == 2 * rounds, \
+            "duplicate publications must not inflate the store"
+
+
+# ---------------------------------------------------------------------------
+# Export / import — the θ exchange
+# ---------------------------------------------------------------------------
+
+def _noisy_run(family="quant_gemm", seed=3, iterations=6):
+    fam = get_family(family)
+    cfg, prob = fam.example()
+    st = KernelState(family, cfg, prob).refresh()
+    return optimize_kernel(
+        st, planner=Planner(), selector=Selector(seed=seed),
+        lowering=LoweringAgent(fault_model=True, seed=seed),
+        validator=Validator(), iterations=iterations)
+
+
+class TestLessonExchange:
+    def test_export_is_deterministic_and_stage_attributed(self):
+        res = _noisy_run()
+        a = export_lessons(res, family="quant_gemm", source="q@r0")
+        b = export_lessons(res, family="quant_gemm", source="q@r0")
+        assert a == b
+        assert a, "a fault-model run must yield lessons"
+        assert all(e["direction"] in ("prefer", "avoid") for e in a)
+        tripped = [e for e in a if e["assertion"]]
+        assert all(e["stage"] for e in tripped), \
+            "an assertion-attributed lesson must carry its stage"
+
+    def test_import_applies_bias_strikes_and_counts_reuse(self):
+        res = _noisy_run()
+        exported = export_lessons(res, family="quant_gemm", source="q@r0")
+        gemm_skills = {s.name for s in get_family("gemm").skills}
+        params = PlannerParams()
+        counts = import_lessons(params, exported, family="gemm",
+                                skills=gemm_skills)
+        assert counts["imported"] > 0
+        assert counts["reused"] == counts["imported"], \
+            "every applied lesson came from quant_gemm, not gemm"
+        assert params.skill_bias, "imported lessons must move θ"
+        assert all(k in gemm_skills for k in params.skill_bias)
+        assert params.lessons and all(
+            line.startswith("[fleet]") for line in params.lessons)
+
+    def test_import_is_idempotent_for_strikes_and_order_free(self):
+        res = _noisy_run()
+        exported = export_lessons(res, family="quant_gemm", source="q@r0")
+        skills = {s.name for s in get_family("quant_gemm").skills}
+        p1, p2 = PlannerParams(), PlannerParams()
+        import_lessons(p1, exported, family="quant_gemm", skills=skills)
+        import_lessons(p2, list(reversed(exported)), family="quant_gemm",
+                       skills=skills)
+        assert p1.skill_bias == p2.skill_bias
+        assert p1.assertion_strikes == p2.assertion_strikes
+        # re-importing the same entries must not stack strikes
+        strikes_before = {k: dict(v)
+                          for k, v in p1.assertion_strikes.items()}
+        counts = import_lessons(p1, exported, family="quant_gemm",
+                                skills=skills)
+        assert p1.assertion_strikes == strikes_before
+        assert counts["strikes"] == 0
+
+    def test_skills_filter_drops_foreign_skills(self):
+        foreign = [entry(skill="definitely_not_a_skill")]
+        params = PlannerParams()
+        counts = import_lessons(params, foreign, family="gemm",
+                                skills={"retile"})
+        assert counts["imported"] == 0 and not params.skill_bias

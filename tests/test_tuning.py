@@ -16,10 +16,11 @@ import pytest
 from repro.core.families import all_families, get_family
 from repro.core.harness import (KernelState, OptimizeCheckpoint, Planner,
                                 Selector, Validator, optimize_kernel)
-from repro.core.tuning import (DispatchTable, Journal, JournalMismatch,
+from repro.core.tuning import (AsyncSuccessiveHalving, DispatchTable,
+                               Journal, JournalMismatch,
                                SuccessiveHalving, enumerate_jobs,
-                               make_job, run_fleet, shape_bucket,
-                               stable_seed)
+                               make_job, reconcile_schedule, run_fleet,
+                               shape_bucket, stable_seed)
 from repro.core.tuning import dispatch as dispatch_mod
 from repro.core.tuning.dispatch import SCHEMA_EXAMPLE
 from repro.core.verify_engine import VerificationEngine, merge_stats
@@ -65,6 +66,29 @@ class TestJobs:
         jobs = enumerate_jobs(seed=0)
         assert [j.priority for j in jobs] == \
             sorted((j.priority for j in jobs), reverse=True)
+
+    def test_sweep_emits_one_job_per_grid_bucket(self):
+        plain = enumerate_jobs(seed=0)
+        swept = enumerate_jobs(seed=0, sweep=True)
+        assert len(swept) > len(plain), \
+            "sweep=True must add shape-grid jobs"
+        assert {j.job_id for j in plain} <= {j.job_id for j in swept}, \
+            "every example() job must survive the sweep"
+        for fam in all_families():
+            if fam.sweep_problems is None:
+                continue
+            buckets = [shape_bucket(j.problem) for j in swept
+                       if j.family == fam.name]
+            assert len(set(buckets)) == len(buckets), \
+                f"{fam.name}: sweep problems collide in a dispatch bucket"
+            _, ex = fam.example()
+            assert shape_bucket(ex) in buckets
+
+    def test_sweep_is_deterministic_and_opt_in(self):
+        assert [j.job_id for j in enumerate_jobs(seed=0, sweep=True)] \
+            == [j.job_id for j in enumerate_jobs(seed=0, sweep=True)]
+        assert [j.job_id for j in enumerate_jobs(seed=0)] \
+            == [j.job_id for j in enumerate_jobs(seed=0, sweep=False)]
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +137,121 @@ class TestSuccessiveHalving:
             items = sched.next_rung(
                 {items[0].job.job_id: {"speedup": 1.0}})
         assert budgets == [1, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Async (rung-free) scheduler + reconciliation
+# ---------------------------------------------------------------------------
+
+def _rec(item, speedup):
+    return {"kind": "result", "item": item.item_id,
+            "job": item.job.job_id, "rung": item.rung,
+            "speedup": speedup}
+
+
+class TestAsyncSuccessiveHalving:
+    def test_promotes_from_completed_peers_without_a_barrier(self):
+        sched = AsyncSuccessiveHalving(_fake_jobs(4), base_budget=2,
+                                       max_budget=8)
+        items = {it.job.job_id: it for it in sched.initial_items()}
+        ids = sorted(items)
+        # one completion: 1 // 2 == 0 — nothing promotable yet
+        assert sched.on_result(_rec(items[ids[0]], 2.0)) == []
+        # second, worse, completion: the first enters the top half and
+        # promotes with its own record as checkpoint — no waiting for
+        # the two jobs still in flight
+        promoted = sched.on_result(_rec(items[ids[1]], 1.1))
+        assert [it.job.job_id for it in promoted] == [ids[0]]
+        assert promoted[0].rung == 1 and promoted[0].budget == 4
+        assert promoted[0].checkpoint["speedup"] == 2.0
+
+    def test_straggler_cannot_delay_unrelated_promotions(self):
+        """The tentpole property: every other job finishes rung 0 and
+        keeps promoting up the ladder while one straggler never
+        reports."""
+        jobs = _fake_jobs(5)
+        sched = AsyncSuccessiveHalving(jobs, base_budget=2, max_budget=8)
+        items = sched.initial_items()
+        straggler = items[0].job.job_id
+        promoted = []
+        frontier = [it for it in items if it.job.job_id != straggler]
+        while frontier:
+            it = frontier.pop(0)
+            new = sched.on_result(_rec(it, 2.0 + it.budget))
+            promoted += new
+            frontier += new
+        assert promoted, "peers must promote despite the straggler"
+        assert straggler not in {it.job.job_id for it in promoted}
+        assert max(it.rung for it in promoted) == 2, \
+            "the ladder must be climbable to the top without the " \
+            "straggler"
+
+    def test_a_late_good_result_still_promotes(self):
+        sched = AsyncSuccessiveHalving(_fake_jobs(4), base_budget=2,
+                                       max_budget=4)
+        items = {it.job.job_id: it for it in sched.initial_items()}
+        ids = sorted(items)
+        for jid in ids[:3]:
+            sched.on_result(_rec(items[jid], 1.5))
+        late = sched.on_result(_rec(items[ids[3]], 9.0))
+        assert any(it.job.job_id == ids[3] for it in late), \
+            "rank re-evaluation must promote a late fast finisher"
+
+    def test_duplicate_and_foreign_results_are_ignored(self):
+        sched = AsyncSuccessiveHalving(_fake_jobs(2), base_budget=2,
+                                       max_budget=4)
+        a, b = sched.initial_items()
+        first = sched.on_result(_rec(a, 3.0)) + sched.on_result(_rec(b, 1.0))
+        assert [it.item_id for it in first] == [f"{a.job.job_id}@r1"]
+        assert sched.on_result(_rec(a, 3.0)) == [], \
+            "a re-delivered result must not re-issue the promotion"
+        assert sched.on_result({"job": "ghost:job", "rung": 0,
+                                "speedup": 9.9}) == []
+
+
+class TestReconcileSchedule:
+    def test_selects_exactly_the_sync_schedule(self):
+        jobs = _fake_jobs(4)
+        sync = SuccessiveHalving(jobs, base_budget=2, max_budget=8)
+        records, sync_items = {}, []
+        items = sync.first_rung()
+        while items:
+            sync_items += [it.item_id for it in items]
+            for it in items:
+                records[it.item_id] = _rec(it, 1.0 + it.job.priority)
+            items = sync.next_rung(
+                {it.job.job_id: records[it.item_id] for it in items})
+        # speculative async extra that sync would never have run
+        loser = sorted(jobs, key=lambda j: j.job_id)[-1]
+        records[f"{loser.job_id}@r2"] = {"kind": "result",
+                                         "job": loser.job_id, "rung": 2,
+                                         "speedup": 99.0}
+        selected, missing = reconcile_schedule(jobs, records,
+                                               base_budget=2,
+                                               max_budget=8)
+        assert missing == []
+        assert set(selected) == set(sync_items), \
+            "reconciliation must select the sync schedule and drop " \
+            "speculative extras"
+
+    def test_reports_the_first_incomplete_rung(self):
+        jobs = _fake_jobs(3)
+        sched = SuccessiveHalving(jobs, base_budget=2, max_budget=4)
+        rung0 = sched.first_rung()
+        records = {it.item_id: _rec(it, 1.0) for it in rung0[:-1]}
+        selected, missing = reconcile_schedule(jobs, records,
+                                               base_budget=2,
+                                               max_budget=4)
+        assert selected == {}
+        assert [it.item_id for it in missing] == [rung0[-1].item_id]
+        # completing it unblocks rung 1 with embedded checkpoints
+        records[rung0[-1].item_id] = _rec(rung0[-1], 1.0)
+        selected, missing = reconcile_schedule(jobs, records,
+                                               base_budget=2,
+                                               max_budget=4)
+        assert set(selected) == {it.item_id for it in rung0}
+        assert all(it.rung == 1 and it.checkpoint is not None
+                   for it in missing)
 
 
 # ---------------------------------------------------------------------------
@@ -321,6 +460,62 @@ class TestFleet:
         assert r2.stats["solver_discharges"] \
             < 2 * max(r1.stats["solver_discharges"], 1), \
             "cache sharing should keep 2 workers below 2x solo discharges"
+
+
+# ---------------------------------------------------------------------------
+# Async fleet: reconciled determinism + shared lessons
+# ---------------------------------------------------------------------------
+
+class TestFleetAsync:
+    def test_async_serial_reconciles_to_the_sync_table(self, tmp_path):
+        r_sync = _fleet(tmp_path / "sync", workers=1)
+        r_async = _fleet(tmp_path / "async", workers=1, async_mode=True)
+        t1 = (tmp_path / "sync" / "dispatch_table.json").read_bytes()
+        t2 = (tmp_path / "async" / "dispatch_table.json").read_bytes()
+        assert t1 == t2, \
+            "async + reconciliation must reproduce the sync table"
+        assert r_async.rungs == r_sync.rungs
+
+    @pytest.mark.multiproc
+    def test_async_workers_reconcile_to_the_sync_table(self, tmp_path):
+        """The acceptance property across *both* axes at once: 2 async
+        workers vs 1 sync worker — scheduling order, promotion rule and
+        worker count all differ, the reconciled table must not."""
+        _fleet(tmp_path / "sync", workers=1)
+        _fleet(tmp_path / "async", workers=2, async_mode=True)
+        assert (tmp_path / "sync" / "dispatch_table.json").read_bytes() \
+            == (tmp_path / "async" / "dispatch_table.json").read_bytes()
+
+    def test_async_resumes_from_sync_journal_without_rerunning(
+            self, tmp_path):
+        """Mode is excluded from the journal fingerprint: an item's
+        result does not depend on the promotion rule, so a sync journal
+        fully satisfies an async re-invocation."""
+        r1 = _fleet(tmp_path)
+        r2 = _fleet(tmp_path, async_mode=True)
+        assert r2.ran == 0 and r2.skipped >= r1.ran
+
+    def test_lessons_flow_cross_family_and_fingerprint_guards(
+            self, tmp_path):
+        """A serial sweep run with the lesson store on: later items must
+        import lessons published by earlier items of *other* families
+        (the generic skills carry them), and the lessons flag must be
+        part of the journal fingerprint — trajectories differ, so a
+        lessons journal must not satisfy a non-lessons run."""
+        jobs = enumerate_jobs(FAST_FAMILIES, seed=0, sweep=True)
+        rep = run_fleet(jobs, workers=1, out_dir=tmp_path,
+                        lessons=True, **FAST)
+        assert rep.lessons["lessons_published"] > 0
+        assert rep.lessons["lessons_imported"] > 0
+        assert rep.lessons["lessons_reused"] > 0, \
+            "a sweep over two GEMM-shaped families must reuse lessons " \
+            "across them"
+        store = json.loads((tmp_path / "lessons.json").read_text())
+        assert store["version"] == 1 and store["lessons"]
+        assert {e["family"] for e in store["lessons"].values()} \
+            == set(FAST_FAMILIES)
+        with pytest.raises(JournalMismatch):
+            run_fleet(jobs, workers=1, out_dir=tmp_path, **FAST)
 
 
 # ---------------------------------------------------------------------------
