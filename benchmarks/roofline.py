@@ -1,8 +1,23 @@
-"""§Roofline table: read the dry-run JSONs and emit per-(arch × shape) rows
-with all three roofline terms, the dominant bound, MODEL_FLOPS/HLO_FLOPs,
-and a one-line lever suggestion."""
+"""§Roofline tables.
+
+Two sections:
+
+* **dry-run rows** — read the launch dry-run JSONs (``--dir``, default
+  ``experiments/dryrun``, written by ``python -m repro.launch.dryrun``)
+  and emit per-(arch × shape) rows with all three roofline terms, the
+  dominant bound, MODEL_FLOPS/HLO_FLOPs, and a one-line lever
+  suggestion.  When the directory holds no JSONs the section is skipped
+  with a message instead of printing a bare header.
+* **kernel-family speed-of-light rows** — the same analytic bounds the
+  fleet tuner's SoL guidance uses (each registered family's
+  ``sol_bound`` hook, :mod:`repro.core.families`), evaluated on the
+  family's example and sweep-grid problems: the config-independent
+  compute/memory floor, which term dominates, the default config's
+  cost-model estimate, and the fraction of the floor it reaches.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -23,8 +38,11 @@ HEADER = ["arch", "shape", "mesh", "bound", "compute_s", "memory_s",
           "collective_s", "step_s", "model_flops_frac", "peak_GiB",
           "lever"]
 
+SOL_HEADER = ["family", "bucket", "bound", "sol_compute_s", "sol_memory_s",
+              "sol_s", "default_cfg_s", "sol_frac", "lever"]
 
-def rows(dirpath="experiments/dryrun"):
+
+def rows(dirpath):
     for f in sorted(Path(dirpath).glob("*.json")):
         d = json.loads(f.read_text())
         r = d["roofline"]
@@ -42,10 +60,60 @@ def rows(dirpath="experiments/dryrun"):
         }
 
 
-def main():
-    print(",".join(HEADER))
-    for r in rows():
-        print(",".join(str(r[h]) for h in HEADER))
+def sol_rows():
+    """One row per (family, shape bucket) from the family registry's
+    ``sol_bound`` hooks — the exact bounds the tuner's ``--sol``
+    early-stop compares against."""
+    from repro.core.families import all_families
+    from repro.core.tuning import shape_bucket
+
+    for fam in sorted(all_families(), key=lambda f: f.name):
+        if fam.sol_bound is None or fam.example is None:
+            continue
+        cfg, ex_prob = fam.example()
+        probs = [ex_prob] + (fam.sweep_problems()
+                             if fam.sweep_problems else [])
+        seen = set()
+        for prob in probs:
+            bucket = shape_bucket(prob)
+            if bucket in seen:
+                continue
+            seen.add(bucket)
+            sol = fam.sol_bound(prob)
+            est = fam.cost(cfg, prob)
+            bound = "compute" if sol.compute_s >= sol.memory_s \
+                else "memory"
+            yield {
+                "family": fam.name, "bucket": bucket, "bound": bound,
+                "sol_compute_s": f"{sol.compute_s:.6f}",
+                "sol_memory_s": f"{sol.memory_s:.6f}",
+                "sol_s": f"{sol.time_s:.6f}",
+                "default_cfg_s": f"{est.time_s:.6f}",
+                "sol_frac": f"{sol.time_s / est.time_s:.3f}",
+                "lever": LEVERS[bound],
+            }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun",
+                    help="directory of launch dry-run JSONs "
+                         "(python -m repro.launch.dryrun)")
+    args = ap.parse_args(argv)
+
+    dry = list(rows(args.dir))
+    if dry:
+        print(",".join(HEADER))
+        for r in dry:
+            print(",".join(str(r[h]) for h in HEADER))
+    else:
+        print(f"# no dry-run JSONs found under {args.dir} — run "
+              f"`python -m repro.launch.dryrun` first; printing the "
+              f"kernel-family speed-of-light table only")
+
+    print(",".join(SOL_HEADER))
+    for r in sol_rows():
+        print(",".join(str(r[h]) for h in SOL_HEADER))
 
 
 if __name__ == "__main__":

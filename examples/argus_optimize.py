@@ -1,7 +1,7 @@
 """ARGUS fleet tuning: the paper's workflow at production scale.
 
     PYTHONPATH=src python examples/argus_optimize.py --workers 4 \
-        [--async] [--sweep] [--lessons] \
+        [--async] [--sweep] [--lessons] [--sol] [--sol-slack 0.1] \
         [--family gemm --family quant_gemm] [--base-budget 4] \
         [--max-budget 32] [--out-dir .] [--run-kernels]
 
@@ -28,6 +28,15 @@ lesson store (``lessons.json``): workers publish stage-attributed ICRL
 lessons after every item and warm-start their planner from the fleet's
 union before the next, trading strict table reproducibility for
 within-run cross-worker learning.
+
+``--sol`` turns on speed-of-light guidance: every record is stamped with
+``sol_frac`` (best verified estimate as a fraction of the family's
+analytic roofline bound), a job within ``--sol-slack`` of its bound
+stops being refined — its frozen record still ranks and still reaches
+the dispatch table — and a share of the freed iterations is re-granted
+by a deterministic bandit to the buckets still far from their bound.
+The table stays bitwise-identical across workers/sync/async/resume with
+``--sol`` on.
 
 ``--expect-resume`` asserts that a re-invocation ran nothing (CI uses it
 to gate journal resumability); ``--fresh`` discards a stale journal.
@@ -60,6 +69,14 @@ def main(argv=None):
                     help="share stage-attributed ICRL lessons across "
                          "workers via lessons.json (trades strict "
                          "table reproducibility for in-run learning)")
+    ap.add_argument("--sol", action="store_true",
+                    help="speed-of-light guidance: stop refining jobs "
+                         "within --sol-slack of their family's analytic "
+                         "bound and re-grant freed iterations to the "
+                         "buckets still far from theirs")
+    ap.add_argument("--sol-slack", type=float, default=0.1,
+                    help="relative slack on the SoL bound before a job "
+                         "stops (0.1 = within 10%%)")
     ap.add_argument("--base-budget", type=int, default=4,
                     help="rung-0 iterations for every job")
     ap.add_argument("--max-budget", type=int, default=32,
@@ -87,12 +104,14 @@ def main(argv=None):
           f"budgets {args.base_budget}..{args.max_budget} (eta "
           f"{args.eta}), "
           f"{'async' if args.async_mode else 'sync'} promotion"
-          f"{', shared lessons' if args.lessons else ''}")
+          f"{', shared lessons' if args.lessons else ''}"
+          f"{f', sol slack {args.sol_slack}' if args.sol else ''}")
     report = run_fleet(jobs, workers=args.workers, out_dir=args.out_dir,
                        base_budget=args.base_budget,
                        max_budget=args.max_budget, eta=args.eta,
                        run_kernels=args.run_kernels, fresh=args.fresh,
                        async_mode=args.async_mode, lessons=args.lessons,
+                       sol=args.sol, sol_slack=args.sol_slack,
                        log=print)
 
     print(f"\nfleet done: {report.rungs} rungs, {report.ran} items ran, "
@@ -101,9 +120,12 @@ def main(argv=None):
     for family, buckets in sorted(report.table.entries.items()):
         for bucket, e in sorted(buckets.items()):
             p = e["provenance"]
+            frac = p.get("sol_frac")
+            sol_s = f", {frac:.2f} of SoL" if frac is not None else ""
             print(f"  {family:18s} {e['est_ms']:9.3f} ms "
                   f"({e['speedup']:.2f}x, {p['rungs']} rungs, "
-                  f"budget {p['budget']}, {p['repairs']} repairs)")
+                  f"budget {p['budget']}, {p['repairs']} repairs"
+                  f"{sol_s})")
     s = report.stats
     if s:
         print(f"verify (aggregated across workers, this run): "

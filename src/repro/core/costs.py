@@ -70,3 +70,18 @@ class CostEstimate:
 
     def tflops(self) -> float:
         return self.flops / self.time_s / 1e12 if self.time_s else 0.0
+
+
+def sol_estimate(flops: float, hbm_bytes: float,
+                 dtype: str = "bf16") -> CostEstimate:
+    """Speed-of-light :class:`CostEstimate`: the config-independent roofline
+    floor for a problem.  ``flops`` is the ideal algorithmic work and
+    ``hbm_bytes`` the minimal one-pass HBM traffic (each operand read once,
+    each output written once) — no utilization, occupancy, stagger, or
+    revisit derates, so for any real config the family ``cost`` hook's
+    ``time_s`` is ≥ this estimate's.  Family ``sol_bound`` hooks build on
+    this; the tuner early-stops a job once its verified estimate is within
+    ``--sol-slack`` of ``sol_estimate(...).time_s``."""
+    return CostEstimate(compute_s=flops / peak_flops(dtype),
+                        memory_s=hbm_bytes / HBM_BW,
+                        flops=flops, hbm_bytes=hbm_bytes)

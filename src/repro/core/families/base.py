@@ -186,6 +186,14 @@ class KernelFamily:
     # repro.core.tuning.jobs.enumerate_jobs(sweep=True); the example
     # problem is always swept too, so the grid only needs the neighbors.
     sweep_problems: Optional[Callable] = None
+    # (prob) -> costs.CostEstimate: the analytic speed-of-light bound —
+    # ideal flops over peak_flops(dtype) vs minimal one-pass HBM traffic
+    # over HBM_BW (repro.core.costs.sol_estimate), independent of any
+    # config.  A genuine lower bound on the family ``cost`` hook: the
+    # fleet tuner early-stops a job's promotion chain once its verified
+    # estimate is within --sol-slack of this, and benchmarks/roofline.py
+    # reuses it so its rows and the tuner agree on the ceiling.
+    sol_bound: Optional[Callable] = None
 
     def verify(self, cfg, prob, *, inject_bug: Optional[str] = None
                ) -> VerifyResult:

@@ -12,7 +12,8 @@ from dataclasses import dataclass, replace
 from typing import Optional
 
 from .. import dsl
-from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
+from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy,
+                     sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, LANE, StructuralIssue, cdiv,
                           check_alignment, check_masking, check_vmem)
 from ..tags import make_tag
@@ -201,6 +202,18 @@ def flash_attention_cost(cfg: FlashAttentionConfig,
         flops=flops, hbm_bytes=q_bytes + kv_bytes + o_bytes)
 
 
+def flash_attention_sol(prob: FlashAttentionProblem) -> CostEstimate:
+    """Speed of light: the causal-skipped score/PV flop count at full MXU
+    rate vs Q, K, V, O each crossing HBM exactly once (online softmax
+    keeps running stats in VMEM, so no score tensor ever hits HBM)."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    SQ, SKV, D = prob.seq_q, prob.seq_kv, prob.head_dim
+    flops = 4.0 * B * H * SQ * SKV * D * (0.5 if prob.causal else 1.0)
+    traffic = 2 * B * H * SQ * D * sz + 2 * B * HK * SKV * D * sz
+    return sol_estimate(flops, traffic)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _block_steps(cfg: FlashAttentionConfig, prob):
@@ -322,6 +335,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=flash_attention_sol,
 ))
 
 

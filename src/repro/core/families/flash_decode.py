@@ -12,7 +12,8 @@ from dataclasses import dataclass
 from typing import Optional
 
 from .. import dsl
-from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, occupancy
+from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, occupancy,
+                     sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, StructuralIssue, cdiv,
                           check_alignment, check_vmem)
 from ..tags import Expr, make_tag
@@ -153,6 +154,18 @@ def flash_decode_cost(cfg: FlashDecodeConfig,
         flops=flops, hbm_bytes=kv_bytes + part_bytes)
 
 
+def flash_decode_sol(prob: FlashDecodeProblem) -> CostEstimate:
+    """Speed of light: decode is one pass over the KV cache plus the
+    (tiny) query/output vectors — the partial-combine traffic is a config
+    artifact and does not appear in the floor."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    S, D = prob.seq_kv, prob.head_dim
+    flops = 4.0 * B * H * S * D
+    traffic = 2 * B * HK * S * D * sz + 2 * B * H * D * sz
+    return sol_estimate(flops, traffic)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _split_steps(cfg: FlashDecodeConfig, prob: FlashDecodeProblem):
@@ -245,6 +258,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=flash_decode_sol,
 ))
 
 

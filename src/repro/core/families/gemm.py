@@ -13,7 +13,7 @@ from typing import Optional
 
 from .. import dsl
 from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, STAGGER_DERATE,
-                     mxu_util, occupancy)
+                     mxu_util, occupancy, sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, make_tag
@@ -163,6 +163,15 @@ def gemm_cost(cfg: GemmConfig, prob: GemmProblem) -> CostEstimate:
         flops=flops, hbm_bytes=a_bytes + b_bytes + c_bytes)
 
 
+def gemm_sol(prob: GemmProblem) -> CostEstimate:
+    """Speed of light: ideal 2mnk MACs at full MXU rate vs each operand
+    streamed from HBM exactly once (no block revisits, no partials)."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    m, n, k = prob.m, prob.n, prob.k
+    return sol_estimate(2.0 * m * n * k,
+                        (m * k + k * n + m * n) * sz)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _block_steps(cfg: GemmConfig, prob: GemmProblem):
@@ -293,6 +302,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=gemm_sol,
 ))
 
 

@@ -13,7 +13,8 @@ from dataclasses import dataclass, replace
 from typing import Optional
 
 from .. import dsl
-from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
+from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy,
+                     sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, app, make_tag
@@ -181,6 +182,17 @@ def moe_cost(cfg: MoEConfig, prob: MoEProblem) -> CostEstimate:
         flops=flops, hbm_bytes=x_bytes + w_bytes + y_bytes)
 
 
+def moe_sol(prob: MoEProblem) -> CostEstimate:
+    """Speed of light: the grouped-GEMM flop count (gate+up+down) at full
+    MXU rate vs routed activations in/out once and every expert's three
+    weight matrices streamed exactly once."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    R, DM, DF, E = prob.routed_rows, prob.d_model, prob.d_ff, prob.n_experts
+    flops = 6.0 * R * DM * DF
+    traffic = 2 * R * DM * sz + 3 * E * DM * DF * sz
+    return sol_estimate(flops, traffic)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _block_steps(cfg: MoEConfig, prob: MoEProblem):
@@ -298,6 +310,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=moe_sol,
 ))
 
 

@@ -38,7 +38,7 @@ from typing import Optional
 
 from .. import dsl
 from ..costs import (CostEstimate, HBM_BW, PAGE_GATHER_DERATE, PEAK_FLOPS,
-                     occupancy)
+                     occupancy, sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, StructuralIssue, cdiv,
                           check_alignment, check_vmem)
 from ..tags import Expr, app, make_tag
@@ -253,6 +253,18 @@ def paged_attention_cost(cfg: PagedAttentionConfig,
         flops=flops, hbm_bytes=kv_bytes + table_bytes)
 
 
+def paged_attention_sol(prob: PagedAttentionProblem) -> CostEstimate:
+    """Speed of light: one dense-rate pass over the live KV pages plus
+    the block table — the gather derate is a config/page-size artifact
+    and does not appear in the floor."""
+    sz = DTYPE_BYTES.get(prob.dtype, 2)
+    B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
+    S, D = prob.seq_kv, prob.head_dim
+    flops = 4.0 * B * H * S * D
+    traffic = 2 * B * HK * S * D * sz + B * prob.pages_per_seq * 4
+    return sol_estimate(flops, traffic)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _page_block_steps(cfg: PagedAttentionConfig,
@@ -380,6 +392,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=paged_attention_sol,
 ))
 
 

@@ -30,7 +30,7 @@ from typing import Optional
 
 from .. import dsl
 from ..costs import (CostEstimate, HBM_BW, mxu_util, occupancy,
-                     peak_flops)
+                     peak_flops, sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, make_tag
@@ -204,6 +204,18 @@ def quant_gemm_cost(cfg: QuantGemmConfig,
         flops=flops, hbm_bytes=total)
 
 
+def quant_gemm_sol(prob: QuantGemmProblem) -> CostEstimate:
+    """Speed of light: 2mnk MACs at the narrow-dtype MXU rate vs a single
+    pass over the narrow operands, the f32 scale streams, and the bf16
+    output."""
+    sz = DTYPE_BYTES.get(prob.dtype, 1)
+    m, n, k = prob.m, prob.n, prob.k
+    traffic = ((m * k + k * n) * sz
+               + (m + n) * prob.n_groups * 4
+               + m * n * 2)
+    return sol_estimate(2.0 * m * n * k, traffic, dtype=prob.dtype)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _block_steps(cfg: QuantGemmConfig, prob: QuantGemmProblem):
@@ -336,6 +348,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=quant_gemm_sol,
 ))
 
 

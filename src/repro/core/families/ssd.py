@@ -11,7 +11,8 @@ from dataclasses import dataclass
 from typing import Optional
 
 from .. import dsl
-from ..costs import CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy
+from ..costs import (CostEstimate, HBM_BW, PEAK_FLOPS, mxu_util, occupancy,
+                     sol_estimate)
 from ..kernelspec import (DTYPE_BYTES, cdiv, check_alignment, check_masking,
                           check_vmem)
 from ..tags import Expr, make_tag
@@ -136,6 +137,27 @@ def ssd_cost(cfg: SSDConfig, prob: SSDProblem) -> CostEstimate:
         flops=flops, hbm_bytes=io + state_io)
 
 
+def ssd_sol(prob: SSDProblem) -> CostEstimate:
+    """Speed of light: the algorithmic flop count at the *best* reachable
+    chunk size (the intra/inter trade-off minimized over the tunable
+    chunk grid) at full MXU rate, vs the operand streams crossing HBM
+    once — the carried-state spill is a config artifact and is excluded."""
+    sz = DTYPE_BYTES.get(prob.dtype, 4)
+    BH, S, P, N = prob.batch_heads, prob.seq, prob.head_dim, prob.d_state
+
+    def chunk_flops(q: int) -> float:
+        nc = cdiv(S, q)
+        intra = BH * S * q * (2 * N + 2 * P)
+        inter = BH * S * (4 * N * P) + BH * nc * 2 * N * P
+        return float(intra + inter)
+
+    grid = [q for q in (32, 64, 128, 256, 512) if S % q == 0]
+    flops = min(chunk_flops(q) for q in grid) if grid \
+        else chunk_flops(min(S, 128))
+    io = BH * S * (P + 2 * N + 1 + P) * sz
+    return sol_estimate(flops, io)
+
+
 # -- skills -----------------------------------------------------------------
 
 def _chunk_steps(cfg: SSDConfig, prob: SSDProblem):
@@ -222,6 +244,7 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    sol_bound=ssd_sol,
 ))
 
 

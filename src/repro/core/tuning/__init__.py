@@ -24,6 +24,8 @@ _LAZY = {"Journal": ".journal", "JournalMismatch": ".journal",
          "SuccessiveHalving": ".scheduler", "WorkItem": ".scheduler",
          "AsyncSuccessiveHalving": ".scheduler",
          "reconcile_schedule": ".scheduler",
+         "sol_summary": ".scheduler",
+         "SolPolicy": ".bandit", "GapBandit": ".bandit",
          "LessonStore": ".lessons", "LESSONS_NAME": ".lessons",
          "lesson_key": ".lessons",
          "FleetReport": ".pool", "ItemRunner": ".pool",

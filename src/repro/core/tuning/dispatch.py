@@ -54,6 +54,7 @@ SCHEMA_EXAMPLE = {
                     "accepted": 4, "repairs": 0,
                     "verdict_stages": {"ok": 9, "solver": 2,
                                        "structural": 3},
+                    "sol_frac": 0.94,
                 },
             },
         },
@@ -164,13 +165,16 @@ def load(path) -> DispatchTable:
 def build_table(records: Iterable[dict]) -> DispatchTable:
     """Build the table from journal records — the caller passes the
     *reconciled* selection, so sync/async and any worker count feed the
-    same records here: per job keep the highest completed rung; per
-    (family, bucket) keep the best speedup (deterministic job-id
-    tie-break)."""
+    same records here: per job keep the highest completed rung — at equal
+    rung the better speedup (so a bandit-funded extra branch that beat
+    its base record wins the slot); per (family, bucket) keep the best
+    speedup (deterministic job-id tie-break)."""
     per_job: Dict[str, dict] = {}
     for rec in records:
         cur = per_job.get(rec["job"])
-        if cur is None or rec["rung"] > cur["rung"]:
+        if cur is None or rec["rung"] > cur["rung"] or (
+                rec["rung"] == cur["rung"]
+                and rec["speedup"] > cur["speedup"]):
             per_job[rec["job"]] = rec
     entries: Dict[str, Dict[str, dict]] = {}
     for job_id in sorted(per_job):
@@ -193,6 +197,7 @@ def build_table(records: Iterable[dict]) -> DispatchTable:
                 "accepted": rec["accepted"],
                 "repairs": rec["repairs"],
                 "verdict_stages": dict(rec["verdict_stages"]),
+                "sol_frac": rec.get("sol_frac"),
             },
         }
         slot = entries.setdefault(rec["family"], {})

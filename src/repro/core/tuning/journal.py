@@ -11,19 +11,27 @@ continues from the first missing one.
 Record format (one JSON object per line):
 
     {"kind": "result", "item": "<job_id>@r<rung>", "job": "<job_id>",
-     "family": ..., "rung": r, "budget": b, "seed": s,
+     "family": ..., "rung": r, "budget": b, "seed": s, "extra": 0,
      "problem": {...}, "start_cfg": {...},
      "best_cfg": {...}, "cur_cfg": {...},
      "baseline_time_s": ..., "best_time_s": ..., "speedup": ...,
+     "sol_time_s": ..., "sol_frac": ...,
      "iterations_done": n, "cost_units": ..., "solved": true,
      "accepted": n, "repairs": n, "verdict_stages": {stage: count},
      "verify_stats": {...}, "lessons_imported": n, "lessons_reused": n,
      "lessons_published": n, "worker": wid, "wall_s": ...}
 
-``worker``/``wall_s``/``lessons_*`` are provenance of *this* run and are
-excluded from the dispatch table (which must be bitwise-identical across
-worker counts).  Loading tolerates a torn final line — the signature of
-a process killed mid-append — by skipping lines that fail to parse.
+``extra`` > 0 marks a bandit-funded side branch (item id
+``<job_id>@r<rung>+e<n>``) — journaled and table-eligible like any
+record, but never fed back into promotion decisions.  ``sol_time_s`` /
+``sol_frac`` are the family's analytic speed-of-light bound and the
+fraction of it the best verified config reached (``null`` for families
+without a ``sol_bound`` hook); the scheduler's early-stop rule reads
+``sol_frac``.  ``worker``/``wall_s``/``lessons_*`` are provenance of
+*this* run and are excluded from the dispatch table (which must be
+bitwise-identical across worker counts).  Loading tolerates a torn
+final line — the signature of a process killed mid-append — by skipping
+lines that fail to parse.
 """
 from __future__ import annotations
 

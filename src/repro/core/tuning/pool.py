@@ -68,8 +68,9 @@ from .dispatch import DispatchTable, build_table, update_legacy_tuning_cache
 from .jobs import TuningJob, stable_seed
 from .journal import Journal
 from .lessons import LESSONS_NAME, LessonStore
+from .bandit import SolPolicy
 from .scheduler import (AsyncSuccessiveHalving, SuccessiveHalving,
-                        WorkItem, reconcile_schedule)
+                        WorkItem, reconcile_schedule, sol_summary)
 
 JOURNAL_NAME = "fleet_journal.jsonl"
 TABLE_NAME = "dispatch_table.json"
@@ -89,11 +90,14 @@ _LESSON_COUNTERS = ("lessons_imported", "lessons_reused",
 def fleet_fingerprint(jobs: List[TuningJob], *, base_budget: int,
                       max_budget: int, eta: int,
                       run_kernels: bool = False,
-                      lessons: bool = False) -> str:
+                      lessons: bool = False,
+                      sol_slack: Optional[float] = None,
+                      sol_realloc: Optional[float] = None) -> str:
     """Content hash pinning (jobs, seeds, budget schedule, and the flags
     that change item outcomes) — what makes a journal safely resumable.
     ``run_kernels`` is included because it changes verdicts; ``lessons``
-    because imported lessons steer the planner's trajectories.  Worker
+    because imported lessons steer the planner's trajectories; the SoL
+    policy knobs because they change which items exist at all.  Worker
     count and sync-vs-async scheduling are deliberately excluded: an
     item's result does not depend on either, so a run killed at
     ``--workers 4 --async`` may resume at ``--workers 1`` sync."""
@@ -107,6 +111,9 @@ def fleet_fingerprint(jobs: List[TuningJob], *, base_budget: int,
     if lessons:
         # only stamped when on, so pre-existing journals stay valid
         desc["lessons"] = True
+    if sol_slack is not None:
+        # likewise only stamped when SoL guidance is on
+        desc["sol"] = {"slack": sol_slack, "realloc": sol_realloc}
     blob = json.dumps(desc, sort_keys=True)
     return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
 
@@ -122,6 +129,7 @@ def _to_wire(item: WorkItem) -> dict:
                  "iterations_done")}
     return {"item": item.item_id, "job": j.job_id, "family": j.family,
             "rung": item.rung, "budget": item.budget, "seed": j.seed,
+            "extra": item.extra,
             "problem": dataclasses.asdict(j.problem),
             "start_cfg": dataclasses.asdict(j.start_cfg),
             "checkpoint": ckpt}
@@ -171,14 +179,18 @@ class ItemRunner:
             lesson_stats["lessons_reused"] = counts["reused"]
         t0 = time.perf_counter()
         st = KernelState(wire["family"], start_cfg, prob).refresh()
+        # extra side-branches fork their own RNG streams off the base
+        # rung's; extra == 0 reproduces the legacy streams byte-exactly
+        rung_key = (f"{wire['rung']}+e{wire['extra']}"
+                    if wire.get("extra") else wire["rung"])
         res = optimize_kernel(
             st, planner=Planner(params),
             selector=Selector(
                 temperature=self.temperature,
-                seed=stable_seed(wire["seed"], wire["rung"], "selector")),
+                seed=stable_seed(wire["seed"], rung_key, "selector")),
             lowering=LoweringAgent(
                 fault_model=False,
-                seed=stable_seed(wire["seed"], wire["rung"], "lowering")),
+                seed=stable_seed(wire["seed"], rung_key, "lowering")),
             validator=Validator(run_kernels=self.run_kernels,
                                 engine=self.engine),
             iterations=wire["budget"], checkpoint=ckpt)
@@ -192,16 +204,27 @@ class ItemRunner:
         for rec in res.history:
             key = rec.verdict.caught_stage or "ok"
             stages[key] = stages.get(key, 0) + 1
+        # speed-of-light provenance: stamped on every record whose family
+        # declares a bound, whether or not the run is SoL-guided — the
+        # scheduler's stop rule and the roofline report both read it
+        sol_time = sol_frac = None
+        if fam.sol_bound is not None:
+            sol_time = fam.sol_bound(prob).time_s
+            if res.best_time_s:
+                sol_frac = sol_time / res.best_time_s
         return {
             "kind": "result", "item": wire["item"], "job": wire["job"],
             "family": wire["family"], "rung": wire["rung"],
             "budget": wire["budget"], "seed": wire["seed"],
+            "extra": wire.get("extra", 0),
             "problem": wire["problem"], "start_cfg": wire["start_cfg"],
             "best_cfg": dataclasses.asdict(res.best_state.cfg),
             "cur_cfg": dataclasses.asdict(res.final_state.cfg),
             "baseline_time_s": res.baseline_time_s,
             "best_time_s": res.best_time_s,
             "speedup": res.speedup,
+            "sol_time_s": sol_time,
+            "sol_frac": sol_frac,
             "iterations_done": res.iterations_done,
             "cost_units": res.cost_units,
             "solved": res.solved,
@@ -336,6 +359,9 @@ class FleetReport:
     skipped: int = 0
     rungs: int = 0
     stats: Dict[str, int] = field(default_factory=dict)
+    # SoL-guidance summary (empty unless sol=True): jobs stopped at the
+    # floor with their sol_frac, iterations freed, iterations re-granted
+    sol: Dict = field(default_factory=dict)
     # shared-lesson traffic this run (all zero unless lessons=True):
     # entries imported into planners, the cross-family subset of those,
     # and entries newly published to the store
@@ -347,7 +373,8 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
               out_dir=".", base_budget: int = 4, max_budget: int = 32,
               eta: int = 2, run_kernels: bool = False,
               fresh: bool = False, async_mode: bool = False,
-              lessons: bool = False,
+              lessons: bool = False, sol: bool = False,
+              sol_slack: float = 0.1, sol_realloc: float = 0.25,
               log: Optional[Callable] = None) -> FleetReport:
     """Orchestrate the full successive-halving tune of ``jobs``.
 
@@ -358,13 +385,20 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
     budgets, flags) resumes from the journal; items already journaled
     are *not* re-run.  ``async_mode`` promotes rung-free (ASHA) and
     reconciles afterwards; the table is built from the reconciled
-    synchronous selection in both modes."""
+    synchronous selection in both modes.  ``sol`` turns on speed-of-
+    light guidance: jobs within ``sol_slack`` of their family's analytic
+    bound stop promoting, and ``sol_realloc`` of the freed iterations
+    come back as bandit-granted extras on the remaining buckets."""
     log = log or (lambda msg: None)
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     fp = fleet_fingerprint(jobs, base_budget=base_budget,
                            max_budget=max_budget, eta=eta,
-                           run_kernels=run_kernels, lessons=lessons)
+                           run_kernels=run_kernels, lessons=lessons,
+                           sol_slack=sol_slack if sol else None,
+                           sol_realloc=sol_realloc if sol else None)
+    policy = SolPolicy(slack=sol_slack, realloc=sol_realloc,
+                       seed=fp) if sol else None
     journal = Journal(out / JOURNAL_NAME)
     done = journal.start(fp, fresh=fresh)
     if done:
@@ -402,22 +436,23 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
         if async_mode:
             _run_async(jobs, report, done, pool, runner, finish, recall,
                        base_budget=base_budget, max_budget=max_budget,
-                       eta=eta, log=log)
+                       eta=eta, sol=policy, log=log)
         else:
             _run_sync(jobs, report, done, pool, runner, finish, recall,
                       base_budget=base_budget, max_budget=max_budget,
-                      eta=eta, log=log)
+                      eta=eta, sol=policy, log=log)
 
         # Reconciliation: replay the synchronous schedule over this
         # run's records and top up whatever it still needs — from the
         # journal where possible, by running otherwise.  A no-op after
-        # a sync run, the determinism pass after an async one.  The
-        # table is built from exactly the reconciled selection, never
-        # from speculative extras.
+        # a sync run, the determinism pass after an async one (with
+        # ``sol`` that includes the bandit's extra grants, which async
+        # never issues itself).  The table is built from exactly the
+        # reconciled selection, never from speculative extras.
         while True:
             selected, missing = reconcile_schedule(
                 jobs, report.records, base_budget=base_budget,
-                max_budget=max_budget, eta=eta)
+                max_budget=max_budget, eta=eta, sol=policy)
             if not missing:
                 break
             todo = []
@@ -443,6 +478,14 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
                            default=-1)
     report.stats = merge_stats(run_stats)
     report.wall_s = time.perf_counter() - t0
+    if policy is not None:
+        report.sol = sol_summary(jobs, report.records,
+                                 base_budget=base_budget,
+                                 max_budget=max_budget, eta=eta,
+                                 sol=policy)
+        log(f"sol: {len(report.sol['stopped'])} jobs stopped at the "
+            f"floor, {report.sol['freed_iterations']} iterations freed, "
+            f"{report.sol['granted_iterations']} re-granted")
     report.table = build_table(selected.values())
     report.table.save(out / TABLE_NAME)
     update_legacy_tuning_cache(out / LEGACY_CACHE_NAME, report.table)
@@ -450,10 +493,12 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
 
 
 def _run_sync(jobs, report, done, pool, runner, finish, recall, *,
-              base_budget, max_budget, eta, log) -> None:
-    """Synchronous rungs: run each rung to completion, then promote."""
+              base_budget, max_budget, eta, sol=None, log) -> None:
+    """Synchronous rungs: run each rung to completion, then promote.
+    Only base items feed promotion — bandit extras run in the same
+    batches but their records go straight to the journal/table."""
     sched = SuccessiveHalving(jobs, base_budget=base_budget,
-                              max_budget=max_budget, eta=eta)
+                              max_budget=max_budget, eta=eta, sol=sol)
     items = sched.first_rung()
     while items:
         cached = [it for it in items if it.item_id in done]
@@ -470,19 +515,21 @@ def _run_sync(jobs, report, done, pool, runner, finish, recall, *,
             for w in wires:
                 finish(runner.run(w))
         rung_records = {r["job"]: r for r in
-                        (report.records[it.item_id] for it in items)}
+                        (report.records[it.item_id] for it in items
+                         if not it.extra)}
         items = sched.next_rung(rung_records)
 
 
 def _run_async(jobs, report, done, pool, runner, finish, recall, *,
-               base_budget, max_budget, eta, log) -> None:
+               base_budget, max_budget, eta, sol=None, log) -> None:
     """Rung-free ASHA: dispatch promotions the moment their rank
     justifies them.  Journaled items feed the scheduler as instant
     results; everything else streams through the pool (or runs FIFO
     serially).  No barrier anywhere — a straggler delays only its own
     chain."""
     asched = AsyncSuccessiveHalving(jobs, base_budget=base_budget,
-                                    max_budget=max_budget, eta=eta)
+                                    max_budget=max_budget, eta=eta,
+                                    sol=sol)
     serial_q: deque = deque()     # wires awaiting the in-process runner
     replayed: deque = deque()     # journal records awaiting on_result
 

@@ -219,11 +219,18 @@ class _Canon:
     point is erasing them), so within each expression terms are visited
     in a name-free structural order — (coefficient, atom shape) — not in
     ``Expr.terms``' name-sorted storage order.  Same-shaped variables at
-    the same coefficient still tie and fall back to name order; such a
-    tie canonicalizing apart costs a cache miss, never a wrong answer."""
+    the same coefficient are further ranked by their *global occurrence
+    signature* (:func:`_occurrence_signatures`): the sorted tuple of
+    name-free paths at which the variable appears anywhere in the key.
+    Congruent keys assign corresponding variables identical signatures,
+    so a tie that is broken at all is broken the same way on both sides;
+    variables whose signatures also tie are genuinely interchangeable
+    (swapping them is an automorphism of the key), so the residual
+    name-order fallback cannot canonicalize congruent keys apart."""
 
-    def __init__(self):
+    def __init__(self, sigs: Optional[Dict["Var", tuple]] = None):
         self._map: Dict[Var, Var] = {}
+        self._sigs: Dict[Var, tuple] = sigs or {}
 
     def var(self, v: Var) -> Var:
         c = self._map.get(v)
@@ -259,10 +266,22 @@ class _Canon:
             return AppAtom(a.name, self.expr(a.inner), a.extent)
         return a
 
+    def _sig(self, a) -> tuple:
+        """Tie-break rank of an atom: the sorted signatures of every
+        variable inside it (name-free — congruent keys rank congruent
+        atoms identically)."""
+        if isinstance(a, Var):
+            return (self._sigs.get(a, ()),)
+        if isinstance(a, (OpAtom, AppAtom)):
+            return tuple(sorted(s for at, _ in a.inner.terms
+                                for s in self._sig(at)))
+        return ()
+
     def expr(self, e: Expr) -> Expr:
         terms: Dict[object, int] = {}
         for a, c in sorted(e.terms,
-                           key=lambda ac: (ac[1], self._shape(ac[0]))):
+                           key=lambda ac: (ac[1], self._shape(ac[0]),
+                                           self._sig(ac[0]))):
             ca = self.atom(a)
             terms[ca] = terms.get(ca, 0) + c
         return Expr(terms, e.const)
@@ -277,6 +296,40 @@ class _Canon:
         return item
 
 
+def _occurrence_signatures(key: tuple) -> Dict[Var, tuple]:
+    """Name-free global signature per variable: the sorted tuple of
+    paths at which it occurs anywhere in ``key``.  Every path element is
+    a ``(tag, ...)`` tuple (tuple index, term coefficient + expression
+    constant, op kind, table name) so signatures compare without ever
+    mixing types — and never mention a variable name, so congruent keys
+    assign corresponding variables equal signatures."""
+    sigs: Dict[Var, List[tuple]] = {}
+
+    def visit_expr(e: Expr, path: tuple) -> None:
+        for a, c in e.terms:
+            visit_atom(a, path + (("term", c, e.const),))
+
+    def visit_atom(a, path: tuple) -> None:
+        if isinstance(a, Var):
+            sigs.setdefault(a, []).append(path + (("var", a.extent),))
+        elif isinstance(a, OpAtom):
+            visit_expr(a.inner, path + (("op", a.kind, a.k),))
+        elif isinstance(a, AppAtom):
+            visit_expr(a.inner, path + (("app", a.name, a.extent),))
+
+    def visit(item, path: tuple) -> None:
+        if isinstance(item, Expr):
+            visit_expr(item, path)
+        elif isinstance(item, (Var, OpAtom, AppAtom)):
+            visit_atom(item, path)
+        elif isinstance(item, tuple):
+            for i, x in enumerate(item):
+                visit(x, path + (("idx", i),))
+
+    visit(key, ())
+    return {v: tuple(sorted(occ)) for v, occ in sigs.items()}
+
+
 def canonical_key(key: tuple) -> tuple:
     """Alpha-rename a constraint key into its canonical form.
 
@@ -285,10 +338,13 @@ def canonical_key(key: tuple) -> tuple:
     names — so two keys with equal canonical forms are obligations of the
     same theorem.  This is what shares proofs across configs whose traces
     number their locals differently, across assertion reorderings, and
-    across families (sound but not complete: congruent keys whose term
-    *sort order* differs under renaming may still canonicalize apart,
-    which costs a cache miss, never a wrong answer)."""
-    return _Canon().walk(key)
+    across families.  Within-expression term order is name-free —
+    (coefficient, atom shape), with ties resolved by each variable's
+    global occurrence signature — so congruent keys that merely permute
+    same-shaped variables (e.g. two grid axes of the same extent with
+    swapped roles elsewhere in the key) canonicalize together rather
+    than apart."""
+    return _Canon(_occurrence_signatures(key)).walk(key)
 
 
 # ---------------------------------------------------------------------------

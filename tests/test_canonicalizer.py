@@ -37,6 +37,16 @@ class TestCanonicalKey:
         k2 = ("zero", (Var("z", 4) * 128 + Var("b", 128),))
         assert canonical_key(k1) == canonical_key(k2)
 
+    def test_tied_variables_share_via_global_signature(self):
+        # within i+j the two variables tie on (coefficient, shape) —
+        # only the key's second element tells them apart.  The tie must
+        # be broken by each variable's *global* occurrence signature,
+        # not its name: by-name, these congruent keys canonicalize
+        # apart (the historical cache miss this test pins)
+        i, j = Var("a", 4), Var("b", 4)
+        assert canonical_key(("pair", i + j, i)) \
+            == canonical_key(("pair", i + j, j))
+
     def test_mod_structure_and_tables_survive(self):
         from repro.core.tags import app
         e1 = (Var("g_k", 8) + Var("g_i", 4)) % 8 + app("tbl", Var("g_i", 4),
@@ -119,6 +129,26 @@ def _mini_stagger_gemm(axes=("i", "j", "k"), tensors=("A", "B", "C"),
     return p
 
 
+def _diag_shift(axes=("i", "j")) -> dsl.TileProgram:
+    """Diagonal-staggered load: block (i, j) reads row-block (i+j)%4.
+    The staggered index *ties* the two axes — same coefficient, same
+    extent — while the injectivity obligation pins only the first, so
+    within that one constraint key the tie is broken by context
+    elsewhere in the key, never by the variables' shapes alone."""
+    p = dsl.TileProgram(f"diag_{axes[0]}{axes[1]}")
+    i = p.add_grid(axes[0], 4)
+    j = p.add_grid(axes[1], 4)
+    p.tensor("A", (512, 512))
+    p.tensor("C", (512, 512), kind="output")
+    diag = (Expr.of(i) + j) % 4
+    a = p.load("A", (diag * 128, j * 128), (128, 128))
+    p.store("C", a, (i * 128, j * 128))
+    p.assert_injective(diag, (axes[0],))
+    p.assert_disjoint_writes("C")
+    p.assert_coverage("C")
+    return p
+
+
 def _statuses(report):
     return sorted(r.status.value for _, r in report.results)
 
@@ -140,6 +170,26 @@ class TestCongruentPrograms:
             "congruent renamed program must re-discharge nothing"
         assert cache.canonical_hits > 0, \
             "the sharing must come from canonical keys, not raw ones"
+
+    def test_tied_axes_with_swapped_names_rediscarge_nothing(self):
+        # the same diagonal-stagger program with the two (equal-extent)
+        # axis names swapped: a pure renaming that flips the name-sorted
+        # storage order of the tied pair inside (i+j)%4.  The former
+        # by-name tie-break canonicalized the injectivity obligation
+        # apart and re-discharged it; the global occurrence signature
+        # must share it
+        cache = ConstraintCache()
+        r1 = Analyzer(_diag_shift(("i", "j")),
+                      discharger=CachingDischarger(cache)).run()
+        misses_cold = cache.misses
+        assert r1.ok and misses_cold > 0
+        r2 = Analyzer(_diag_shift(("j", "i")),
+                      discharger=CachingDischarger(cache)).run()
+        assert r2.ok
+        assert _statuses(r1) == _statuses(r2)
+        assert cache.misses == misses_cold, \
+            "swapped-name tied axes must re-discharge nothing"
+        assert cache.canonical_hits > 0
 
     def test_canonical_warm_cache_persists_across_naming(self, tmp_path):
         path = tmp_path / "constraint_cache.json"

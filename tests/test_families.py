@@ -10,6 +10,7 @@ family's own ``example()``) where bug-friendly shapes are needed —
 e.g. GQA head counts so ``wrong_kv_head`` is expressible, or
 ``stagger_k`` on so ``stagger_mismatch`` is."""
 import dataclasses
+import math
 
 import pytest
 
@@ -152,6 +153,46 @@ class TestRoundTrip:
         assert res.hard_ok, res.render()
         contexts = [c for s in fam.skills for c in s.contexts(cfg, prob)]
         assert contexts, "example exposes no tuning moves"
+
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+class TestSoLBound:
+    """The analytic speed-of-light hook (``KernelFamily.sol_bound``):
+    a config-independent roofline floor — ideal flops at peak MXU rate
+    vs minimal one-pass HBM traffic — that the fleet tuner's ``--sol``
+    early stop compares verified estimates against.  A bound that ever
+    exceeded the cost hook would stop jobs above the floor, so the
+    dominance property below is load-bearing, not cosmetic."""
+
+    @staticmethod
+    def _probs(fam):
+        _cfg, prob = fam.example()
+        probs = [prob]
+        if fam.sweep_problems is not None:
+            probs += fam.sweep_problems()
+        return probs
+
+    def test_bound_positive_and_finite(self, name):
+        fam = get_family(name)
+        assert fam.sol_bound is not None, \
+            f"{name}: registered without a sol_bound hook"
+        for prob in self._probs(fam):
+            est = fam.sol_bound(prob)
+            assert math.isfinite(est.compute_s) \
+                and math.isfinite(est.memory_s), (name, prob)
+            assert est.compute_s > 0 and est.memory_s > 0, (name, prob)
+            assert est.flops > 0 and est.hbm_bytes > 0, (name, prob)
+            assert est.time_s == max(est.compute_s, est.memory_s)
+
+    def test_bound_never_exceeds_cost_hook(self, name):
+        fam = get_family(name)
+        for cfg in (fam.config_cls(), fam.example()[0]):
+            for prob in self._probs(fam):
+                sol = fam.sol_bound(prob).time_s
+                cost = fam.cost(cfg, prob).time_s
+                assert sol <= cost * (1 + 1e-9), \
+                    (f"{name}: sol bound {sol:.3e}s above the cost "
+                     f"hook's {cost:.3e}s for {cfg} on {prob}")
 
 
 def test_registry_is_complete_and_consistent():

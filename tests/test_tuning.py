@@ -17,9 +17,10 @@ from repro.core.families import all_families, get_family
 from repro.core.harness import (KernelState, OptimizeCheckpoint, Planner,
                                 Selector, Validator, optimize_kernel)
 from repro.core.tuning import (AsyncSuccessiveHalving, DispatchTable,
-                               Journal, JournalMismatch,
-                               SuccessiveHalving, enumerate_jobs,
-                               make_job, reconcile_schedule, run_fleet,
+                               GapBandit, Journal, JournalMismatch,
+                               SolPolicy, SuccessiveHalving,
+                               enumerate_jobs, make_job,
+                               reconcile_schedule, run_fleet,
                                shape_bucket, stable_seed)
 from repro.core.tuning import dispatch as dispatch_mod
 from repro.core.tuning.dispatch import SCHEMA_EXAMPLE
@@ -252,6 +253,211 @@ class TestReconcileSchedule:
         assert set(selected) == {it.item_id for it in rung0}
         assert all(it.rung == 1 and it.checkpoint is not None
                    for it in missing)
+
+
+# ---------------------------------------------------------------------------
+# Speed-of-light guidance: early stop, bandit, reconciliation with grants
+# ---------------------------------------------------------------------------
+
+def _srec(item, speedup, sol_frac):
+    rec = _rec(item, speedup)
+    rec.update({"budget": item.budget, "sol_frac": sol_frac})
+    return rec
+
+
+class TestSolPolicy:
+    def test_stop_rule_threshold(self):
+        pol = SolPolicy(slack=0.1)
+        assert pol.stops({"sol_frac": 1.0})
+        assert pol.stops({"sol_frac": 0.91})     # 0.91 * 1.1 >= 1
+        assert not pol.stops({"sol_frac": 0.90})
+        assert not pol.stops({"sol_frac": None})
+        assert not pol.stops({})                 # pre-SoL journal record
+
+    def test_bandit_is_deterministic_and_rotates(self):
+        def drive(seed):
+            b = GapBandit(SolPolicy(seed=seed))
+            b.observe("a", 0.30, 2)
+            b.observe("b", 0.28, 2)
+            return [b.grant(("a", "b")) for _ in range(4)]
+
+        assert drive("fp") == drive("fp"), \
+            "same fingerprint must replay the same grant sequence"
+        grants = drive("fp")
+        assert set(grants) == {"a", "b"}, \
+            "pull-count decay must rotate the budget across arms"
+        # unobserved arms tie on score: the fingerprint-salted hash must
+        # still order them deterministically
+        c1 = GapBandit(SolPolicy(seed="x")).grant(("p", "q"))
+        c2 = GapBandit(SolPolicy(seed="x")).grant(("p", "q"))
+        assert c1 == c2
+
+    def test_extras_never_feed_back(self):
+        b = GapBandit(SolPolicy(seed="fp"))
+        b.observe("a", 0.5, 0)       # zero-budget observation: ignored
+        assert b._obs == {}
+
+
+class TestSolScheduler:
+    def test_no_stops_means_the_plain_schedule(self):
+        """With every record far from its bound the SoL scheduler must
+        issue exactly the plain scheduler's items."""
+        jobs = _fake_jobs(4)
+        plain = SuccessiveHalving(jobs, base_budget=2, max_budget=8)
+        sol = SuccessiveHalving(jobs, base_budget=2, max_budget=8,
+                                sol=SolPolicy(seed="fp"))
+        pi, si = plain.first_rung(), sol.first_rung()
+        while pi or si:
+            assert [it.item_id for it in pi] == [it.item_id for it in si]
+            recs_p = {it.job.job_id: _srec(it, 1.0 + it.job.priority, 0.2)
+                      for it in pi}
+            pi = plain.next_rung(recs_p)
+            si = sol.next_rung(recs_p)
+        assert sol.stopped == {} and sol.freed_iterations == 0
+
+    def test_stopped_job_occupies_its_slot_and_frees_the_budget(self):
+        jobs = _fake_jobs(4)
+        sched = SuccessiveHalving(jobs, base_budget=2, max_budget=8,
+                                  sol=SolPolicy(slack=0.1, seed="fp"))
+        rung0 = sched.first_rung()
+        a, b, c, d = sorted(rung0, key=lambda it: it.job.job_id)
+        # a is at the floor AND ranks first: it wins a rung-1 slot but
+        # must not run — only b promotes, a's slot budget is freed
+        recs = {a.job.job_id: _srec(a, 4.0, 1.0),
+                b.job.job_id: _srec(b, 3.0, 0.5),
+                c.job.job_id: _srec(c, 2.0, 0.4),
+                d.job.job_id: _srec(d, 1.5, 0.3)}
+        rung1 = sched.next_rung({j: recs[j] for j in recs})
+        assert [it.job.job_id for it in rung1] == [b.job.job_id]
+        assert a.job.job_id in sched.stopped
+        assert sched.freed_iterations == 4       # a's rung-1 budget
+        # rung 2: a's frozen 4.0 still outranks b's 3.5 — keep=1 keeps
+        # the frozen job, nothing promotes, the whole rung budget frees
+        # and the bandit re-grants chunks to the cut-but-unstopped jobs
+        items = sched.next_rung(
+            {b.job.job_id: _srec(rung1[0], 3.5, 0.6)})
+        assert sched.freed_iterations == 4 + 8
+        assert all(it.extra for it in items), \
+            "no live promotion — only bandit extras may run"
+        assert sched.granted_iterations == sum(it.budget for it in items)
+        assert sched.granted_iterations <= 12 * 0.25
+        for it in items:
+            assert it.job.job_id not in sched.stopped
+            assert it.item_id.endswith(f"+e{it.extra}")
+            assert it.checkpoint is not None \
+                and it.rung == it.checkpoint["rung"]
+
+    def test_frozen_rank_never_changes_who_else_promotes(self):
+        """Promotions among non-stopped jobs must match the plain
+        schedule exactly — the frozen record occupies its slot with a
+        lower-bound score, so no other job's fate changes."""
+        jobs = _fake_jobs(6)
+        plain = SuccessiveHalving(jobs, base_budget=2, max_budget=8)
+        sol = SuccessiveHalving(jobs, base_budget=2, max_budget=8,
+                                sol=SolPolicy(seed="fp"))
+
+        def recs(items, stopped_frac):
+            return {it.job.job_id: _srec(
+                it, 1.0 + it.job.priority,
+                stopped_frac if it is items[0] else 0.2)
+                for it in items}
+
+        pi, si = plain.first_rung(), sol.first_rung()
+        # stop the top-ranked job at rung 0 in the sol run only
+        p_next = plain.next_rung(recs(pi, 0.2))
+        s_next = sol.next_rung(recs(si, 1.0))
+        stopped = {j for j in sol.stopped}
+        assert stopped
+        assert [it.job.job_id for it in p_next
+                if it.job.job_id not in stopped] \
+            == [it.job.job_id for it in s_next if not it.extra]
+
+    def test_reconcile_replays_stops_and_grants(self):
+        """Driving the sol scheduler to completion and reconciling with
+        the same policy must select exactly the driven items — extras
+        included — while the plain reconciliation drops them."""
+        jobs = _fake_jobs(4)
+        pol = SolPolicy(seed="fp")
+        sched = SuccessiveHalving(jobs, base_budget=2, max_budget=8,
+                                  sol=pol)
+        items, records, driven = sched.first_rung(), {}, []
+        fracs = {}
+        while items:
+            driven += [it.item_id for it in items]
+            for it in items:
+                f = fracs.get(it.job.job_id, 0.0) \
+                    + (0.9 if it.job is jobs[0] else 0.25)
+                fracs[it.job.job_id] = f
+                records[it.item_id] = _srec(it, 1.0 + f, min(f, 1.0))
+            items = sched.next_rung(
+                {it.job.job_id: records[it.item_id] for it in items
+                 if not it.extra})
+        assert sched.stopped, "the fast-closing job must hit the floor"
+        assert any("+e" in i for i in driven), \
+            "the drive must exercise bandit extras"
+        selected, missing = reconcile_schedule(
+            jobs, records, base_budget=2, max_budget=8, sol=pol)
+        assert missing == []
+        assert set(selected) == set(driven)
+        plain_sel, _ = reconcile_schedule(jobs, records, base_budget=2,
+                                          max_budget=8)
+        assert not any("+e" in i for i in plain_sel), \
+            "without the policy, extras are speculation and stay out"
+
+    def test_async_suppresses_promotion_of_stopped_jobs(self):
+        jobs = _fake_jobs(2)
+        pol = SolPolicy(seed="fp")
+        sched = AsyncSuccessiveHalving(jobs, base_budget=2, max_budget=4,
+                                       sol=pol)
+        a, b = sched.initial_items()
+        out = sched.on_result(_srec(a, 3.0, 1.0)) \
+            + sched.on_result(_srec(b, 1.0, 0.2))
+        assert out == [], \
+            "the top job is at the floor: async must not promote it"
+
+
+class TestSolFleet:
+    def test_records_are_stamped_and_summary_reported(self, tmp_path):
+        rep = _fleet(tmp_path, sol=True)
+        assert all(r.get("sol_frac") is not None
+                   for r in rep.records.values()), \
+            "every gemm/quant_gemm record must carry its sol fraction"
+        assert set(rep.sol) == {"stopped", "freed_iterations",
+                                "granted_iterations"}
+        for jid, frac in rep.sol["stopped"].items():
+            assert frac * 1.1 >= 1.0, (jid, frac)
+        table = dispatch_mod.load(tmp_path / "dispatch_table.json")
+        for buckets in table.entries.values():
+            for e in buckets.values():
+                assert "sol_frac" in e["provenance"]
+
+    def test_sol_knobs_are_part_of_the_fingerprint(self, tmp_path):
+        """Stops change which items exist, so a non-sol journal must not
+        satisfy a --sol run (and vice versa) — but a matching --sol
+        re-invocation resumes everything."""
+        r1 = _fleet(tmp_path, sol=True)
+        with pytest.raises(JournalMismatch):
+            _fleet(tmp_path)
+        with pytest.raises(JournalMismatch):
+            _fleet(tmp_path, sol=True, sol_slack=0.2)
+        r2 = _fleet(tmp_path, sol=True)
+        assert r2.ran == 0 and r2.skipped == r1.ran
+
+    def test_sol_async_and_resume_reproduce_the_sync_table(
+            self, tmp_path):
+        _fleet(tmp_path / "sync", sol=True)
+        ref = (tmp_path / "sync" / "dispatch_table.json").read_bytes()
+        _fleet(tmp_path / "async", sol=True, async_mode=True)
+        assert (tmp_path / "async" /
+                "dispatch_table.json").read_bytes() == ref
+        # kill/resume: drop the journal's last record and re-invoke
+        jpath = tmp_path / "sync" / "fleet_journal.jsonl"
+        lines = jpath.read_text().splitlines()
+        jpath.write_text("\n".join(lines[:-1]) + "\n")
+        r = _fleet(tmp_path / "sync", sol=True)
+        assert r.ran == 1
+        assert (tmp_path / "sync" /
+                "dispatch_table.json").read_bytes() == ref
 
 
 # ---------------------------------------------------------------------------
