@@ -1,0 +1,179 @@
+"""Request-level serving benchmark: trace replay, dense vs paged.
+
+Replays seeded Poisson and bursty arrival traces (repro.serve.trace)
+through both engines on a reduced model and reports, per trace and
+engine: p50/p99 request latency (ticks), total ticks, prefill/decode
+token counts, tokens/tick, and — for the paged engine — pool peak/mean
+occupancy, preemptions, and KV bytes vs the dense engine's per-slot
+reservation.  The report is a deterministic function of (seed, sizes):
+no wall-clock numbers enter the JSON, so two runs with the same
+arguments emit byte-identical reports (tests/test_serving.py gates on
+this, the tuner-journal byte-identity discipline applied to serving).
+
+``--smoke`` (CI) hard-asserts the tentpole's acceptance criteria:
+
+* the paged engine's outputs are token-identical to the dense-slab
+  engine's on both traces (and every request completes);
+* the paged pool's KV bytes are below the dense per-slot reservation
+  on the mixed-length workload;
+* peak pool utilization clears the floor (the pool is actually shared,
+  not a renamed slab reservation).
+
+Host-relative wall-clock throughput is printed to stdout for human
+eyes only.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.serve import PagedServingEngine, ServingEngine  # noqa: E402
+from repro.serve.pool import KVPool  # noqa: E402
+from repro.serve.trace import (bursty_trace, percentile,  # noqa: E402
+                               poisson_trace, replay)
+
+UTILIZATION_FLOOR = 0.4      # peak pool-page occupancy / usable pages
+
+
+def _engine_report(res, *, wall_s: float) -> dict:
+    lats = list(res["latency"].values())
+    m = res["metrics"]
+    toks = m["counters"]["prefill_tokens"] + m["counters"]["decode_tokens"]
+    rep = {
+        "requests": len(res["outputs"]),
+        "errors": len(res["errors"]),
+        "ticks": res["ticks"],
+        "latency_p50": percentile(lats, 50),
+        "latency_p99": percentile(lats, 99),
+        "prefill_tokens": m["counters"]["prefill_tokens"],
+        "decode_tokens": m["counters"]["decode_tokens"],
+        "tokens_per_tick": round(toks / max(res["ticks"], 1), 6),
+        "peak_queue_depth": m["peaks"]["queue_depth"],
+        "peak_occupancy": m["peaks"]["occupancy"],
+        "capacity": m["capacity"],
+        "preemptions": m["counters"]["preempted"],
+        "metrics": m,
+    }
+    # stdout only — never in the report JSON (byte-identity)
+    print(f"    {m['kind']}: {res['ticks']} ticks, "
+          f"p50={rep['latency_p50']} p99={rep['latency_p99']} ticks, "
+          f"{toks / max(wall_s, 1e-9):.0f} tok/s wall")
+    return rep
+
+
+def run_trace(name, trace, model, params, args) -> dict:
+    print(f"  trace {name}: {len(trace)} requests")
+    out = {}
+    engines = {
+        "dense": lambda: ServingEngine(
+            model, params, n_slots=args.slots, max_len=args.max_len,
+            eos_id=-1),
+        "paged": lambda: PagedServingEngine(
+            model, params, pool_pages=args.pool_pages,
+            page_size=args.page_size, max_batch=args.slots,
+            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+            eos_id=-1),
+    }
+    results = {}
+    for kind, mk in engines.items():
+        eng = mk()
+        t0 = time.perf_counter()
+        res = replay(eng, trace)
+        wall = time.perf_counter() - t0
+        results[kind] = res
+        out[kind] = _engine_report(res, wall_s=wall)
+        if kind == "paged":
+            out[kind]["pool_kv_bytes"] = eng.kv.nbytes
+            out[kind]["dense_reserved_kv_bytes"] = \
+                KVPool.dense_reserved_bytes(model, args.slots, args.max_len)
+            out[kind]["peak_utilization"] = round(
+                eng.metrics.peak_utilization(), 6)
+    out["token_identical"] = (results["dense"]["outputs"]
+                              == results["paged"]["outputs"])
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pool-pages", type=int, default=25)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: assert token identity, pool-vs-dense "
+                         "KV bytes, and the utilization floor")
+    ap.add_argument("--out", default=None, help="write report JSON here")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_reduced(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    traces = {
+        "poisson": poisson_trace(
+            seed=args.seed + 1, n_requests=args.requests, mean_gap=3.0,
+            prompt_lens=(4, 28), max_new=(4, 12), vocab=cfg.vocab),
+        "bursty": bursty_trace(
+            seed=args.seed + 2, n_bursts=max(args.requests // 6, 1),
+            burst_size=6, burst_gap=20, prompt_lens=(4, 28),
+            max_new=(4, 12), vocab=cfg.vocab),
+    }
+
+    report = {
+        "schema": 1,
+        "arch": cfg.name,
+        "config": {
+            "seed": args.seed, "requests": args.requests,
+            "slots": args.slots, "max_len": args.max_len,
+            "page_size": args.page_size, "pool_pages": args.pool_pages,
+            "prefill_chunk": args.prefill_chunk,
+        },
+        "traces": {},
+    }
+    for name, trace in traces.items():
+        report["traces"][name] = run_trace(name, trace, model, params,
+                                           args)
+
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"report -> {args.out}")
+    else:
+        print(text)
+
+    if args.smoke:
+        for name, tr in report["traces"].items():
+            assert tr["token_identical"], \
+                f"{name}: paged outputs diverged from the dense oracle"
+            for kind in ("dense", "paged"):
+                assert tr[kind]["errors"] == 0, f"{name}/{kind}: errors"
+                assert tr[kind]["requests"] == len(traces[name]), \
+                    f"{name}/{kind}: not every request completed"
+            p = tr["paged"]
+            assert p["pool_kv_bytes"] < p["dense_reserved_kv_bytes"], \
+                (f"{name}: paged pool {p['pool_kv_bytes']}B is not below "
+                 f"the dense reservation {p['dense_reserved_kv_bytes']}B")
+            assert p["peak_utilization"] >= UTILIZATION_FLOOR, \
+                (f"{name}: peak pool utilization "
+                 f"{p['peak_utilization']:.2f} under the "
+                 f"{UTILIZATION_FLOOR} floor")
+        print("SMOKE OK: token-identical, pool below dense reservation, "
+              f"utilization >= {UTILIZATION_FLOOR} on both traces")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -67,3 +67,50 @@ def default_config(pages_per_seq: int) -> PagedAttentionConfig:
     while bp > 1 and pages_per_seq % bp:
         bp //= 2
     return PagedAttentionConfig(block_pages=bp)
+
+
+def validate_block_tables(tables, *, model=None, page_size: int,
+                          pool_pages: int, q_heads: int = None,
+                          kv_heads: int = None, head_dim: int = None,
+                          dtype: str = "f32",
+                          cfg: Optional[PagedAttentionConfig] = None
+                          ) -> Optional[PagedAttentionConfig]:
+    """ARGUS gate for a serving engine's block tables.
+
+    ``tables`` is the engine's (batch, pages_per_seq) int array mapping
+    logical to physical pages.  Builds the family problem for this batch
+    geometry, resolves the kernel config from the installed fleet
+    ``dispatch_table.json`` (:func:`repro.core.tuning.dispatch
+    .configured` — the serving-side consumption of the tuner's output)
+    and statically verifies the indirection invariants — an out-of-range
+    mapping, stale V-path table or under-covering page grid is rejected
+    with a stage-attributed counterexample before any gather runs.  The
+    concrete table contents are then range-checked against the pool, the
+    runtime mirror of the family's ``assert_in_range`` analysis catch.
+
+    Head geometry comes from ``model.cfg`` when a model is given;
+    MLA-cache models have no GQA head mapping to verify, so they get the
+    concrete range check only.  Returns the verified config (None when
+    only the range check applies).
+    """
+    import numpy as np
+    B, NP = int(tables.shape[0]), int(tables.shape[1])
+    t = np.asarray(tables)
+    if t.size and (t.min() < 0 or t.max() >= pool_pages):
+        raise InvariantViolation(
+            f"block table maps physical page {int(t.max())} outside the "
+            f"{pool_pages}-page pool")
+    mcfg = getattr(model, "cfg", None)
+    if mcfg is not None and getattr(mcfg, "attn_type", None) != "mla":
+        q_heads = q_heads or mcfg.n_heads
+        kv_heads = kv_heads or mcfg.n_kv_heads
+        head_dim = head_dim or mcfg.resolved_head_dim
+    if not (q_heads and kv_heads and head_dim):
+        return None
+    prob = PagedAttentionProblem(
+        batch=B, q_heads=int(q_heads), kv_heads=int(kv_heads),
+        seq_kv=NP * page_size, page_size=page_size,
+        pool_pages=pool_pages, head_dim=int(head_dim), dtype=dtype)
+    cfg = cfg or configured("paged_attention", prob) or default_config(NP)
+    _validate(cfg, prob)
+    return cfg

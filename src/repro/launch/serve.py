@@ -1,15 +1,19 @@
 """Serving launcher: continuous-batching engine over a model checkpoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        [--ckpt-dir checkpoints/qwen3-1.7b] [--requests 16] [--slots 4]
+        [--engine paged] [--requests 16] [--slots 4] [--pool-pages 64]
 
 Loads the latest checkpoint when present (otherwise fresh init), spins the
-slot-based engine and reports completion + throughput. The decode_32k /
-long_500k dry-run cells exercise the same serve_step at production shapes.
+chosen engine — ``--engine paged`` (default) runs the block-table KV-pool
+engine with chunked prefill and headroom admission; ``--engine dense``
+the per-slot slab baseline — and reports completion, throughput and the
+engine's metrics snapshot. The decode_32k / long_500k dry-run cells
+exercise the same serve_step at production shapes.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -18,7 +22,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.models import build
-from repro.serve import Request, ServingEngine
+from repro.serve import PagedServingEngine, Request, ServingEngine
 
 
 def main(argv=None):
@@ -27,8 +31,16 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--engine", choices=("paged", "dense"),
+                    default="paged")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="dense: cache slots; paged: decode batch width")
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical KV pages (default: 3/4 of the dense "
+                         "slot reservation)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dispatch-table", default=None,
@@ -53,9 +65,18 @@ def main(argv=None):
         table = load_dispatch_table(args.dispatch_table)
         print(f"dispatch table: {table.summary()}")
 
-    eng = ServingEngine(model, params, n_slots=args.slots,
-                        max_len=args.max_len, eos_id=-1,
-                        dispatch_table=table)
+    if args.engine == "paged":
+        pool_pages = args.pool_pages or max(
+            2, args.slots * args.max_len * 3 // (4 * args.page_size))
+        eng = PagedServingEngine(
+            model, params, pool_pages=pool_pages,
+            page_size=args.page_size, max_batch=args.slots,
+            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+            eos_id=-1, dispatch_table=table)
+    else:
+        eng = ServingEngine(model, params, n_slots=args.slots,
+                            max_len=args.max_len, eos_id=-1,
+                            dispatch_table=table)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.max_len // 4))
@@ -70,6 +91,7 @@ def main(argv=None):
     print(f"{len(done)}/{args.requests} requests complete, "
           f"{new_tokens} tokens in {dt:.2f}s "
           f"({new_tokens / dt:.1f} tok/s on this host)")
+    print("metrics:", json.dumps(eng.metrics.snapshot(), sort_keys=True))
     assert len(done) == args.requests
     return done
 

@@ -209,11 +209,22 @@ class TransformerLM:
         """tokens: (B, 1); pos: scalar int32, or (B,) int32 per-slot
         write offsets (continuous batching with heterogeneous prompt
         lengths).  Returns (logits (B,1,V), updated cache)."""
+        return self.decode_chunk(params, cache, tokens, pos)
+
+    def decode_chunk(self, params: Dict, cache: Dict, tokens: jnp.ndarray,
+                     pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """Multi-token decode: tokens (B, S) written at per-row offsets
+        ``pos`` ((B,) int32, or scalar), causal within the chunk and
+        attending to the whole cache prefix.  This is the chunked-prefill
+        step: the paged serving engine feeds prompt chunks through it so
+        long prompts never stall the decode batch.  Returns
+        (logits (B, S, V), updated cache)."""
         cfg = self.cfg
         x = embed(params["embed"], tokens, cfg)
-        B = x.shape[0]
-        positions = (pos[:, None] if getattr(pos, "ndim", 0) == 1
-                     else jnp.broadcast_to(pos, (B, 1)))
+        B, S = tokens.shape
+        offs = jnp.arange(S, dtype=jnp.int32)
+        positions = (pos[:, None] + offs if getattr(pos, "ndim", 0) == 1
+                     else jnp.broadcast_to(pos + offs, (B, S)))
         new_cache: Dict = dict(cache)
         for i in range(self.n_dense_front):
             x, _, new_cache[f"front_{i}"] = apply_block(

@@ -1,3 +1,6 @@
-from .engine import Request, ServingEngine
+from .engine import PagedServingEngine, Request, ServingEngine
+from .metrics import ServingMetrics
+from .pool import KVPool, PageAllocator, PoolExhausted
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "PagedServingEngine", "Request",
+           "ServingMetrics", "KVPool", "PageAllocator", "PoolExhausted"]

@@ -1,25 +1,38 @@
-"""Batched serving engine with continuous batching.
+"""Continuous-batching serving engines: dense slots and paged pool.
 
-Slot-based scheduler: a fixed decode batch of ``n_slots`` sequences; free
-slots are refilled from the request queue via a single-sequence prefill
-whose cache slab is inserted into the batched cache (the slot dimension is
-the data-sharded batch axis at scale).  One jitted decode step advances all
-active slots per tick — the standard TPU continuous-batching layout.
+Two engines share one request model and one metrics contract:
+
+:class:`ServingEngine` — the dense baseline.  A fixed decode batch of
+``n_slots`` sequences, each reserving a dense ``max_len`` cache slab;
+free slots refill from the queue via single-sequence one-shot prefill.
+Kept as the oracle the paged engine must match token-for-token, and as
+the fallback for models whose cache carries positionless state leaves
+(recurrent/hybrid) that cannot be paged.
+
+:class:`PagedServingEngine` — the production layout.  KV lives in a
+shared block-table page pool (:mod:`repro.serve.pool`): admission is
+driven by pool headroom rather than slot reservation, prompts prefill
+in fixed-size chunks interleaved with decode ticks (a long prompt never
+stalls the running batch), and pool pressure preempts the
+least-recently-admitted sequence back to the queue (recompute-style
+resume: deterministic greedy decode makes the continuation identical).
+Every tick's gather is gated by the ``paged_attention`` family's ARGUS
+invariants via :func:`repro.kernels.paged_attention.ops
+.validate_block_tables`, with the kernel config resolved from the
+installed fleet ``dispatch_table.json`` — the engine stays the flagship
+consumer of the tuner's output.
 
 Kernel configs come from the fleet tuner's ``dispatch_table.json``
 (:mod:`repro.core.tuning.dispatch`): pass ``dispatch_table=`` (a path or
 a loaded table) and the engine installs it process-wide, so every
 validated kernel entry point reached under decode (paged/flash decode,
 quantized GEMMs, ...) resolves its config from the tuned table's shape
-buckets instead of the shape-adaptive defaults — the serving-side
-consumer of the orchestrator's output.  The install is deliberately
-process-global (the kernel entry points have no engine handle): one
-table per process, last install wins — construct multiple engines with
-different tables only if you mean the last one's configs to apply.
+buckets instead of the shape-adaptive defaults.  The install is
+deliberately process-global (the kernel entry points have no engine
+handle): one table per process, last install wins.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -29,6 +42,9 @@ import numpy as np
 
 from repro.core.tuning import dispatch as _dispatch
 
+from .metrics import ServingMetrics
+from .pool import KVPool, PageAllocator, PoolExhausted, pages_needed
+
 
 @dataclass
 class Request:
@@ -37,6 +53,7 @@ class Request:
     max_new_tokens: int = 32
     output: List[int] = field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
 
 
 @dataclass
@@ -46,6 +63,8 @@ class _Slot:
 
 
 class ServingEngine:
+    """Dense-slab slot engine (the paged engine's token oracle)."""
+
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, eos_id: int = 1,
                  greedy: bool = True, dispatch_table=None):
@@ -64,6 +83,7 @@ class ServingEngine:
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.metrics = ServingMetrics(capacity=n_slots, kind="dense")
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, max_len))
@@ -90,7 +110,8 @@ class ServingEngine:
         self.cache = jax.tree.map(ins, axes, self.cache, src_cache,
                                   is_leaf=is_axes_leaf)
 
-    def _admit(self) -> None:
+    def _admit(self) -> Dict[str, int]:
+        admitted = prefill_tokens = 0
         for i, s in enumerate(self.slots):
             if s.req is not None or not self.queue:
                 continue
@@ -101,41 +122,365 @@ class ServingEngine:
             nxt = int(jnp.argmax(logits[0, -1]))
             req.output.append(nxt)
             s.req, s.pos = req, len(req.prompt)
+            admitted += 1
+            prefill_tokens += len(req.prompt)
+        return {"admitted": admitted, "prefill_tokens": prefill_tokens}
 
     def step(self) -> int:
         """One engine tick: admit, decode, retire.  Returns #active."""
-        self._admit()
+        adm = self._admit()
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
-            return 0
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        pos_vec = np.zeros((self.n_slots,), np.int32)
-        for i in active:
-            tokens[i, 0] = self.slots[i].req.output[-1]
-            pos_vec[i] = self.slots[i].pos
-        # per-slot write offsets: slots with heterogeneous prompt lengths
-        # each write/attend at their own position (decode_step vmaps the
-        # cache update over the batch dim)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(pos_vec))
-        for i in active:
-            s = self.slots[i]
-            nxt = int(jnp.argmax(logits[i, -1]))
-            s.req.output.append(nxt)
-            s.pos += 1
-            exhausted = (len(s.req.output) >= s.req.max_new_tokens
-                         or nxt == self.eos_id
-                         or s.pos >= self.max_len - 1)
-            if exhausted:
-                s.req.done = True
-                self.finished.append(s.req)
-                s.req = None
+        finished = 0
+        if active:
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            pos_vec = np.zeros((self.n_slots,), np.int32)
+            for i in active:
+                tokens[i, 0] = self.slots[i].req.output[-1]
+                pos_vec[i] = self.slots[i].pos
+            # per-slot write offsets: slots with heterogeneous prompt
+            # lengths each write/attend at their own position (decode_step
+            # vmaps the cache update over the batch dim)
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos_vec))
+            for i in active:
+                s = self.slots[i]
+                nxt = int(jnp.argmax(logits[i, -1]))
+                s.req.output.append(nxt)
+                s.pos += 1
+                # retire only once the final writable position (max_len-1)
+                # has been used: s.pos is the *next* write offset, so the
+                # boundary is pos == max_len, not max_len - 1 (a sequence
+                # admitted at pos == max_len - 2 still owns one tick)
+                exhausted = (len(s.req.output) >= s.req.max_new_tokens
+                             or nxt == self.eos_id
+                             or s.pos >= self.max_len)
+                if exhausted:
+                    s.req.done = True
+                    self.finished.append(s.req)
+                    s.req = None
+                    finished += 1
+        occ = sum(1 for s in self.slots if s.req is not None)
+        self.metrics.record_tick(
+            queue_depth=len(self.queue), active=occ, occupancy=occ,
+            decode_tokens=len(active), finished=finished, **adm)
         return len(active)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         for _ in range(max_ticks):
             if not self.queue and all(s.req is None for s in self.slots):
+                break
+            self.step()
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Paged engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Seq:
+    req: Request
+    ctx: List[int]            # prompt (+ regenerated output on resume)
+    pos: int = 0              # tokens whose KV is in the pool
+    prefilled: bool = False
+    admitted_at: int = 0      # admission stamp (preemption order)
+    resumed: bool = False     # re-admitted after a preemption
+
+
+class PagedServingEngine:
+    """Paged continuous batching over a shared block-table KV pool.
+
+    ``max_batch`` bounds the decode call's width (a jit shape, not a
+    reservation); admission is governed by pool headroom: a request is
+    admitted the moment the free list can hold its prompt plus one
+    decode page.  ``max_len`` (logical positions per sequence) must be
+    a multiple of ``page_size`` so the gathered view's kv length equals
+    the dense engine's — that is what makes the two engines
+    token-identical on the same trace.
+    """
+
+    def __init__(self, model, params, *, pool_pages: int,
+                 page_size: int = 16, max_batch: int = 8,
+                 max_len: int = 512, prefill_chunk: int = 32,
+                 eos_id: int = 1, greedy: bool = True,
+                 dispatch_table=None):
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.model = model
+        self.params = params
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.pages_per_seq = max_len // page_size
+        self.prefill_chunk = min(prefill_chunk, max_len)
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.dispatch = (_dispatch.install(dispatch_table)
+                         if dispatch_table is not None
+                         else _dispatch.active())
+        self.alloc = PageAllocator(pool_pages, page_size)
+        self.kv = KVPool(model, pool_pages, page_size)
+        self.rows: List[Optional[_Seq]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.metrics = ServingMetrics(capacity=self.alloc.usable_pages,
+                                      kind="paged")
+        self._decode = jax.jit(model.decode_step)
+        self._chunk = (jax.jit(model.decode_chunk)
+                       if hasattr(model, "decode_chunk") else None)
+        self._admission_stamp = 0
+        self._next_seq_id = 0
+        self._table_sig = None
+
+    # -- API ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def active(self) -> List[_Seq]:
+        return [s for s in self.rows if s is not None]
+
+    # -- admission ----------------------------------------------------------
+    def _seq_id(self, s: _Seq) -> int:
+        return s.admitted_at
+
+    def _admit(self) -> Dict[str, int]:
+        admitted = 0
+        while self.queue:
+            req = self.queue[0]
+            row = next((i for i, r in enumerate(self.rows) if r is None),
+                       None)
+            if row is None:
+                break
+            ctx = list(req.prompt) + list(req.output)
+            need = pages_needed(len(ctx) + 1, self.page_size)
+            if need > self.alloc.usable_pages or len(ctx) >= self.max_len:
+                # can never fit: reject rather than wedge the queue
+                self.queue.pop(0)
+                req.done, req.error = True, "request exceeds pool capacity"
+                self.finished.append(req)
+                continue
+            if need > self.alloc.free_pages:
+                break                      # headroom gate: wait for pages
+            self._admission_stamp += 1
+            seq = _Seq(req=req, ctx=ctx,
+                       admitted_at=self._admission_stamp,
+                       resumed=bool(req.output))
+            self.queue.pop(0)
+            self.alloc.ensure(self._seq_id(seq), len(ctx) + 1)
+            self.rows[row] = seq
+            admitted += 1
+        return {"admitted": admitted}
+
+    # -- pool pressure -------------------------------------------------------
+    def _preempt_for(self, seq: _Seq, n_tokens: int) -> int:
+        """Grow seq's table to hold ``n_tokens``, evicting the least-
+        recently-admitted *other* sequence back to the queue when the
+        free list runs dry.  Returns the number of preemptions."""
+        preempted = 0
+        while True:
+            try:
+                self.alloc.ensure(self._seq_id(seq), n_tokens)
+                return preempted
+            except PoolExhausted:
+                protected = frozenset([self._seq_id(seq)])
+                victims = [s for s in self.active
+                           if s is not seq and not s.req.done]
+                if not victims:
+                    raise PoolExhausted(
+                        f"rid {seq.req.rid} needs "
+                        f"{pages_needed(n_tokens, self.page_size)} pages; "
+                        "pool exhausted with nothing evictable")
+                victim = max(victims, key=lambda s: s.admitted_at)
+                assert self._seq_id(victim) not in protected
+                self._evict(victim)
+                preempted += 1
+
+    def _evict(self, victim: _Seq) -> None:
+        """Recompute-style preemption: drop the victim's pages and requeue
+        it at the front; on re-admission its context is re-prefilled as
+        prompt + generated-so-far, and greedy decode continues
+        identically."""
+        self.alloc.free_seq(self._seq_id(victim))
+        self.rows[self.rows.index(victim)] = None
+        self.queue.insert(0, victim.req)
+
+    # -- gather through the validated block tables ---------------------------
+    def _tables(self) -> np.ndarray:
+        t = np.zeros((self.max_batch, self.pages_per_seq), np.int32)
+        for i, s in enumerate(self.rows):
+            if s is not None:
+                t[i] = self.alloc.table_row(self._seq_id(s),
+                                            self.pages_per_seq)
+        return t
+
+    def _gather(self) -> Dict:
+        tables = self._tables()
+        sig = (tables.shape, self.alloc.n_pages)
+        if sig != self._table_sig:
+            # ARGUS gate: verify the paged_attention family's indirection
+            # invariants for this batch geometry (config resolved from the
+            # installed dispatch table) before the gather consumes it
+            from repro.kernels.paged_attention.ops import \
+                validate_block_tables
+            validate_block_tables(
+                tables, model=self.model, page_size=self.page_size,
+                pool_pages=self.alloc.n_pages)
+            self._table_sig = sig
+        else:
+            # geometry already verified: still range-check the concrete
+            # mapping (the runtime mirror of assert_in_range)
+            if tables.min() < 0 or tables.max() >= self.alloc.n_pages:
+                raise ValueError("block table maps outside the pool")
+        return self.kv.gather(jnp.asarray(tables))
+
+    # -- prefill -------------------------------------------------------------
+    def _prefill_tick(self) -> Dict[str, int]:
+        """Advance every un-prefilled sequence by one prompt chunk, all
+        rows batched through a single decode_chunk call."""
+        pend = [(i, s) for i, s in enumerate(self.rows)
+                if s is not None and not s.prefilled]
+        empty = {"prefill_tokens": 0, "preempted": 0, "finished": 0}
+        if not pend:
+            return empty
+        C = self.prefill_chunk if self._chunk is not None else 1
+        preempted = 0
+        for i, s in pend:
+            if self.rows[i] is not s:      # evicted by an earlier ensure
+                continue
+            n = min(C, len(s.ctx) - s.pos)
+            preempted += self._preempt_for(s, s.pos + n)
+        # a preemption may have evicted a sequence in `pend` — rebuild
+        pend = [(i, s) for i, s in pend if self.rows[i] is s]
+        if not pend:
+            return dict(empty, preempted=preempted)
+        tokens = np.zeros((self.max_batch, C), np.int32)
+        pos_vec = np.zeros((self.max_batch,), np.int32)
+        lens = {}
+        for i, s in pend:
+            n = min(C, len(s.ctx) - s.pos)
+            tokens[i, :n] = s.ctx[s.pos:s.pos + n]
+            pos_vec[i] = s.pos
+            lens[i] = n
+        view = self._gather()
+        fn = self._chunk if self._chunk is not None else self._decode
+        logits, view = fn(self.params, view, jnp.asarray(tokens),
+                          jnp.asarray(pos_vec))
+        self._scatter(view, {i: (s.pos, lens[i]) for i, s in pend})
+        total = 0
+        finished = 0
+        for i, s in pend:
+            s.pos += lens[i]
+            total += lens[i]
+            if s.pos == len(s.ctx):
+                # prompt complete: first generated token comes from the
+                # logits at the chunk's last real position (the dense
+                # engine's argmax(prefill_logits[-1]) twin)
+                nxt = int(jnp.argmax(logits[i, lens[i] - 1]))
+                s.req.output.append(nxt)
+                s.prefilled = True
+                # a *resumed* prefill replays a decode tick, so its token
+                # gets the decode-tick exhaustion check (fresh admissions
+                # mirror the dense engine, which checks only on decode)
+                if s.resumed and (
+                        len(s.req.output) >= s.req.max_new_tokens
+                        or nxt == self.eos_id
+                        or s.pos >= self.max_len):
+                    s.req.done = True
+                    self.finished.append(s.req)
+                    self.alloc.free_seq(self._seq_id(s))
+                    self.rows[i] = None
+                    finished += 1
+        return {"prefill_tokens": total, "preempted": preempted,
+                "finished": finished}
+
+    # -- decode --------------------------------------------------------------
+    def _decode_tick(self) -> Dict[str, int]:
+        rows = [(i, s) for i, s in enumerate(self.rows)
+                if s is not None and s.prefilled and not s.req.done]
+        if not rows:
+            return {"decode_tokens": 0, "finished": 0, "preempted": 0}
+        preempted = 0
+        for i, s in rows:
+            if self.rows[i] is not s:      # evicted by an earlier ensure
+                continue
+            preempted += self._preempt_for(s, s.pos + 1)
+        rows = [(i, s) for i, s in rows if self.rows[i] is s]
+        if not rows:
+            return {"decode_tokens": 0, "finished": 0,
+                    "preempted": preempted}
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos_vec = np.zeros((self.max_batch,), np.int32)
+        for i, s in rows:
+            tokens[i, 0] = s.req.output[-1]
+            pos_vec[i] = s.pos
+        view = self._gather()
+        logits, view = self._decode(self.params, view,
+                                    jnp.asarray(tokens),
+                                    jnp.asarray(pos_vec))
+        self._scatter(view, {i: (s.pos, 1) for i, s in rows})
+        finished = 0
+        for i, s in rows:
+            nxt = int(jnp.argmax(logits[i, -1]))
+            s.req.output.append(nxt)
+            s.pos += 1
+            s.ctx.append(int(tokens[i, 0]))
+            exhausted = (len(s.req.output) >= s.req.max_new_tokens
+                         or nxt == self.eos_id
+                         or s.pos >= self.max_len)
+            if exhausted:
+                s.req.done = True
+                self.finished.append(s.req)
+                self.alloc.free_seq(self._seq_id(s))
+                self.rows[i] = None
+                finished += 1
+        return {"decode_tokens": len(rows), "finished": finished,
+                "preempted": preempted}
+
+    def _scatter(self, view: Dict, slabs: Dict[int, tuple]) -> None:
+        """slabs: row -> (start position, n tokens written)."""
+        rows, pos, phys, offs = [], [], [], []
+        for i, (p0, n) in slabs.items():
+            s = self.rows[i]
+            table = self.alloc.tables[self._seq_id(s)]
+            for p in range(p0, p0 + n):
+                rows.append(i)
+                pos.append(p)
+                phys.append(table[p // self.page_size])
+                offs.append(p % self.page_size)
+        self.kv.scatter(view, np.asarray(rows, np.int32),
+                        np.asarray(pos, np.int32),
+                        np.asarray(phys, np.int32),
+                        np.asarray(offs, np.int32))
+
+    # -- tick ----------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit by headroom, one prefill chunk per
+        pending prompt, one decode step for the running batch, retire.
+        Returns #active sequences."""
+        adm = self._admit()
+        pre = self._prefill_tick()
+        dec = self._decode_tick()
+        for s in self.active:
+            self.alloc.touch(self._seq_id(s))
+        n_active = len(self.active)
+        self.metrics.record_tick(
+            queue_depth=len(self.queue), active=n_active,
+            occupancy=self.alloc.used_pages,
+            prefill_tokens=pre["prefill_tokens"],
+            decode_tokens=dec["decode_tokens"],
+            admitted=adm["admitted"],
+            finished=pre["finished"] + dec["finished"],
+            preempted=pre["preempted"] + dec["preempted"])
+        return n_active
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and not self.active:
                 break
             self.step()
         return self.finished

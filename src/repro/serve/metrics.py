@@ -1,0 +1,117 @@
+"""Serving metrics: the per-tick health surface of both engines.
+
+One :class:`ServingMetrics` per engine.  ``record_tick`` is called by
+``step()`` exactly once per tick — idle ticks included, so a replayed
+arrival trace keeps wall-tick alignment.  Counters are monotonic
+(cumulative over the engine's life); gauges are the last tick's values;
+peaks are running maxima.  ``snapshot()`` emits the versioned schema
+below and ``from_snapshot`` round-trips it, so a scraper can diff
+snapshots across ticks without reaching into engine internals.
+
+``capacity`` is the engine's occupancy denominator: decode slots for
+the dense engine, usable (non-null) pool pages for the paged one —
+``occupancy / capacity`` is the pool-utilization number
+``benchmarks/fig_serving.py`` gates on.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+SCHEMA_VERSION = 1
+
+# The snapshot schema, by example.  docs/serving.md embeds this block
+# verbatim (test_docs enforces it) — update both together.
+SCHEMA_EXAMPLE = {
+    "schema": 1,
+    "kind": "paged",            # "dense" | "paged"
+    "capacity": 24,             # slots (dense) | usable pages (paged)
+    "counters": {               # monotonic, cumulative
+        "ticks": 37,
+        "admitted": 6,          # requests admitted to the batch
+        "finished": 4,          # requests retired
+        "preempted": 1,         # pool-pressure evictions (paged only)
+        "prefill_tokens": 96,   # prompt tokens written to the cache
+        "decode_tokens": 118,   # generated tokens written to the cache
+    },
+    "gauges": {                 # last recorded tick
+        "queue_depth": 2,
+        "active": 3,            # sequences holding cache space
+        "occupancy": 14,        # slots / pages in use
+    },
+    "peaks": {                  # running maxima over all ticks
+        "queue_depth": 5,
+        "active": 4,
+        "occupancy": 19,
+    },
+}
+
+_COUNTERS = ("ticks", "admitted", "finished", "preempted",
+             "prefill_tokens", "decode_tokens")
+_GAUGES = ("queue_depth", "active", "occupancy")
+
+
+class ServingMetrics:
+    def __init__(self, capacity: int, kind: str):
+        if kind not in ("dense", "paged"):
+            raise ValueError(f"kind must be dense|paged, got {kind!r}")
+        self.capacity = int(capacity)
+        self.kind = kind
+        self.counters: Dict[str, int] = {k: 0 for k in _COUNTERS}
+        self.gauges: Dict[str, int] = {k: 0 for k in _GAUGES}
+        self.peaks: Dict[str, int] = {k: 0 for k in _GAUGES}
+
+    def record_tick(self, *, queue_depth: int, active: int, occupancy: int,
+                    prefill_tokens: int = 0, decode_tokens: int = 0,
+                    admitted: int = 0, finished: int = 0,
+                    preempted: int = 0) -> None:
+        c = self.counters
+        c["ticks"] += 1
+        c["admitted"] += admitted
+        c["finished"] += finished
+        c["preempted"] += preempted
+        c["prefill_tokens"] += prefill_tokens
+        c["decode_tokens"] += decode_tokens
+        g = {"queue_depth": int(queue_depth), "active": int(active),
+             "occupancy": int(occupancy)}
+        self.gauges = g
+        for k, v in g.items():
+            self.peaks[k] = max(self.peaks[k], v)
+
+    # -- derived ------------------------------------------------------------
+    def utilization(self) -> float:
+        return self.gauges["occupancy"] / self.capacity
+
+    def peak_utilization(self) -> float:
+        return self.peaks["occupancy"] / self.capacity
+
+    def tokens_per_tick(self) -> float:
+        t = self.counters["ticks"]
+        return ((self.counters["prefill_tokens"]
+                 + self.counters["decode_tokens"]) / t) if t else 0.0
+
+    # -- snapshot schema ----------------------------------------------------
+    def snapshot(self) -> Dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "kind": self.kind,
+            "capacity": self.capacity,
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "peaks": dict(self.peaks),
+        }
+
+    @classmethod
+    def from_snapshot(cls, snap: Dict) -> "ServingMetrics":
+        if snap.get("schema") != SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported metrics schema {snap.get('schema')!r} "
+                f"(this build reads v{SCHEMA_VERSION})")
+        m = cls(snap["capacity"], snap["kind"])
+        for group, keys in (("counters", _COUNTERS), ("gauges", _GAUGES),
+                            ("peaks", _GAUGES)):
+            src = snap[group]
+            if set(src) != set(keys):
+                raise ValueError(f"snapshot {group} keys {sorted(src)} != "
+                                 f"schema keys {sorted(keys)}")
+            getattr(m, group).update({k: int(src[k]) for k in keys})
+        return m

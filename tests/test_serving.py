@@ -1,0 +1,394 @@
+"""Paged serving: page-allocator properties (hypothesis), KV-pool
+gather/scatter correctness, paged-vs-dense token identity (incl. under
+pool-pressure preemption), the retirement-boundary regression, and the
+fig_serving byte-identical-report determinism gate."""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.serve import (PagedServingEngine, PageAllocator, PoolExhausted,
+                         Request, ServingEngine)
+from repro.serve.pool import KVPool, NULL_PAGE, pages_needed
+from repro.serve.trace import bursty_trace, percentile, poisson_trace
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# Page allocator: property tests (pure bookkeeping, no jax)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - dev-only dependency
+    st = None
+
+
+def _drive(alloc: PageAllocator, ops, running=frozenset()):
+    """Apply an op stream, swallowing expected PoolExhausted; the
+    allocator's structural invariants must hold after every op."""
+    for kind, seq, n in ops:
+        try:
+            if kind == "alloc":
+                alloc.alloc(seq, n)
+            elif kind == "ensure":
+                alloc.ensure(seq, n * alloc.page_size)
+            elif kind == "free":
+                alloc.free_seq(seq)
+            elif kind == "touch":
+                alloc.touch(seq)
+            elif kind == "evict":
+                victim = alloc.lru_victim(protected=running)
+                if victim is not None:
+                    assert victim not in running
+                    alloc.free_seq(victim)
+        except PoolExhausted:
+            pass
+        alloc.check()
+
+
+_KINDS = ("alloc", "ensure", "free", "evict", "touch")
+
+if st is not None:
+    # op stream over a small pool: (kind, seq, amount)
+    _OPS = st.lists(
+        st.tuples(st.sampled_from(_KINDS), st.integers(0, 5),
+                  st.integers(1, 6)),
+        max_size=60)
+
+    class TestPageAllocatorProperties:
+        @settings(max_examples=200, deadline=None)
+        @given(ops=_OPS, n_pages=st.integers(2, 24))
+        def test_no_page_mapped_twice_and_freelist_conserved(self, ops,
+                                                             n_pages):
+            """After any op sequence: every physical page is mapped to
+            at most one sequence, the null page is never mapped, and
+            free + mapped always partitions the usable pool."""
+            _drive(PageAllocator(n_pages, page_size=4), ops)
+
+        @settings(max_examples=200, deadline=None)
+        @given(ops=_OPS, running=st.sets(st.integers(0, 5), max_size=4))
+        def test_eviction_never_reclaims_running_sequence(self, ops,
+                                                          running):
+            """lru_victim(protected=running) never names a running
+            sequence, no matter the interleaving of allocs, frees and
+            evictions."""
+            _drive(PageAllocator(9, page_size=4), ops,
+                   running=frozenset(running))
+
+        @settings(max_examples=100, deadline=None)
+        @given(tok=st.integers(1, 64),
+               ps=st.sampled_from([1, 2, 4, 8, 16]))
+        def test_ensure_allocates_exactly_the_ceiling(self, tok, ps):
+            a = PageAllocator(80, page_size=ps)
+            a.ensure(0, tok)
+            assert len(a.tables[0]) == pages_needed(tok, ps)
+            a.ensure(0, tok)                    # idempotent
+            assert len(a.tables[0]) == pages_needed(tok, ps)
+else:
+    class TestPageAllocatorProperties:
+        @pytest.mark.skip(reason="hypothesis not installed — pip "
+                          "install -r requirements-dev.txt")
+        def test_hypothesis_properties(self):
+            pass
+
+
+class TestPageAllocator:
+    def test_seeded_fuzz_conserves_pool_and_respects_protection(self):
+        """Hypothesis-free twin of the property tests: a seeded random
+        op stream (always runs, even without the dev deps) must keep
+        every allocator invariant after each op and never evict a
+        protected sequence."""
+        rng = np.random.default_rng(0)
+        for trial in range(40):
+            n_pages = int(rng.integers(2, 25))
+            running = frozenset(
+                int(x) for x in rng.integers(0, 6, size=3))
+            ops = [(_KINDS[int(rng.integers(len(_KINDS)))],
+                    int(rng.integers(0, 6)), int(rng.integers(1, 7)))
+                   for _ in range(60)]
+            _drive(PageAllocator(n_pages, page_size=4), ops,
+                   running=running)
+
+    def test_ensure_allocates_exactly_the_ceiling(self):
+        for ps in (1, 2, 4, 8, 16):
+            for tok in (1, 3, ps, ps + 1, 4 * ps, 63):
+                a = PageAllocator(80, page_size=ps)
+                a.ensure(0, tok)
+                assert len(a.tables[0]) == pages_needed(tok, ps)
+                a.ensure(0, tok)                # idempotent
+                assert len(a.tables[0]) == pages_needed(tok, ps)
+
+    def test_alloc_is_deterministic_lowest_first(self):
+        a = PageAllocator(6, page_size=4)
+        assert a.alloc(0, 2) == [1, 2]
+        assert a.alloc(1, 2) == [3, 4]
+        a.free_seq(0)
+        assert a.alloc(2, 3) == [1, 2, 5]
+
+    def test_exhaustion_raises_and_protected_eviction_fails(self):
+        a = PageAllocator(4, page_size=4)
+        a.alloc(0, 3)
+        with pytest.raises(PoolExhausted):
+            a.alloc(1, 1)
+        with pytest.raises(PoolExhausted):
+            a.evict(protected=frozenset([0]))
+        victim, pages = a.evict(protected=frozenset())
+        assert victim == 0 and len(pages) == 3 and a.free_pages == 3
+
+
+# ---------------------------------------------------------------------------
+# KV pool storage: gather/scatter against a dense mirror
+# ---------------------------------------------------------------------------
+
+def _reduced_model():
+    from repro import configs
+    from repro.models import build
+    return build(configs.get_reduced("qwen3-1.7b"))
+
+
+class TestKVPool:
+    def test_gather_matches_dense_mirror_and_null_page_stays_zero(self):
+        model = _reduced_model()
+        PS, P, B, NP = 4, 9, 2, 4
+        pool = KVPool(model, P, PS)
+        alloc = PageAllocator(P, PS)
+        dense = model.init_cache(B, NP * PS)
+        axes = model.cache_axes()
+
+        rng = np.random.default_rng(0)
+        writes = []   # (row, pos)
+        for row, n_tok in ((0, 7), (1, 10)):
+            alloc.ensure(row, n_tok)
+            writes += [(row, p) for p in range(n_tok)]
+        rows = np.array([w[0] for w in writes], np.int32)
+        pos = np.array([w[1] for w in writes], np.int32)
+        phys = np.array(
+            [alloc.tables[r][p // PS] for r, p in writes], np.int32)
+        offs = np.array([p % PS for _, p in writes], np.int32)
+
+        # random per-(row,pos) values written into a dense view mirror
+        def fill(leaf, ax):
+            b, s = ax.index("batch"), ax.index("kv_seq")
+            lm = np.array(jnp.moveaxis(leaf, (b, s), (0, 1)))
+            for r, p in writes:
+                lm[r, p] = rng.normal(size=lm.shape[2:])
+            return jnp.moveaxis(jnp.asarray(lm, leaf.dtype), (0, 1),
+                                (b, s))
+        is_ax = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        dense = jax.tree.map(lambda ax, l: fill(l, ax), axes, dense,
+                             is_leaf=is_ax)
+
+        pool.scatter(dense, rows, pos, phys, offs)
+        tables = np.stack([alloc.table_row(r, NP) for r in range(B)])
+        view = pool.gather(jnp.asarray(tables))
+        for got, want in zip(jax.tree.leaves(view),
+                             jax.tree.leaves(dense)):
+            np.testing.assert_array_equal(np.array(got), np.array(want))
+
+        # the null page backs unallocated slots and must stay all-zero
+        for leaf, ax in zip(jax.tree.leaves(pool.storage),
+                            jax.tree.leaves(axes, is_leaf=is_ax)):
+            null = jnp.take(leaf, NULL_PAGE, axis=ax.index("batch"))
+            assert not np.array(null).any()
+
+    def test_rejects_unpageable_models(self):
+        class Fake:
+            def cache_axes(self):
+                return {"h": ("batch", "mlp")}
+
+            def cache_shape(self, b, s):
+                return {"h": jax.ShapeDtypeStruct((b, 8), jnp.float32)}
+        with pytest.raises(ValueError, match="cannot be paged"):
+            KVPool(Fake(), 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _submit_all(eng, reqs):
+    for rid, (p, m) in enumerate(reqs):
+        eng.submit(Request(rid, list(p), max_new_tokens=m))
+    return {r.rid: r.output for r in eng.run()}
+
+
+def _mixed_requests(seed=3, n=8, vocab=256):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(2, vocab, size=int(rng.integers(6, 28))).tolist(),
+             int(rng.integers(4, 12))) for _ in range(n)]
+
+
+class TestPagedEngine:
+    def test_paged_matches_dense_token_for_token(self, served):
+        model, params = served
+        reqs = _mixed_requests()
+        dense = _submit_all(ServingEngine(model, params, n_slots=4,
+                                          max_len=64, eos_id=-1), reqs)
+        paged = _submit_all(
+            PagedServingEngine(model, params, pool_pages=40, page_size=8,
+                               max_batch=4, max_len=64, prefill_chunk=8,
+                               eos_id=-1), reqs)
+        assert paged == dense
+
+    def test_chunk_size_does_not_change_tokens(self, served):
+        model, params = served
+        reqs = _mixed_requests(seed=5, n=4)
+        outs = [_submit_all(
+            PagedServingEngine(model, params, pool_pages=40, page_size=8,
+                               max_batch=2, max_len=64, prefill_chunk=c,
+                               eos_id=-1), reqs)
+            for c in (1, 4, 64)]
+        assert outs[0] == outs[1] == outs[2]
+
+    def test_preemption_resume_preserves_tokens(self, served):
+        """A pool sized far below the working set forces recompute-style
+        preemption; greedy decode must still produce the unpressured
+        token streams, and the engine must report the evictions."""
+        model, params = served
+        reqs = _mixed_requests()
+        roomy = _submit_all(
+            PagedServingEngine(model, params, pool_pages=40, page_size=8,
+                               max_batch=4, max_len=64, prefill_chunk=8,
+                               eos_id=-1), reqs)
+        tight = PagedServingEngine(model, params, pool_pages=9,
+                                   page_size=8, max_batch=4, max_len=64,
+                                   prefill_chunk=8, eos_id=-1)
+        out = _submit_all(tight, reqs)
+        assert out == roomy
+        assert tight.metrics.counters["preempted"] > 0
+
+    def test_admission_is_headroom_driven(self, served):
+        """With a near-empty pool the queue waits even though decode
+        rows are free; pages freed by retirement admit the next
+        request."""
+        model, params = served
+        eng = PagedServingEngine(model, params, pool_pages=5, page_size=8,
+                                 max_batch=4, max_len=32,
+                                 prefill_chunk=8, eos_id=-1)
+        eng.submit(Request(0, list(range(2, 20)), max_new_tokens=4))
+        eng.submit(Request(1, list(range(2, 20)), max_new_tokens=4))
+        eng.step()
+        # 18-token prompt + 1 -> 3 pages of 4 usable: no room for req 1
+        assert len(eng.active) == 1 and len(eng.queue) == 1
+        done = eng.run()
+        assert sorted(r.rid for r in done) == [0, 1]
+        assert all(len(r.output) == 4 for r in done)
+
+    def test_oversized_request_rejected_not_wedged(self, served):
+        model, params = served
+        eng = PagedServingEngine(model, params, pool_pages=3, page_size=8,
+                                 max_batch=2, max_len=64,
+                                 prefill_chunk=8, eos_id=-1)
+        eng.submit(Request(0, list(range(2, 40)), max_new_tokens=4))
+        eng.submit(Request(1, [2, 3, 4], max_new_tokens=3))
+        done = eng.run()
+        by = {r.rid: r for r in done}
+        assert by[0].error and by[0].done
+        assert by[1].error is None and len(by[1].output) == 3
+
+    def test_requires_page_aligned_max_len(self, served):
+        model, params = served
+        with pytest.raises(ValueError, match="multiple of"):
+            PagedServingEngine(model, params, pool_pages=8, page_size=8,
+                               max_len=60)
+
+    def test_block_table_oob_is_rejected(self, served):
+        from repro.kernels.paged_attention.ops import (InvariantViolation,
+                                                       validate_block_tables)
+        model, _ = served
+        bad = np.array([[0, 7]], np.int32)
+        with pytest.raises(InvariantViolation, match="outside"):
+            validate_block_tables(bad, model=model, page_size=8,
+                                  pool_pages=4)
+        cfg = validate_block_tables(np.array([[0, 1]], np.int32),
+                                    model=model, page_size=8,
+                                    pool_pages=4)
+        assert cfg is not None
+
+
+class TestRetirementBoundary:
+    """Regression for the `pos >= max_len - 1` off-by-one: a sequence
+    admitted at pos == max_len - 2 still owns the final writable cache
+    position, so it decodes twice (3 tokens incl. the prefill token),
+    not once."""
+
+    def test_dense_uses_final_writable_position(self, served):
+        model, params = served
+        ml = 32
+        eng = ServingEngine(model, params, n_slots=1, max_len=ml,
+                            eos_id=-1)
+        eng.submit(Request(0, list(range(2, 2 + ml - 2)),
+                           max_new_tokens=10))
+        (done,) = eng.run()
+        assert len(done.output) == 3, \
+            f"expected 3 tokens (prefill + 2 decode ticks), got " \
+            f"{len(done.output)} — retirement boundary regressed"
+
+    def test_paged_matches_dense_at_the_boundary(self, served):
+        model, params = served
+        ml = 32
+        prompt = list(range(2, 2 + ml - 2))
+        dense = ServingEngine(model, params, n_slots=1, max_len=ml,
+                              eos_id=-1)
+        dense.submit(Request(0, prompt, max_new_tokens=10))
+        paged = PagedServingEngine(model, params, pool_pages=10,
+                                   page_size=8, max_batch=1, max_len=ml,
+                                   prefill_chunk=8, eos_id=-1)
+        paged.submit(Request(0, prompt, max_new_tokens=10))
+        assert dense.run()[0].output == paged.run()[0].output
+
+
+# ---------------------------------------------------------------------------
+# Trace replay determinism (fig_serving byte-identity gate)
+# ---------------------------------------------------------------------------
+
+class TestTraces:
+    def test_traces_are_seed_deterministic(self):
+        a = poisson_trace(seed=7, n_requests=10, mean_gap=2.0)
+        b = poisson_trace(seed=7, n_requests=10, mean_gap=2.0)
+        assert a == b
+        c = bursty_trace(seed=7, n_bursts=3, burst_size=4, burst_gap=10)
+        d = bursty_trace(seed=7, n_bursts=3, burst_size=4, burst_gap=10)
+        assert c == d
+        assert [e.tick for e in c] == sorted(e.tick for e in c)
+
+    def test_percentile_is_nearest_rank(self):
+        v = list(range(1, 101))
+        assert percentile(v, 50) == 50
+        assert percentile(v, 99) == 99
+        assert percentile([], 50) == 0
+        assert percentile([5], 99) == 5
+
+    @pytest.mark.slow
+    def test_fig_serving_report_is_byte_identical(self, served, tmp_path):
+        """Replaying the same seeded arrival trace twice yields
+        byte-identical report JSON — the tuner-journal byte-identity
+        discipline applied to the serving benchmark."""
+        sys.path.insert(0, str(REPO / "benchmarks"))
+        try:
+            import fig_serving
+        finally:
+            sys.path.pop(0)
+        argv = ["--requests", "8", "--max-len", "32", "--page-size", "8",
+                "--pool-pages", "13", "--prefill-chunk", "8", "--smoke"]
+        f1, f2 = tmp_path / "a.json", tmp_path / "b.json"
+        fig_serving.main(argv + ["--out", str(f1)])
+        fig_serving.main(argv + ["--out", str(f2)])
+        assert f1.read_bytes() == f2.read_bytes()
+        rep = json.loads(f1.read_text())
+        assert rep["traces"]["poisson"]["token_identical"]
+        assert rep["traces"]["bursty"]["token_identical"]

@@ -113,6 +113,80 @@ class TestServingEngine:
         assert len(done) == 5
         assert all(len(r.output) == 4 for r in done)
 
+    @pytest.mark.parametrize("kind", ["dense", "paged"])
+    def test_metrics_contract(self, kind):
+        """Both engines honour the ServingMetrics contract: one record
+        per step, monotonic counters, gauges that agree with the engine's
+        actual queue/occupancy after every tick, and a snapshot that
+        round-trips through from_snapshot."""
+        from repro import configs
+        from repro.models import build
+        from repro.serve import (PagedServingEngine, Request,
+                                 ServingEngine, ServingMetrics)
+        cfg = configs.get_reduced("qwen3-1.7b")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        if kind == "dense":
+            eng = ServingEngine(model, params, n_slots=2, max_len=32,
+                                eos_id=-1)
+        else:
+            eng = PagedServingEngine(model, params, pool_pages=9,
+                                     page_size=8, max_batch=2,
+                                     max_len=32, prefill_chunk=8,
+                                     eos_id=-1)
+        rng = np.random.default_rng(4)
+        for rid in range(6):
+            plen = int(rng.integers(3, 14))
+            eng.submit(Request(rid,
+                               rng.integers(2, cfg.vocab,
+                                            size=plen).tolist(),
+                               max_new_tokens=int(rng.integers(3, 7))))
+
+        prev = eng.metrics.snapshot()
+        ticks = 0
+        while eng.queue or (any(s.req is not None for s in eng.slots)
+                            if kind == "dense" else eng.active):
+            eng.step()
+            ticks += 1
+            snap = eng.metrics.snapshot()
+            # counters are monotonic and ticks advance exactly once/step
+            for k, v in snap["counters"].items():
+                assert v >= prev["counters"][k], (k, v, prev)
+            assert snap["counters"]["ticks"] == ticks
+            # gauges agree with the engine state after the step
+            assert snap["gauges"]["queue_depth"] == len(eng.queue)
+            if kind == "dense":
+                occ = sum(1 for s in eng.slots if s.req is not None)
+                assert snap["gauges"]["active"] == occ
+                assert snap["gauges"]["occupancy"] == occ
+            else:
+                assert snap["gauges"]["active"] == len(eng.active)
+                assert (snap["gauges"]["occupancy"]
+                        == eng.alloc.used_pages)
+            assert snap["gauges"]["occupancy"] <= snap["capacity"]
+            prev = snap
+            assert ticks < 500, "engine failed to drain"
+
+        snap = eng.metrics.snapshot()
+        assert snap["kind"] == kind
+        assert snap["counters"]["finished"] == 6 == len(eng.finished)
+        total_out = sum(len(r.output) for r in eng.finished)
+        # every admission (re-admissions included) yields one token from
+        # prefill logits; all other tokens are decode-tick tokens
+        assert (snap["counters"]["decode_tokens"]
+                == total_out - snap["counters"]["admitted"])
+        want_prefill = sum(len(r.prompt) for r in eng.finished)
+        if snap["counters"]["preempted"]:
+            # recompute-style resume re-prefills prompt + generated-so-far
+            assert snap["counters"]["prefill_tokens"] > want_prefill
+        else:
+            assert snap["counters"]["prefill_tokens"] == want_prefill
+        # snapshot round-trip is exact
+        rt = ServingMetrics.from_snapshot(snap)
+        assert rt.snapshot() == snap
+        with pytest.raises(ValueError, match="schema"):
+            ServingMetrics.from_snapshot({**snap, "schema": 99})
+
 
 class TestDryRunMachinery:
     @pytest.mark.slow
