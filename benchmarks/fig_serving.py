@@ -1,23 +1,38 @@
-"""Request-level serving benchmark: trace replay, dense vs paged.
+"""Request-level serving benchmark: trace replay, dense vs paged vs
+kernel-path paged.
 
 Replays seeded Poisson and bursty arrival traces (repro.serve.trace)
-through both engines on a reduced model and reports, per trace and
-engine: p50/p99 request latency (ticks), total ticks, prefill/decode
-token counts, tokens/tick, and — for the paged engine — pool peak/mean
-occupancy, preemptions, and KV bytes vs the dense engine's per-slot
-reservation.  The report is a deterministic function of (seed, sizes):
-no wall-clock numbers enter the JSON, so two runs with the same
-arguments emit byte-identical reports (tests/test_serving.py gates on
-this, the tuner-journal byte-identity discipline applied to serving).
+through three engines on a reduced model — the dense-slab oracle, the
+paged engine on the gather decode path, and the paged engine on the
+``decode_path="kernel"`` path (the length-masked paged-attention Pallas
+kernel run straight over the pool, no per-tick dense view) — and
+reports, per trace and engine: p50/p99 request latency (ticks), total
+ticks, prefill/decode token counts, tokens/tick, and — for the paged
+engines — pool peak/mean occupancy, preemptions, KV bytes vs the dense
+engine's per-slot reservation, and the modeled per-decode-tick HBM
+traffic (gather path: the full dense view it materializes; kernel
+path: the pages the batch actually occupies plus the block tables).
+The report is a deterministic function of (seed, sizes): no wall-clock
+numbers enter the JSON, so two runs with the same arguments emit
+byte-identical reports (tests/test_serving.py gates on this, the
+tuner-journal byte-identity discipline applied to serving).
 
 ``--smoke`` (CI) hard-asserts the tentpole's acceptance criteria:
 
-* the paged engine's outputs are token-identical to the dense-slab
-  engine's on both traces (and every request completes);
-* the paged pool's KV bytes are below the dense per-slot reservation
-  on the mixed-length workload;
-* peak pool utilization clears the floor (the pool is actually shared,
-  not a renamed slab reservation).
+* three-way token identity — dense ≡ paged ≡ paged_kernel on both
+  traces (and every request completes);
+* the kernel arm's ``gather_bytes`` counter is exactly 0 and its
+  ``kernel_decode_ticks`` counter is positive (every decode tick ran
+  the kernel, none fell back);
+* the kernel path's per-decode-tick HBM bytes are below the gather
+  path's at the smoke shape;
+* the paged pool's KV bytes are below the dense per-slot reservation,
+  and peak pool utilization clears the floor.
+
+``--dispatch-table PATH`` writes a valid ``dispatch_table.json`` whose
+``paged_attention`` bucket entry records, in its provenance, which
+decode path won the bucket (``decode_path`` + the two modeled per-tick
+byte counts).
 
 Host-relative wall-clock throughput is printed to stdout for human
 eyes only.
@@ -69,18 +84,39 @@ def _engine_report(res, *, wall_s: float) -> dict:
     return rep
 
 
+def _decode_hbm_model(eng, args, model) -> dict:
+    """Deterministic per-decode-tick HBM traffic model for a paged
+    engine.  Gather path: every decode tick materializes the full dense
+    cache view (batch × max_len, every leaf).  Kernel path: the kernel
+    reads only the pages the batch occupies at peak plus the block
+    tables — no dense view ever exists."""
+    dense_view = KVPool.dense_reserved_bytes(model, args.slots,
+                                             args.max_len)
+    per_page = eng.kv.nbytes // eng.kv.n_pages
+    peak_pages = eng.metrics.snapshot()["peaks"]["occupancy"]
+    table_bytes = args.slots * (args.max_len // args.page_size) * 4
+    kernel = peak_pages * per_page + table_bytes
+    return {"gather_decode_hbm_bytes_per_tick": dense_view,
+            "kernel_decode_hbm_bytes_per_tick": kernel}
+
+
 def run_trace(name, trace, model, params, args) -> dict:
     print(f"  trace {name}: {len(trace)} requests")
     out = {}
+
+    def paged(path):
+        return lambda: PagedServingEngine(
+            model, params, pool_pages=args.pool_pages,
+            page_size=args.page_size, max_batch=args.slots,
+            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+            eos_id=-1, decode_path=path)
+
     engines = {
         "dense": lambda: ServingEngine(
             model, params, n_slots=args.slots, max_len=args.max_len,
             eos_id=-1),
-        "paged": lambda: PagedServingEngine(
-            model, params, pool_pages=args.pool_pages,
-            page_size=args.page_size, max_batch=args.slots,
-            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
-            eos_id=-1),
+        "paged": paged("gather"),
+        "paged_kernel": paged("kernel"),
     }
     results = {}
     for kind, mk in engines.items():
@@ -90,14 +126,24 @@ def run_trace(name, trace, model, params, args) -> dict:
         wall = time.perf_counter() - t0
         results[kind] = res
         out[kind] = _engine_report(res, wall_s=wall)
-        if kind == "paged":
+        if kind.startswith("paged"):
             out[kind]["pool_kv_bytes"] = eng.kv.nbytes
             out[kind]["dense_reserved_kv_bytes"] = \
                 KVPool.dense_reserved_bytes(model, args.slots, args.max_len)
             out[kind]["peak_utilization"] = round(
                 eng.metrics.peak_utilization(), 6)
-    out["token_identical"] = (results["dense"]["outputs"]
-                              == results["paged"]["outputs"])
+            hbm = _decode_hbm_model(eng, args, model)
+            out[kind]["decode_hbm_bytes_per_tick"] = (
+                hbm["kernel_decode_hbm_bytes_per_tick"]
+                if kind == "paged_kernel"
+                else hbm["gather_decode_hbm_bytes_per_tick"])
+            if kind == "paged_kernel":
+                out[kind]["hbm_model"] = hbm
+                out[kind]["kernel_cfg"] = (
+                    eng._kernel_cfg.name() if eng._kernel_cfg else None)
+    out["token_identical"] = (
+        results["dense"]["outputs"] == results["paged"]["outputs"]
+        == results["paged_kernel"]["outputs"])
     return out
 
 
@@ -112,9 +158,15 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=25)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI gate: assert token identity, pool-vs-dense "
-                         "KV bytes, and the utilization floor")
+                    help="CI gate: assert three-way token identity, the "
+                         "kernel arm's zero gather bytes + HBM win, "
+                         "pool-vs-dense KV bytes, and the utilization "
+                         "floor")
     ap.add_argument("--out", default=None, help="write report JSON here")
+    ap.add_argument("--dispatch-table", default=None,
+                    help="write a dispatch_table.json whose "
+                         "paged_attention entry records the winning "
+                         "decode path in its provenance")
     args = ap.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch)
@@ -132,7 +184,7 @@ def main(argv=None):
     }
 
     report = {
-        "schema": 1,
+        "schema": 2,
         "arch": cfg.name,
         "config": {
             "seed": args.seed, "requests": args.requests,
@@ -154,11 +206,15 @@ def main(argv=None):
     else:
         print(text)
 
+    if args.dispatch_table:
+        _write_dispatch_table(args.dispatch_table, report, cfg, args)
+
     if args.smoke:
         for name, tr in report["traces"].items():
             assert tr["token_identical"], \
-                f"{name}: paged outputs diverged from the dense oracle"
-            for kind in ("dense", "paged"):
+                (f"{name}: engine outputs diverged "
+                 f"(dense vs paged vs paged_kernel)")
+            for kind in ("dense", "paged", "paged_kernel"):
                 assert tr[kind]["errors"] == 0, f"{name}/{kind}: errors"
                 assert tr[kind]["requests"] == len(traces[name]), \
                     f"{name}/{kind}: not every request completed"
@@ -170,9 +226,74 @@ def main(argv=None):
                 (f"{name}: peak pool utilization "
                  f"{p['peak_utilization']:.2f} under the "
                  f"{UTILIZATION_FLOOR} floor")
-        print("SMOKE OK: token-identical, pool below dense reservation, "
-              f"utilization >= {UTILIZATION_FLOOR} on both traces")
+            k = tr["paged_kernel"]
+            kc = k["metrics"]["counters"]
+            assert kc["gather_bytes"] == 0, \
+                (f"{name}: kernel path gathered {kc['gather_bytes']}B "
+                 f"of dense view on decode ticks")
+            assert kc["kernel_decode_ticks"] > 0, \
+                f"{name}: kernel path never ran the kernel"
+            assert (k["decode_hbm_bytes_per_tick"]
+                    < p["decode_hbm_bytes_per_tick"]), \
+                (f"{name}: kernel decode HBM "
+                 f"{k['decode_hbm_bytes_per_tick']}B/tick is not below "
+                 f"gather's {p['decode_hbm_bytes_per_tick']}B/tick")
+        print("SMOKE OK: dense = paged = paged_kernel tokens, kernel "
+              "path gathered 0 dense-view bytes and beat the gather "
+              "path's per-tick decode HBM, pool below dense "
+              f"reservation, utilization >= {UTILIZATION_FLOOR} "
+              "on both traces")
     return report
+
+
+def _write_dispatch_table(path, report, cfg, args) -> None:
+    """Publish a valid dispatch table for the benchmarked bucket whose
+    provenance records which decode path won (modeled per-tick decode
+    HBM bytes, lower wins — deterministic, no wall clock)."""
+    from repro.core.families.paged_attention import PagedAttentionProblem
+    from repro.core.tuning import dispatch
+    from repro.kernels.paged_attention.ops import default_config
+
+    pages_per_seq = args.max_len // args.page_size
+    prob = PagedAttentionProblem(
+        batch=args.slots, q_heads=cfg.n_heads, kv_heads=cfg.n_kv_heads,
+        seq_kv=args.max_len, page_size=args.page_size,
+        pool_pages=args.pool_pages, head_dim=cfg.resolved_head_dim,
+        dtype="f32")
+    kcfg = default_config(pages_per_seq)
+    # worst case across traces: the path must win everywhere it serves
+    gather_b = max(t["paged"]["decode_hbm_bytes_per_tick"]
+                   for t in report["traces"].values())
+    kernel_b = max(t["paged_kernel"]["decode_hbm_bytes_per_tick"]
+                   for t in report["traces"].values())
+    winner = "kernel" if kernel_b < gather_b else "gather"
+    hbm_per_s = 819e9                      # v5p per-chip HBM BW
+    entry = {
+        "config": {f: getattr(kcfg, f) for f in
+                   ("block_pages",)},
+        "problem": {f: getattr(prob, f) for f in
+                    ("batch", "q_heads", "kv_heads", "seq_kv",
+                     "page_size", "pool_pages", "head_dim", "dtype")},
+        "est_ms": round(kernel_b / hbm_per_s * 1e3, 9),
+        "baseline_ms": round(gather_b / hbm_per_s * 1e3, 9),
+        "speedup": round(gather_b / max(kernel_b, 1), 6),
+        "provenance": {
+            "job": f"serving:{dispatch.shape_bucket(prob)}",
+            "seed": args.seed,
+            "decode_path": winner,
+            "gather_decode_hbm_bytes_per_tick": gather_b,
+            "kernel_decode_hbm_bytes_per_tick": kernel_b,
+        },
+    }
+    table = dispatch.DispatchTable({
+        "version": dispatch.VERSION,
+        "entries": {"paged_attention":
+                    {dispatch.shape_bucket(prob): entry}},
+    })
+    table.save(path)
+    print(f"dispatch table -> {path}  "
+          f"(decode_path={winner}, kernel {kernel_b}B vs "
+          f"gather {gather_b}B per decode tick)")
 
 
 if __name__ == "__main__":

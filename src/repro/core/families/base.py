@@ -186,6 +186,17 @@ class KernelFamily:
     # repro.core.tuning.jobs.enumerate_jobs(sweep=True); the example
     # problem is always swept too, so the grid only needs the neighbors.
     sweep_problems: Optional[Callable] = None
+    # config fields the traced TileProgram actually depends on (ops,
+    # extents, Exprs).  When set, the verify engine keys its program
+    # memo on this projection of the config instead of the full config:
+    # re-binding a config that differs only in trace-irrelevant knobs
+    # (e.g. gemm's MXU ``precision``, which enters the alloc dtype and
+    # the structural stage — both read the exact config — but never an
+    # analyzed Expr) reuses the traced program outright, skipping the
+    # Python trace.  None (default) keys on the full config.  Declaring
+    # a field that *does* shape the trace here is unsound — the family
+    # owns the claim, tests/test_verify_engine.py spot-checks it.
+    trace_fields: Optional[Tuple[str, ...]] = None
     # (prob) -> costs.CostEstimate: the analytic speed-of-light bound —
     # ideal flops over peak_flops(dtype) vs minimal one-pass HBM traffic
     # over HBM_BW (repro.core.costs.sol_estimate), independent of any

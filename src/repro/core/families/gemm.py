@@ -303,6 +303,12 @@ FAMILY = register(KernelFamily(
     example=_example,
     sweep_problems=_sweep,
     sol_bound=gemm_sol,
+    # the traced program's structure and Exprs depend on the tile/grid
+    # knobs only: ``precision`` enters the scratch alloc dtype (ignored
+    # by tag propagation) and the structural VMEM check (which reads the
+    # exact config) — so configs differing only in precision re-bind the
+    # same traced program
+    trace_fields=("bm", "bn", "bk", "split_k", "stagger_k"),
 ))
 
 

@@ -25,6 +25,12 @@ KV tiles it gathers:
     token position (what masking/RoPE consume); computing positions from
     the physical page index is caught by conformity with the gathered
     tile's logical tag;
+  * **length-gate conformity** — the per-sequence logical length rides as
+    a second uninterpreted application ``seq_len(b)`` and every softmax
+    weight entering the accumulator carries (position, length)
+    provenance that must conform with the length gate applied to it: an
+    off-by-one mask or a gate hoisted to the block's first page (so
+    trailing null pages leak) yields a concrete counterexample;
   * **carried-output stability** — the online-softmax accumulator must
     not depend on the sequential page axis.
 
@@ -94,6 +100,14 @@ def build_paged_attention_program(cfg: PagedAttentionConfig,
                          step re-gathers its first page;
     "pos_from_physical"— score positions computed from the physical page
                          index instead of the logical one;
+    "mask_off_by_one"  — the length gate admits one position past the
+                         sequence's logical length (<= len instead of
+                         < len);
+    "null_page_leak"   — the length gate is computed once per page block
+                         (hoisted to the block's first page), so the
+                         block's trailing pages — exactly where the null
+                         pages sit — are gated with the wrong bound and
+                         leak into the accumulator;
     "acc_depends_page" — the carried output tagged with the page axis.
     """
     if prob.seq_kv % prob.page_size != 0:
@@ -135,6 +149,9 @@ def build_paged_attention_program(cfg: PagedAttentionConfig,
     bt = lambda lp: app("bt", b * NP + lp, bt_extent)
     vbt = (lambda lp: app("bt_stale", b * NP + lp, P)) \
         if inject_bug == "v_stale_table" else bt
+    # the per-sequence logical length: runtime routing data like the
+    # table itself, modeled as an uninterpreted application in [0, S]
+    ln = app("seq_len", b, S + 1)
 
     q = p.squeeze(p.load("Q", (b, h, 0, 0), (1, 1, 1, D)), keep=(2,))
 
@@ -188,7 +205,28 @@ def build_paged_attention_program(cfg: PagedAttentionConfig,
         # the weighted value consumes the same logical positions
         p.assert_conform(pt, v_log, bind=((1, 0),),
                          components=((1, 2), (1, 2)))
-        o_part = p.matmul(pt, v_log,
+
+        # invariant 6 — length-gate conformity: the softmax weight that
+        # reaches the accumulator carries (position, length) provenance
+        # and must conform with the gate that zeroed it.  Positions at or
+        # beyond seq_len(b) — every null-page position included — are
+        # provably gated before the accumulator sees them.
+        if inject_bug == "mask_off_by_one":
+            # gate admits position len(b) itself (<= instead of <)
+            gate_pos = lambda i, j, _o=pos0: make_tag(b, _o + j + 1, ln)
+        else:
+            gate_pos = lambda i, j, _o=pos0: make_tag(b, _o + j, ln)
+        if inject_bug == "null_page_leak" and u > 0:
+            gate = hoisted_gate      # block's first-page gate reused
+        else:
+            gate = p.elementwise("len_gate", st, retag=gate_pos)
+            hoisted_gate = gate
+        ptg = p.elementwise(
+            "apply_len_gate", pt, gate,
+            retag=lambda i, j, _o=pos0: make_tag(b, hk, _o + j, ln))
+        p.assert_conform(ptg, gate, bind=((0, 0), (1, 1)),
+                         components=((0, 2, 3), (0, 1, 2)))
+        o_part = p.matmul(ptg, v_log,
                           retag=lambda i, c: make_tag(bh, c))
         if inject_bug == "acc_depends_page":
             acc_tag = lambda i, c: make_tag(bh, Expr.of(pg), c)
@@ -288,6 +326,7 @@ SKILLS = (
 
 INJECTABLE_BUGS = ("page_oob", "v_stale_table", "wrong_kv_head",
                    "page_skip", "page_replay", "pos_from_physical",
+                   "mask_off_by_one", "null_page_leak",
                    "acc_depends_page")
 
 
@@ -298,6 +337,7 @@ def compatible_bugs(cfg: PagedAttentionConfig,
         menu.remove("wrong_kv_head")
     if cfg.block_pages < 2:
         menu.remove("page_replay")   # a single page per step cannot replay
+        menu.remove("null_page_leak")  # no trailing page to mis-gate
     if prob.pages_per_seq // cfg.block_pages < 2:
         menu.remove("page_skip")     # one block IS the whole range
     return menu
@@ -313,18 +353,27 @@ BUG_SIGNATURES = (
                  ("assert_in_range(physical page",)),
     BugSignature("v_stale_table", ("solver",),
                  ("assert_conform(sq_4,sq_6)",
-                  "assert_conform(sq_14,sq_16)")),
+                  "assert_conform(sq_16,sq_18)")),
     BugSignature("wrong_kv_head", ("solver",),
                  ("assert_conform(sq_1,sq_4)",
-                  "assert_conform(sq_1,sq_14)")),
+                  "assert_conform(sq_1,sq_16)")),
     BugSignature("page_skip", ("solver",),
                  ("assert_coverage(KV_READ)",)),
     BugSignature("page_replay", ("solver",),
                  ("assert_disjoint(KV_READ)",)),
     BugSignature("pos_from_physical", ("solver",),
                  ("assert_conform(mm_10,e_7)", "assert_conform(e_11,e_8)",
-                  "assert_conform(mm_20,e_17)",
-                  "assert_conform(e_21,e_18)")),
+                  "assert_conform(mm_22,e_19)",
+                  "assert_conform(e_23,e_20)")),
+    # the off-by-one gate fails the gate conformity at *every* page of
+    # the block; the hoisted (null-page-leak) gate only at pages u>0 —
+    # and the hoisting removes iteration-u gate ops, so the trailing
+    # conform pairs the u>0 weight with the *first* page's gate tile
+    BugSignature("mask_off_by_one", ("solver",),
+                 ("assert_conform(e_13,e_12)",
+                  "assert_conform(e_25,e_24)")),
+    BugSignature("null_page_leak", ("solver",),
+                 ("assert_conform(e_24,e_12)",)),
     BugSignature("acc_depends_page", ("analysis",), ("assert_stable(",)),
 )
 
@@ -350,6 +399,14 @@ def reference_check(cfg: PagedAttentionConfig,
         rng.permutation(P)[:B * NP].reshape(B, NP), jnp.int32)
     o = paged_decode(q, kp, vp, table, cfg=cfg, interpret=True)
     w = paged_decode_ref(q, kp, vp, table)
+    if not np.allclose(np.asarray(o), np.asarray(w),
+                       rtol=2e-3, atol=2e-3):
+        return False
+    # ragged pass: empty, mid-page, and full-span sequences
+    lens = jnp.asarray([0, NP * PS // 2 + 1][:B] + [NP * PS] * (B - 2),
+                       jnp.int32)[:B]
+    o = paged_decode(q, kp, vp, table, lens, cfg=cfg, interpret=True)
+    w = paged_decode_ref(q, kp, vp, table, lens)
     return bool(np.allclose(np.asarray(o), np.asarray(w),
                             rtol=2e-3, atol=2e-3))
 

@@ -647,22 +647,39 @@ class VerificationEngine:
         # a known skeleton (the constraint cache then re-proves only the
         # assertions whose expressions actually changed).
         self._skeletons: set = set()
+        # exact (family, cfg, prob, bug) keys whose program was ever
+        # requested — a program-memo hit for an *unseen* exact key is a
+        # trace skip enabled purely by the family's trace_fields
+        # projection (dict as FIFO-bounded ordered set)
+        self._trace_seen: Dict[tuple, None] = {}
         self.verify_calls = 0
         self.result_hits = 0
         self.program_hits = 0
         self.full_builds = 0
         self.skeleton_rebinds = 0
+        self.trace_skips = 0
 
     def _program(self, fam, family: str, cfg, prob, inject_bug):
-        """Incremental program build: exact-trace memo first, then trace
-        and intern the structural skeleton for the accounting above."""
-        key = (family, cfg, prob, inject_bug)
+        """Incremental program build: exact-trace memo first (keyed on
+        the family's ``trace_fields`` projection of the config when it
+        declares one — configs differing only in trace-irrelevant knobs
+        share one traced program), then trace and intern the structural
+        skeleton for the accounting above."""
+        tf = fam.trace_fields
+        cfg_key = (tuple(getattr(cfg, f) for f in tf)
+                   if tf is not None else cfg)
+        key = (family, cfg_key, prob, inject_bug)
+        exact = (family, cfg, prob, inject_bug)
         if self.use_cache:
             prog = self._programs.get(key)
             if prog is not None:
                 self.program_hits += 1
+                if tf is not None and exact not in self._trace_seen:
+                    self.trace_skips += 1
+                    self._mark_seen(exact)
                 return prog
         prog = fam.build_program(cfg, prob, inject_bug=inject_bug)
+        self._mark_seen(exact)
         sig = (family, prob, inject_bug, prog.structure_sig())
         if sig in self._skeletons:
             self.skeleton_rebinds += 1
@@ -674,6 +691,11 @@ class VerificationEngine:
                 self._programs.pop(next(iter(self._programs)))
             self._programs[key] = prog
         return prog
+
+    def _mark_seen(self, exact: tuple) -> None:
+        if len(self._trace_seen) >= self.MAX_PROGRAMS:
+            self._trace_seen.pop(next(iter(self._trace_seen)))
+        self._trace_seen[exact] = None
 
     # -- the single entry point ---------------------------------------------
     def verify(self, family: str, cfg, prob, *,
@@ -734,6 +756,7 @@ class VerificationEngine:
             "program_hits": self.program_hits,
             "full_builds": self.full_builds,
             "skeleton_rebinds": self.skeleton_rebinds,
+            "trace_skips": self.trace_skips,
             "constraint_lookups": c.lookups,
             "constraint_hits": c.hits,
             "canonical_hits": c.canonical_hits,
@@ -748,6 +771,7 @@ class VerificationEngine:
         self.program_hits = 0
         self.full_builds = 0
         self.skeleton_rebinds = 0
+        self.trace_skips = 0
         c = self.constraints
         c.lookups = c.hits = c.misses = 0
         c.persisted_hits = c.canonical_hits = 0

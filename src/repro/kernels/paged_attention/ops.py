@@ -36,14 +36,18 @@ def _validate(cfg: PagedAttentionConfig,
 
 
 def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
-                 v_pages: jnp.ndarray, table: jnp.ndarray, *,
+                 v_pages: jnp.ndarray, table: jnp.ndarray,
+                 lengths: Optional[jnp.ndarray] = None, *,
                  cfg: Optional[PagedAttentionConfig] = None,
                  scale=None, interpret: bool = False,
                  use_kernel: bool = True) -> jnp.ndarray:
-    """Validated paged decode.  ``use_kernel=False`` falls back to the
-    dense oracle (hosts without Pallas lowering support)."""
+    """Validated paged decode.  ``lengths`` (B,) masks each sequence's
+    scores beyond its logical length (None ⇒ full NP·PS span).
+    ``use_kernel=False`` falls back to the dense oracle (hosts without
+    Pallas lowering support)."""
     if not use_kernel:
-        return paged_decode_ref(q, k_pages, v_pages, table, scale=scale)
+        return paged_decode_ref(q, k_pages, v_pages, table, lengths,
+                                scale=scale)
     B, Hq, _, D = q.shape
     P, Hkv, PS, _ = k_pages.shape
     NP = int(table.shape[1])
@@ -53,8 +57,27 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
         head_dim=int(D), dtype=_short_dtype(q.dtype))
     cfg = cfg or configured("paged_attention", prob) or default_config(NP)
     _validate(cfg, prob)
-    return _paged_decode_kernel(q, k_pages, v_pages, table, cfg=cfg,
-                                scale=scale, interpret=interpret)
+    return _paged_decode_kernel(q, k_pages, v_pages, table, lengths,
+                                cfg=cfg, scale=scale, interpret=interpret)
+
+
+def paged_decode_pool(q: jnp.ndarray, kv_leaves, table: jnp.ndarray,
+                      lengths: jnp.ndarray, *,
+                      cfg: Optional[PagedAttentionConfig] = None,
+                      scale=None, interpret: bool = False) -> jnp.ndarray:
+    """Batched serving entry: decode attention straight off one layer's
+    page-pool leaves — ``(pool, block_tables, lengths)`` exactly as
+    :class:`repro.serve.pool.KVPool` holds them, no dense gather.
+
+    ``kv_leaves`` is the layer's ``{"k": (P, HK, PS, D), "v": ...}``
+    pool dict, ``table`` the engine's (B, NP) block tables and
+    ``lengths`` the (B,) logical lengths (0 for inactive rows — their
+    output is a zero row, never a null-page read).  Same ARGUS gate as
+    :func:`paged_decode`.
+    """
+    return paged_decode(q, kv_leaves["k"], kv_leaves["v"], table,
+                        lengths, cfg=cfg, scale=scale,
+                        interpret=interpret)
 
 
 def _short_dtype(dt) -> str:
@@ -72,7 +95,7 @@ def default_config(pages_per_seq: int) -> PagedAttentionConfig:
 def validate_block_tables(tables, *, model=None, page_size: int,
                           pool_pages: int, q_heads: int = None,
                           kv_heads: int = None, head_dim: int = None,
-                          dtype: str = "f32",
+                          dtype: str = "f32", lengths=None,
                           cfg: Optional[PagedAttentionConfig] = None
                           ) -> Optional[PagedAttentionConfig]:
     """ARGUS gate for a serving engine's block tables.
@@ -88,6 +111,15 @@ def validate_block_tables(tables, *, model=None, page_size: int,
     concrete table contents are then range-checked against the pool, the
     runtime mirror of the family's ``assert_in_range`` analysis catch.
 
+    ``lengths`` (per-sequence logical token counts) adds the mapped-
+    length consistency check: each row must map exactly
+    ``ceil(length / page_size)`` physical pages as a null-padded prefix
+    (physical page 0 is the reserved null page).  A row holding fewer
+    pages than its length needs — the boundary-page bug: length crosses
+    into page k but page k was never mapped — or more, or a mapped page
+    *after* a null hole, is rejected before any kernel or gather reads
+    through it.
+
     Head geometry comes from ``model.cfg`` when a model is given;
     MLA-cache models have no GQA head mapping to verify, so they get the
     concrete range check only.  Returns the verified config (None when
@@ -100,6 +132,26 @@ def validate_block_tables(tables, *, model=None, page_size: int,
         raise InvariantViolation(
             f"block table maps physical page {int(t.max())} outside the "
             f"{pool_pages}-page pool")
+    if lengths is not None:
+        lens = np.asarray(lengths).astype(np.int64)
+        if lens.shape != (B,):
+            raise InvariantViolation(
+                f"lengths shape {lens.shape} does not match the "
+                f"{B}-row block table")
+        mapped = (t != 0).sum(axis=1)              # page 0 == null page
+        prefix = (t != 0)[:, ::-1].cumsum(axis=1)[:, ::-1] > 0
+        holes = ((t == 0) & prefix).any(axis=1)
+        need = -(-np.maximum(lens, 0) // page_size)  # ceil
+        for b in range(B):
+            if holes[b]:
+                raise InvariantViolation(
+                    f"block table row {b} maps a page after a null hole "
+                    f"— logical pages must be a contiguous prefix")
+            if int(mapped[b]) != int(need[b]):
+                raise InvariantViolation(
+                    f"block table row {b} maps {int(mapped[b])} pages "
+                    f"but logical length {int(lens[b])} needs "
+                    f"{int(need[b])} ({page_size}-token pages)")
     mcfg = getattr(model, "cfg", None)
     if mcfg is not None and getattr(mcfg, "attn_type", None) != "mla":
         q_heads = q_heads or mcfg.n_heads

@@ -12,8 +12,12 @@ def gather_cache(pages: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     return g.transpose(0, 2, 1, 3, 4).reshape(B, HK, NP * PS, D)
 
 
-def paged_decode_ref(q, k_pages, v_pages, table, *, scale=None):
-    """q: (B, Hq, 1, D); pools (P, HK, PS, D); table (B, NP)."""
+def paged_decode_ref(q, k_pages, v_pages, table, lengths=None, *,
+                     scale=None):
+    """q: (B, Hq, 1, D); pools (P, HK, PS, D); table (B, NP); optional
+    lengths (B,) logical tokens per sequence — positions at or beyond a
+    sequence's length (every null-page position included) are masked out
+    of the softmax; a zero-length sequence yields a zero output row."""
     B, Hq, _, D = q.shape
     HK = k_pages.shape[1]
     G = Hq // HK
@@ -24,7 +28,15 @@ def paged_decode_ref(q, k_pages, v_pages, table, *, scale=None):
     vq = jnp.repeat(v, G, axis=1)
     s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
                    kq.astype(jnp.float32)) * scale
-    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
-    p = p / p.sum(axis=-1, keepdims=True)
+    if lengths is not None:
+        S = kq.shape[2]
+        mask = (jnp.arange(S)[None, None, None, :]
+                < lengths.astype(jnp.int32)[:, None, None, None])
+        s = jnp.where(mask, s, -1e30)
+        p = jnp.exp(s - s.max(axis=-1, keepdims=True)) * mask
+    else:
+        p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    den = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(den == 0.0, 1.0, den)
     o = jnp.einsum("bhqs,bhsd->bhqd", p, vq.astype(jnp.float32))
     return o.astype(q.dtype)

@@ -104,6 +104,53 @@ def apply_block(p: Dict, x: jnp.ndarray, positions, cfg: ModelConfig, *,
     return x + f, aux, cache
 
 
+def _paged_self_attention(p: Dict, x: jnp.ndarray, positions, cfg,
+                          leaf: Dict, tables, lengths, *, kernel_cfg,
+                          interpret: bool) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token decode attention straight off one layer's page-pool
+    leaf — scatter the fresh K/V into their (physical page, offset) homes,
+    then run the length-masked paged-attention kernel over the pool.  No
+    dense gather ever materializes.  Inactive rows (``lengths == 0``) get
+    their write redirected past the pool and dropped, so the reserved
+    null page is never written.  Returns (attn output (B,1,D_model),
+    updated leaf)."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    q, k, v = qkv_project(p, x, cfg, positions)        # k/v: (B, HK, 1, hd)
+    B = x.shape[0]
+    P, _, PS, _ = leaf["k"].shape
+    pos = positions[:, 0]
+    active = lengths > 0
+    phys = jnp.where(active,
+                     tables[jnp.arange(B), pos // PS].astype(jnp.int32),
+                     jnp.int32(P))                     # P == out of range
+    off = pos % PS
+    leaf = dict(leaf)
+    leaf["k"] = leaf["k"].at[phys, :, off].set(
+        k[:, :, 0, :].astype(leaf["k"].dtype), mode="drop")
+    leaf["v"] = leaf["v"].at[phys, :, off].set(
+        v[:, :, 0, :].astype(leaf["v"].dtype), mode="drop")
+    o = pa_ops.paged_decode(q, leaf["k"], leaf["v"], tables, lengths,
+                            cfg=kernel_cfg, interpret=interpret)
+    return attn_out(p, o), leaf
+
+
+def apply_block_paged(p: Dict, x: jnp.ndarray, positions, cfg, leaf: Dict,
+                      tables, lengths, *, moe_layer: bool, kernel_cfg,
+                      interpret: bool):
+    h = apply_norm(p["ln_attn"], x, cfg)
+    o, leaf = _paged_self_attention(p["attn"], h, positions, cfg, leaf,
+                                    tables, lengths,
+                                    kernel_cfg=kernel_cfg,
+                                    interpret=interpret)
+    x = x + o
+    h = apply_norm(p["ln_ffn"], x, cfg)
+    if moe_layer:
+        f, _ = apply_moe(p["moe"], h, cfg)
+    else:
+        f = apply_ffn(p["ffn"], h, cfg)
+    return x + f, leaf
+
+
 class TransformerLM:
     """Decoder-only LM facade (families: dense, moe, vlm)."""
 
@@ -245,6 +292,50 @@ class TransformerLM:
         new_cache["blocks"] = new_blocks
         x = apply_norm(params["ln_f"], x, cfg)
         return unembed(params["embed"], x, cfg), new_cache
+
+    def decode_step_paged(self, params: Dict, pool: Dict,
+                          tables: jnp.ndarray, tokens: jnp.ndarray,
+                          pos: jnp.ndarray, lengths: jnp.ndarray, *,
+                          kernel_cfg=None, interpret: bool = False
+                          ) -> Tuple[jnp.ndarray, Dict]:
+        """Single-token decode straight off the page pool: no dense
+        gather.  ``pool`` is the :class:`repro.serve.pool.KVPool` storage
+        tree (per-leaf physical-page arrays), ``tables`` the (B, NP)
+        block tables, ``pos`` the (B,) write positions and ``lengths``
+        the (B,) logical lengths *including* the token being written
+        (0 for inactive rows — they write nothing and read nothing).
+        Each layer scatters its fresh K/V to the (physical page, offset)
+        home and attends through the length-masked paged-attention
+        kernel (``kernel_cfg`` from the fleet dispatch table).  Returns
+        (logits (B, 1, V), updated pool).  GQA caches only — MLA state
+        is positionless and stays on the gather path."""
+        cfg = self.cfg
+        if cfg.attn_type == "mla":
+            raise ValueError("paged kernel decode requires a GQA cache")
+        x = embed(params["embed"], tokens, cfg)
+        positions = pos[:, None]
+        new_pool: Dict = dict(pool)
+        for i in range(self.n_dense_front):
+            x, new_pool[f"front_{i}"] = apply_block_paged(
+                params[f"front_{i}"], x, positions, cfg,
+                pool[f"front_{i}"], tables, lengths, moe_layer=False,
+                kernel_cfg=kernel_cfg, interpret=interpret)
+
+        is_moe = cfg.moe is not None
+
+        def body(x, layer):
+            layer_params, leaf = layer
+            x, new_leaf = apply_block_paged(
+                layer_params, x, positions, cfg, leaf, tables, lengths,
+                moe_layer=is_moe, kernel_cfg=kernel_cfg,
+                interpret=interpret)
+            return x, new_leaf
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], pool["blocks"]))
+        new_pool["blocks"] = new_blocks
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), new_pool
 
     def prefill(self, params: Dict, tokens: jnp.ndarray, max_len: int
                 ) -> Tuple[jnp.ndarray, Dict]:

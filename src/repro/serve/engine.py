@@ -22,6 +22,21 @@ invariants via :func:`repro.kernels.paged_attention.ops
 installed fleet ``dispatch_table.json`` — the engine stays the flagship
 consumer of the tuner's output.
 
+``decode_path="kernel"`` replaces the per-tick decode gather with the
+length-masked paged-attention Pallas kernel run straight over the pool:
+each decode tick scatters the fresh K/V inside
+:meth:`~repro.models.transformer.TransformerLM.decode_step_paged` and
+attends through ``(pool, block_tables, lengths)`` exactly as the engine
+holds them — zero dense-view bytes materialized (the ``gather_bytes``
+counter stays at 0 on decode ticks).  The kernel config is resolved per
+shape bucket from the installed dispatch table and statically verified
+once per batch geometry; when no verified config exists for the bucket
+(or the model's cache cannot be paged-attended, e.g. MLA) the tick
+falls back to the gather path.  Prefill chunks stay on the gather path
+under both modes.  Per-sequence ``lengths`` (the token being written
+included) are re-validated against each row's mapped page count every
+kernel tick — the boundary-page consistency check on the hot path.
+
 Kernel configs come from the fleet tuner's ``dispatch_table.json``
 (:mod:`repro.core.tuning.dispatch`): pass ``dispatch_table=`` (a path or
 a loaded table) and the engine installs it process-wide, so every
@@ -204,12 +219,15 @@ class PagedServingEngine:
                  page_size: int = 16, max_batch: int = 8,
                  max_len: int = 512, prefill_chunk: int = 32,
                  eos_id: int = 1, greedy: bool = True,
-                 dispatch_table=None):
+                 dispatch_table=None, decode_path: str = "gather"):
         if max_len % page_size:
             raise ValueError(f"max_len {max_len} must be a multiple of "
                              f"page_size {page_size}")
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if decode_path not in ("gather", "kernel"):
+            raise ValueError(f"decode_path must be 'gather' or 'kernel', "
+                             f"got {decode_path!r}")
         self.model = model
         self.params = params
         self.page_size = page_size
@@ -235,6 +253,16 @@ class PagedServingEngine:
         self._admission_stamp = 0
         self._next_seq_id = 0
         self._table_sig = None
+        # kernel decode path: config verified per batch geometry, pallas
+        # interpret mode off the TPU, dense-view bytes for the gather-
+        # path HBM accounting
+        self.decode_path = decode_path
+        self._kernel_sig = None
+        self._kernel_cfg = None
+        self._kernel_fn = None
+        self._interpret = jax.default_backend() != "tpu"
+        self._view_bytes = KVPool.dense_reserved_bytes(
+            model, max_batch, max_len)
 
     # -- API ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -399,6 +427,64 @@ class PagedServingEngine:
                 "finished": finished}
 
     # -- decode --------------------------------------------------------------
+    def _kernel_config(self, tables: np.ndarray):
+        """Resolve + statically verify the kernel config for this batch
+        geometry (memoized on it, like ``_gather``'s gate).  None when
+        the bucket has no verified config or the cache cannot be
+        paged-attended (MLA) — the tick then falls back to the gather
+        path."""
+        sig = (tables.shape, self.alloc.n_pages)
+        if sig != self._kernel_sig:
+            from repro.kernels.paged_attention.ops import (
+                InvariantViolation, validate_block_tables)
+            self._kernel_sig = sig
+            self._kernel_fn = None
+            if not hasattr(self.model, "decode_step_paged"):
+                self._kernel_cfg = None
+                return None
+            try:
+                self._kernel_cfg = validate_block_tables(
+                    tables, model=self.model, page_size=self.page_size,
+                    pool_pages=self.alloc.n_pages)
+            except InvariantViolation:
+                self._kernel_cfg = None
+        return self._kernel_cfg
+
+    def _decode_kernel(self, rows, tokens, pos_vec):
+        """Kernel-path decode tick: no gather, no dense view.  The fresh
+        K/V scatter happens inside ``decode_step_paged``; inactive rows
+        carry null tables and length 0.  Returns logits, or None when no
+        verified config exists for this geometry (gather fallback)."""
+        tables = self._tables()
+        cfg = self._kernel_config(tables)
+        if cfg is None:
+            return None
+        # kernel tables: only decoding rows expose their pages — a row
+        # mid-prefill holds pages for tokens not yet written, which the
+        # mapped-length consistency check (rightly) rejects
+        kt = np.zeros_like(tables)
+        lengths = np.zeros((self.max_batch,), np.int32)
+        for i, s in rows:
+            kt[i] = tables[i]
+            lengths[i] = s.pos + 1     # the token being written included
+        # hot-path concrete gate: range + mapped-length consistency (each
+        # row maps exactly ceil(length/page_size) pages, no null holes)
+        from repro.kernels.paged_attention.ops import validate_block_tables
+        validate_block_tables(kt, page_size=self.page_size,
+                              pool_pages=self.alloc.n_pages,
+                              lengths=lengths)
+        if self._kernel_fn is None:
+            kc, interp, model = cfg, self._interpret, self.model
+            self._kernel_fn = jax.jit(
+                lambda p, pool, t, tok, pos, lens:
+                model.decode_step_paged(p, pool, t, tok, pos, lens,
+                                        kernel_cfg=kc, interpret=interp))
+        logits, self.kv.storage = self._kernel_fn(
+            self.params, self.kv.storage, jnp.asarray(kt),
+            jnp.asarray(tokens), jnp.asarray(pos_vec),
+            jnp.asarray(lengths))
+        return logits
+
     def _decode_tick(self) -> Dict[str, int]:
         rows = [(i, s) for i, s in enumerate(self.rows)
                 if s is not None and s.prefilled and not s.req.done]
@@ -418,11 +504,18 @@ class PagedServingEngine:
         for i, s in rows:
             tokens[i, 0] = s.req.output[-1]
             pos_vec[i] = s.pos
-        view = self._gather()
-        logits, view = self._decode(self.params, view,
-                                    jnp.asarray(tokens),
-                                    jnp.asarray(pos_vec))
-        self._scatter(view, {i: (s.pos, 1) for i, s in rows})
+        gather_bytes = kernel_ticks = 0
+        logits = (self._decode_kernel(rows, tokens, pos_vec)
+                  if self.decode_path == "kernel" else None)
+        if logits is None:
+            view = self._gather()
+            logits, view = self._decode(self.params, view,
+                                        jnp.asarray(tokens),
+                                        jnp.asarray(pos_vec))
+            self._scatter(view, {i: (s.pos, 1) for i, s in rows})
+            gather_bytes = self._view_bytes
+        else:
+            kernel_ticks = 1
         finished = 0
         for i, s in rows:
             nxt = int(jnp.argmax(logits[i, -1]))
@@ -439,7 +532,8 @@ class PagedServingEngine:
                 self.rows[i] = None
                 finished += 1
         return {"decode_tokens": len(rows), "finished": finished,
-                "preempted": preempted}
+                "preempted": preempted, "gather_bytes": gather_bytes,
+                "kernel_decode_ticks": kernel_ticks}
 
     def _scatter(self, view: Dict, slabs: Dict[int, tuple]) -> None:
         """slabs: row -> (start position, n tokens written)."""
@@ -475,7 +569,9 @@ class PagedServingEngine:
             decode_tokens=dec["decode_tokens"],
             admitted=adm["admitted"],
             finished=pre["finished"] + dec["finished"],
-            preempted=pre["preempted"] + dec["preempted"])
+            preempted=pre["preempted"] + dec["preempted"],
+            gather_bytes=dec.get("gather_bytes", 0),
+            kernel_decode_ticks=dec.get("kernel_decode_ticks", 0))
         return n_active
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

@@ -17,12 +17,12 @@ from __future__ import annotations
 
 from typing import Dict
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # The snapshot schema, by example.  docs/serving.md embeds this block
 # verbatim (test_docs enforces it) — update both together.
 SCHEMA_EXAMPLE = {
-    "schema": 1,
+    "schema": 2,
     "kind": "paged",            # "dense" | "paged"
     "capacity": 24,             # slots (dense) | usable pages (paged)
     "counters": {               # monotonic, cumulative
@@ -32,6 +32,10 @@ SCHEMA_EXAMPLE = {
         "preempted": 1,         # pool-pressure evictions (paged only)
         "prefill_tokens": 96,   # prompt tokens written to the cache
         "decode_tokens": 118,   # generated tokens written to the cache
+        "gather_bytes": 4096,   # decode-tick dense-view bytes gathered
+                                # (kernel-path decode gathers none)
+        "kernel_decode_ticks": 9,  # decode ticks served by the paged-
+                                   # attention kernel, no dense view
     },
     "gauges": {                 # last recorded tick
         "queue_depth": 2,
@@ -46,7 +50,8 @@ SCHEMA_EXAMPLE = {
 }
 
 _COUNTERS = ("ticks", "admitted", "finished", "preempted",
-             "prefill_tokens", "decode_tokens")
+             "prefill_tokens", "decode_tokens", "gather_bytes",
+             "kernel_decode_ticks")
 _GAUGES = ("queue_depth", "active", "occupancy")
 
 
@@ -63,7 +68,8 @@ class ServingMetrics:
     def record_tick(self, *, queue_depth: int, active: int, occupancy: int,
                     prefill_tokens: int = 0, decode_tokens: int = 0,
                     admitted: int = 0, finished: int = 0,
-                    preempted: int = 0) -> None:
+                    preempted: int = 0, gather_bytes: int = 0,
+                    kernel_decode_ticks: int = 0) -> None:
         c = self.counters
         c["ticks"] += 1
         c["admitted"] += admitted
@@ -71,6 +77,8 @@ class ServingMetrics:
         c["preempted"] += preempted
         c["prefill_tokens"] += prefill_tokens
         c["decode_tokens"] += decode_tokens
+        c["gather_bytes"] += gather_bytes
+        c["kernel_decode_ticks"] += kernel_decode_ticks
         g = {"queue_depth": int(queue_depth), "active": int(active),
              "occupancy": int(occupancy)}
         self.gauges = g

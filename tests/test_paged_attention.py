@@ -63,8 +63,53 @@ class TestIndirectionInvariants:
         assert "wrong_kv_head" not in FAM.bugs_for(CFG, mha)
         single = FAM.config_cls(block_pages=1)
         assert "page_replay" not in FAM.bugs_for(single, PROB)
+        # the hoisted-gate fault needs a second page in the block to leak
+        assert "null_page_leak" not in FAM.bugs_for(single, PROB)
+        assert "null_page_leak" in FAM.bugs_for(CFG, PROB)
         whole = FAM.config_cls(block_pages=8)   # 8 pages = whole range
         assert "page_skip" not in FAM.bugs_for(whole, PROB)
+
+    @pytest.mark.parametrize("bug", ["mask_off_by_one", "null_page_leak"])
+    def test_length_gate_faults_yield_solver_counterexamples(self, bug):
+        """The two length-mask faults break the length-gate conformity
+        assertion with a concrete counterexample at the solver stage —
+        stage-attributed through the standard engine, like every other
+        entry in the fault menu."""
+        eng = VerificationEngine()
+        res = eng.verify("paged_attention", CFG, PROB, inject_bug=bug)
+        assert not res.hard_ok
+        bad = [f for f in res.violations if f.stage == "solver"
+               and f.counterexample is not None]
+        assert bad, [f.assertion_id for f in res.violations]
+        # a concrete witness: either a variable assignment or a
+        # constant-difference disproof (hoisted gate: off by a whole page)
+        ce = bad[0].counterexample
+        assert ce.env or ce.detail, "no concrete witness"
+        assert bad[0].repair_hint
+        # only the length-gate conformity assertions fire — the page
+        # indirection/coverage invariants stay proven
+        assert all("assert_conform" in f.assertion_id
+                   for f in res.violations), \
+            [f.assertion_id for f in res.violations]
+
+    def test_length_gate_fault_signatures_are_registry_exact(self):
+        """Registry-parametrized ground truth for the new faults: the
+        declared BugSignature matches the emitted feedback EXACTLY (its
+        own assertion at its own stage), on the fixture shape and on the
+        family example shape."""
+        from repro.core.families.base import MATCH_EXACT
+        eng = VerificationEngine()
+        ex_cfg, ex_prob = FAM.example()
+        for cfg, prob in ((CFG, PROB), (ex_cfg, ex_prob)):
+            for bug in ("mask_off_by_one", "null_page_leak"):
+                if bug not in FAM.bugs_for(cfg, prob):
+                    continue
+                sig = next(s for s in FAM.bug_signatures if s.bug == bug)
+                res = eng.verify("paged_attention", cfg, prob,
+                                 inject_bug=bug)
+                assert any(
+                    sig.specificity(f.stage, f.assertion_id) == MATCH_EXACT
+                    for f in res.violations), (bug, cfg, prob)
 
     def test_structural_capacity_check(self):
         tiny_pool = FAM.problem_cls(2, 8, 2, 1024, 128, 8, 128)
@@ -94,6 +139,59 @@ class TestOracle:
     @pytest.mark.slow
     def test_interpret_mode_matches_dense_decode(self):
         assert FAM.reference_check(CFG, PROB)
+
+    def test_ragged_lengths_match_the_masked_oracle(self):
+        """Interpret-mode kernel vs the masked dense oracle across a
+        ragged length vector: zero-length (inactive row), mid-page,
+        exact page boundary, boundary+1, and the full span."""
+        import jax.numpy as jnp
+        from repro.kernels.paged_attention import (paged_decode_ref,
+                                                   default_config)
+        from repro.kernels.paged_attention.paged_attention import \
+            paged_decode as kernel
+        B, Hq, HK, NP, PS, D, P = 5, 4, 2, 4, 8, 16, 12
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(B, Hq, 1, D)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(P, HK, PS, D)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, HK, PS, D)), jnp.float32)
+        table = jnp.asarray(rng.integers(1, P, size=(B, NP)), jnp.int32)
+        lengths = jnp.asarray([0, 5, PS * 2, PS * 2 + 1, NP * PS],
+                              jnp.int32)
+        got = kernel(q, kp, vp, table, lengths,
+                     cfg=default_config(NP), interpret=True)
+        want = paged_decode_ref(q, kp, vp, table, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        # the zero-length row reads nothing: exact zero output
+        assert float(jnp.abs(got[0]).max()) == 0.0
+
+    def test_masked_positions_never_reach_the_accumulator(self):
+        """Poison every page the lengths say is unreadable (incl. the
+        null page) with huge values — the kernel output must not move."""
+        import jax.numpy as jnp
+        from repro.kernels.paged_attention import default_config
+        from repro.kernels.paged_attention.paged_attention import \
+            paged_decode as kernel
+        B, Hq, HK, NP, PS, D, P = 2, 2, 2, 4, 8, 16, 10
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.normal(size=(B, Hq, 1, D)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(P, HK, PS, D)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, HK, PS, D)), jnp.float32)
+        table = jnp.asarray([[1, 2, 0, 0], [3, 4, 5, 0]], jnp.int32)
+        lengths = jnp.asarray([PS + 3, 3 * PS], jnp.int32)
+        clean = kernel(q, kp, vp, table, lengths,
+                       cfg=default_config(NP), interpret=True)
+        # poison the null page, the unmapped tail, and row 0's dead
+        # region beyond its length inside its own last mapped page
+        kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+        for pg in (0, 6, 7, 8, 9):
+            kp2[pg] = 1e6; vp2[pg] = 1e6
+        kp2[2, :, 3:] = 1e6        # row 0's last page: offsets >= 3 are
+        vp2[2, :, 3:] = 1e6        # at/beyond its length PS+3
+        poisoned = kernel(q, jnp.asarray(kp2), jnp.asarray(vp2), table,
+                          lengths, cfg=default_config(NP), interpret=True)
+        np.testing.assert_array_equal(np.asarray(clean),
+                                      np.asarray(poisoned))
 
     @pytest.mark.slow
     def test_validated_entry_rejects_bad_block_pages(self):

@@ -319,6 +319,89 @@ class TestPagedEngine:
                                     pool_pages=4)
         assert cfg is not None
 
+    def test_mapped_length_consistency(self, served):
+        """Boundary-page regression: a row whose logical length crosses
+        into page k while page k was never mapped must be rejected — as
+        must over-mapping and a mapped page after a null hole; the exact
+        page boundary passes."""
+        from repro.kernels.paged_attention.ops import (InvariantViolation,
+                                                       validate_block_tables)
+        model, _ = served
+        kw = dict(model=model, page_size=8, pool_pages=8)
+        ok = np.array([[1, 2, 0, 0], [3, 0, 0, 0]], np.int32)
+        # exact boundary: 16 tokens = exactly 2 pages; 8 = exactly 1
+        assert validate_block_tables(
+            ok, lengths=np.array([16, 8]), **kw) is not None
+        # length 17 crosses into page 2 of row 0, which is unmapped
+        with pytest.raises(InvariantViolation, match="needs 3"):
+            validate_block_tables(ok, lengths=np.array([17, 8]), **kw)
+        # row 1 holds a page its 0-length doesn't need
+        with pytest.raises(InvariantViolation, match="row 1 maps 1"):
+            validate_block_tables(ok, lengths=np.array([16, 0]), **kw)
+        # a mapped page after a null hole is never a valid prefix
+        holey = np.array([[1, 0, 2, 0]], np.int32)
+        with pytest.raises(InvariantViolation, match="null hole"):
+            validate_block_tables(holey, lengths=np.array([16]), **kw)
+        # lengths shape must match the table
+        with pytest.raises(InvariantViolation, match="shape"):
+            validate_block_tables(ok, lengths=np.array([16]), **kw)
+
+    def test_inactive_rows_validate_with_zero_length(self, served):
+        from repro.kernels.paged_attention.ops import validate_block_tables
+        model, _ = served
+        t = np.array([[1, 2], [0, 0]], np.int32)
+        assert validate_block_tables(
+            t, model=model, page_size=8, pool_pages=8,
+            lengths=np.array([9, 0])) is not None
+
+
+class TestKernelDecodePath:
+    """decode_path="kernel": the length-masked paged-attention kernel
+    replaces the per-tick decode gather — token-identical to the gather
+    path (itself the dense engine's twin), zero dense-view bytes."""
+
+    def test_rejects_unknown_decode_path(self, served):
+        model, params = served
+        with pytest.raises(ValueError, match="decode_path"):
+            PagedServingEngine(model, params, pool_pages=8, page_size=8,
+                               max_len=32, decode_path="oracle")
+
+    def test_kernel_matches_gather_token_for_token(self, served):
+        model, params = served
+        reqs = _mixed_requests(seed=11, n=4)
+        outs, engs = {}, {}
+        for path in ("gather", "kernel"):
+            eng = PagedServingEngine(model, params, pool_pages=40,
+                                     page_size=8, max_batch=4, max_len=64,
+                                     prefill_chunk=8, eos_id=-1,
+                                     decode_path=path)
+            outs[path] = _submit_all(eng, reqs)
+            engs[path] = eng
+        assert outs["kernel"] == outs["gather"]
+        kc = engs["kernel"].metrics.counters
+        gc = engs["gather"].metrics.counters
+        # kernel path: every decode tick ran the kernel, none gathered
+        assert kc["gather_bytes"] == 0
+        assert kc["kernel_decode_ticks"] > 0
+        # gather path: the inverse
+        assert gc["kernel_decode_ticks"] == 0
+        assert gc["gather_bytes"] > 0
+
+    def test_kernel_path_survives_preemption(self, served):
+        model, params = served
+        reqs = _mixed_requests(seed=11, n=4)
+        roomy = _submit_all(
+            PagedServingEngine(model, params, pool_pages=40, page_size=8,
+                               max_batch=4, max_len=64, prefill_chunk=8,
+                               eos_id=-1, decode_path="kernel"), reqs)
+        tight = PagedServingEngine(model, params, pool_pages=9,
+                                   page_size=8, max_batch=4, max_len=64,
+                                   prefill_chunk=8, eos_id=-1,
+                                   decode_path="kernel")
+        assert _submit_all(tight, reqs) == roomy
+        assert tight.metrics.counters["preempted"] > 0
+        assert tight.metrics.counters["gather_bytes"] == 0
+
 
 class TestRetirementBoundary:
     """Regression for the `pos >= max_len - 1` off-by-one: a sequence

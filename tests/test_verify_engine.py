@@ -298,3 +298,62 @@ class TestHillclimbDischargeBound:
         worst = n_assert * stats["verify_calls"]
         assert 0 < stats["solver_discharges"] < worst, stats
         assert stats["constraint_hits"] + stats["result_hits"] > 0
+        # symbolic skeletons: the whole hillclimb pays for at most a
+        # couple of full Python traces — every congruent config either
+        # re-binds an interned skeleton or (via gemm's trace_fields
+        # projection) skips the trace outright
+        assert stats["full_builds"] <= 2, stats
+
+
+class TestTraceFieldsProjection:
+    """KernelFamily.trace_fields: configs differing only in
+    trace-irrelevant knobs share one traced program — re-binding a
+    congruent config skips the Python trace entirely (counted as
+    ``trace_skips``), while the structural stage still sees the exact
+    config."""
+
+    GEMM = get_family("gemm")
+
+    def test_precision_rebind_skips_the_trace(self):
+        eng = VerificationEngine()
+        prob = self.GEMM.problem_cls(2048, 2048, 2048, "bf16")
+        r32 = eng.verify("gemm", self.GEMM.config_cls(), prob)
+        rbf = eng.verify("gemm", self.GEMM.config_cls(precision="bf16"),
+                         prob)
+        s = eng.stats()
+        assert s["full_builds"] == 1, s
+        assert s["trace_skips"] == 1, s
+        assert s["program_hits"] == 1, s
+        assert r32.hard_ok and rbf.hard_ok
+        # the analysis verdicts are identical; the results are still
+        # memoized per exact config
+        assert eng.verify("gemm", self.GEMM.config_cls(precision="bf16"),
+                          prob).cached
+
+    def test_trace_relevant_knobs_still_retrace(self):
+        eng = VerificationEngine()
+        prob = self.GEMM.problem_cls(2048, 2048, 2048, "bf16")
+        eng.verify("gemm", self.GEMM.config_cls(bm=128), prob)
+        eng.verify("gemm", self.GEMM.config_cls(bm=256), prob)
+        s = eng.stats()
+        assert s["trace_skips"] == 0, s
+        assert s["full_builds"] + s["skeleton_rebinds"] == 2, s
+
+    def test_structural_stage_reads_the_exact_config(self):
+        """The projection must not leak into stage 1: a precision flip
+        that changes the VMEM footprint still gets its own structural
+        verdict even though the traced program is shared."""
+        eng = VerificationEngine()
+        prob = self.GEMM.problem_cls(4096, 4096, 4096, "bf16")
+        # sits right on the VMEM boundary: the f32 accumulator scratch
+        # overflows, the bf16 one fits
+        cfg = self.GEMM.config_cls(bm=1024, bn=1024, bk=1280)
+        small = eng.verify("gemm",
+                           dataclasses.replace(cfg, precision="bf16"),
+                           prob)
+        big = eng.verify("gemm", cfg, prob)
+        s = eng.stats()
+        assert s["full_builds"] == 1 and s["trace_skips"] == 1, s
+        assert small.ok and not small.structural
+        assert not big.ok
+        assert any(i.kind == "vmem" for i in big.structural), big.structural
