@@ -39,7 +39,8 @@ def print_fleet_journal_report(journal_path) -> None:
     items (``fleet_journal.jsonl`` from :mod:`repro.core.tuning`) and
     print them as a CSV section — the cross-worker cache-sharing rates
     (canonical hits, skeleton re-binds, persisted warm-starts) the
-    scaling story rests on."""
+    scaling story rests on, plus the summed per-stage verify wall-clock
+    (structural / build / analysis / solver µs)."""
     from repro.core.tuning import Journal
     from repro.core.verify_engine import merge_stats
 
@@ -52,5 +53,7 @@ def print_fleet_journal_report(journal_path) -> None:
     print("metric,value")
     for k in ("verify_calls", "result_hits", "program_hits",
               "full_builds", "skeleton_rebinds", "constraint_hits",
-              "canonical_hits", "persisted_hits", "solver_discharges"):
+              "canonical_hits", "persisted_hits", "solver_discharges",
+              "wall_structural_us", "wall_build_us", "wall_analysis_us",
+              "wall_solver_us"):
         print(f"{k},{stats.get(k, 0)}")

@@ -15,7 +15,9 @@ rejected with a counterexample, not mis-benchmarked).
 
 The second section reports the VerificationEngine's cache effect on the
 L5 hillclimb: verify calls, solver discharges performed vs. the
-assertion-count × steps worst case (discharges avoided), and wall-clock
+assertion-count × steps worst case (discharges avoided), measured
+per-stage wall-clock (structural / build / analysis / solver µs, from
+the engine's ``verify_stats`` — docs/observability.md), and wall-clock
 with the normalized-constraint memo cache on vs. off.
 """
 from __future__ import annotations
@@ -106,6 +108,11 @@ def main():
     print(f"canonical_hit_pct,"
           f"{100 * stats['canonical_hits'] / max(stats['constraint_hits'], 1):.1f}")
     print(f"solver_discharges,{stats['solver_discharges']}")
+    # measured per-stage wall (host-relative, stdout only — never in a
+    # byte-identity-gated artifact)
+    for k in ("wall_structural_us", "wall_build_us", "wall_analysis_us",
+              "wall_solver_us"):
+        print(f"{k},{stats.get(k, 0)}")
     print(f"worst_case_discharges,{worst}")
     print(f"discharges_avoided,{worst - stats['solver_discharges']}")
     print(f"wall_s_cached,{wall_cached:.3f}")

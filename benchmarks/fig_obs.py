@@ -1,0 +1,241 @@
+"""Observability gate: deterministic traces, latency percentiles, and a
+zero-cost disabled path (``--smoke`` is the CI gate).
+
+Three sections, each writing Perfetto-loadable artifacts to
+``--out-dir`` (CI uploads them as build artifacts):
+
+* **serving** — replays a seeded Poisson trace through the paged engine
+  twice with span tracing on (tracer and engine each driven by their
+  own virtual :class:`repro.obs.TickClock`), asserting the exported
+  Chrome trace file and the latency-percentile report are
+  *byte-identical* across reruns, that every span is well-nested with
+  non-negative ``ts``/``dur``, and that a run with the tracer
+  *disabled* produces the same token streams and the same latency
+  histograms — tracing off is behaviorally invisible, the PR-8
+  baseline;
+* **overhead** — the disabled path's zero-allocation guarantee, pinned
+  as a tight-loop *allocation budget* (``sys.getallocatedblocks``), not
+  a timing test: a large number of ``span()`` calls with tracing off
+  must allocate nothing (shared null-span singleton, no attrs dict);
+* **fleet** — a 2-worker fleet-tuner run with ``trace_dir`` set dumps
+  one span trace per worker process (``fleet_worker<wid>.trace.json``);
+  each must parse and be well-nested, and the journal's monotonic
+  stamps must rebuild the fleet's Gantt timeline
+  (``fleet_timeline.trace.json``, one lane per worker).
+
+Everything the smoke gate compares is a pure function of (seed, sizes)
+on virtual clocks — no wall-clock number enters any asserted artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro import configs, obs  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.serve import PagedServingEngine  # noqa: E402
+from repro.serve.metrics import ServingMetrics  # noqa: E402
+from repro.serve.trace import poisson_trace, replay  # noqa: E402
+
+ALLOC_BUDGET = 16        # blocks; the loop below makes ~200k span calls
+SPAN_LOOP = 200_000
+
+
+def _serve_once(model, params, args, *, traced: bool):
+    """One trace replay on fresh virtual clocks.  Returns
+    ``(chrome_trace_dict | None, percentiles, outputs)``."""
+    if traced:
+        obs.enable(clock=obs.TickClock(), pid=0)
+    try:
+        eng = PagedServingEngine(
+            model, params, pool_pages=args.pool_pages,
+            page_size=args.page_size, max_batch=args.slots,
+            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+            eos_id=-1, clock=obs.TickClock())
+        trace = poisson_trace(
+            seed=args.seed + 1, n_requests=args.requests, mean_gap=3.0,
+            prompt_lens=(4, 28), max_new=(4, 12),
+            vocab=model.cfg.vocab)
+        res = replay(eng, trace)
+    finally:
+        if traced:
+            obs.disable()
+    chrome = obs.tracer().chrome_trace() if traced else None
+    pct = ServingMetrics.from_snapshot(res["metrics"]).latency_quantiles()
+    return chrome, pct, res["outputs"]
+
+
+def serving_section(model, params, args, out: Path):
+    failures = []
+    # The disabled run goes first: it doubles as the warmup for the
+    # process-wide verify-result memo (verify_engine.default_engine),
+    # so the two traced runs see identical cache states and their
+    # traces can be compared byte-for-byte.  Token streams and latency
+    # histograms never depend on that cache, so the disabled-vs-traced
+    # comparison is order-free.
+    _, pct3, out3 = _serve_once(model, params, args, traced=False)
+    chrome1, pct1, out1 = _serve_once(model, params, args, traced=True)
+    chrome2, pct2, _ = _serve_once(model, params, args, traced=True)
+
+    text1 = json.dumps(chrome1, sort_keys=True)
+    text2 = json.dumps(chrome2, sort_keys=True)
+    if text1 != text2:
+        failures.append("serving: traced rerun did not reproduce the "
+                        "Chrome trace byte-for-byte")
+    if json.dumps(pct1, sort_keys=True) != json.dumps(pct2,
+                                                      sort_keys=True):
+        failures.append("serving: traced rerun did not reproduce the "
+                        "percentile report byte-for-byte")
+
+    evs = chrome1["traceEvents"]
+    if not evs:
+        failures.append("serving: traced replay emitted no spans")
+    if any(e["ts"] < 0 or e["dur"] < 0 for e in evs):
+        failures.append("serving: span with negative ts/dur")
+    if not obs.well_nested(evs):
+        failures.append("serving: spans are not well-nested")
+
+    if out3 != out1:
+        failures.append("serving: disabled-tracer run changed the "
+                        "token streams")
+    if pct3 != pct1:
+        failures.append("serving: disabled-tracer run changed the "
+                        "latency histograms")
+
+    trace_path = out / "serve.trace.json"
+    trace_path.write_text(text1 + "\n")
+    names = sorted({e["name"] for e in evs})
+    print(f"serving,spans={len(evs)},names={'|'.join(names)},"
+          f"well_nested={obs.well_nested(evs)},"
+          f"rerun_identical={text1 == text2},"
+          f"disabled_identical={out3 == out1 and pct3 == pct1},"
+          f"out={trace_path}", flush=True)
+    print("percentiles," + json.dumps(pct1, sort_keys=True), flush=True)
+    return failures
+
+
+def overhead_section():
+    """Disabled-path allocation budget over a tight span loop."""
+    failures = []
+    if not hasattr(sys, "getallocatedblocks"):
+        print("overhead,skipped=no sys.getallocatedblocks", flush=True)
+        return failures
+    assert not obs.enabled()
+    span = obs.span
+    for _ in range(1000):              # warm up caches / free lists
+        with span("warmup"):
+            pass
+    gc.collect()
+    before = sys.getallocatedblocks()
+    for _ in range(SPAN_LOOP):
+        with span("hot"):
+            pass
+    delta = sys.getallocatedblocks() - before
+    print(f"overhead,span_calls={SPAN_LOOP},allocated_blocks={delta},"
+          f"budget={ALLOC_BUDGET}", flush=True)
+    if delta > ALLOC_BUDGET:
+        failures.append(
+            f"overhead: {SPAN_LOOP} disabled span() calls allocated "
+            f"{delta} blocks (budget {ALLOC_BUDGET}) — the disabled "
+            f"path is no longer allocation-free")
+    return failures
+
+
+def fleet_section(args, out: Path):
+    from repro.core.tuning import Journal, enumerate_jobs, run_fleet
+    from repro.core.tuning.pool import JOURNAL_NAME
+
+    failures = []
+    fleet_dir = out / "fleet"
+    jobs = enumerate_jobs(["gemm", "quant_gemm"], seed=args.seed)
+    rep = run_fleet(jobs, workers=2, out_dir=fleet_dir, base_budget=2,
+                    max_budget=4, trace_dir=out)
+
+    worker_files = sorted(out.glob("fleet_worker*.trace.json"))
+    if not worker_files:
+        failures.append("fleet: no per-worker trace files written")
+    n_spans = {}
+    for f in worker_files:
+        trace = json.loads(f.read_text())
+        evs = trace["traceEvents"]
+        n_spans[f.name] = len(evs)
+        if not evs:
+            failures.append(f"fleet: {f.name} has no spans")
+        if not obs.well_nested(evs):
+            failures.append(f"fleet: {f.name} spans not well-nested")
+
+    timeline = Journal(fleet_dir / JOURNAL_NAME).timeline()
+    tl_evs = timeline["traceEvents"]
+    tl_path = out / "fleet_timeline.trace.json"
+    with open(tl_path, "w") as f:
+        json.dump(timeline, f, sort_keys=True)
+        f.write("\n")
+    if not tl_evs:
+        failures.append("fleet: journal stamps rebuilt an empty "
+                        "timeline")
+    if any(e["ts"] < 0 or e["dur"] < 0 for e in tl_evs):
+        failures.append("fleet: timeline event with negative ts/dur")
+
+    lanes = sorted({e["tid"] for e in tl_evs})
+    print(f"fleet,items_ran={rep.ran},"
+          f"worker_traces={[f'{k}:{v}' for k, v in sorted(n_spans.items())]},"
+          f"timeline_events={len(tl_evs)},worker_lanes={lanes},"
+          f"out={tl_path}", flush=True)
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pool-pages", type=int, default=25)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--out-dir", default="fig_obs_out",
+                    help="where the Perfetto trace artifacts land")
+    ap.add_argument("--skip-fleet", action="store_true",
+                    help="skip the 2-worker fleet section (spawns "
+                         "processes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: hard-assert trace determinism, "
+                         "well-nestedness, disabled-path identity and "
+                         "the allocation budget")
+    args = ap.parse_args(argv)
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = configs.get_reduced(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    failures = serving_section(model, params, args, out)
+    failures += overhead_section()
+    if not args.skip_fleet:
+        failures += fleet_section(args, out)
+
+    if failures:
+        print("\n" + "; ".join(failures))
+        if args.smoke:
+            raise SystemExit(1)
+    else:
+        print("\nSMOKE OK: traced replay byte-identical across reruns, "
+              "spans well-nested, disabled tracer invisible (tokens + "
+              "histograms identical, zero allocations per span), fleet "
+              "worker traces + journal timeline Perfetto-loadable"
+              if args.smoke else "\nok")
+    return failures
+
+
+if __name__ == "__main__":
+    main()

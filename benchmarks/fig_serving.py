@@ -12,10 +12,14 @@ engines — pool peak/mean occupancy, preemptions, KV bytes vs the dense
 engine's per-slot reservation, and the modeled per-decode-tick HBM
 traffic (gather path: the full dense view it materializes; kernel
 path: the pages the batch actually occupies plus the block tables).
-The report is a deterministic function of (seed, sizes): no wall-clock
-numbers enter the JSON, so two runs with the same arguments emit
-byte-identical reports (tests/test_serving.py gates on this, the
-tuner-journal byte-identity discipline applied to serving).
+The report is a deterministic function of (seed, sizes): engines run on
+a virtual :class:`repro.obs.TickClock` and no wall-clock numbers enter
+the JSON, so two runs with the same arguments emit byte-identical
+reports (tests/test_serving.py gates on this, the tuner-journal
+byte-identity discipline applied to serving).  Each engine block
+carries a ``percentiles`` entry — queue-wait / TTFT / TPOT (ticks) and
+step-time (virtual µs) p50/p95/p99 from the engine's mergeable log2
+latency histograms (schema-v3 snapshot, docs/observability.md).
 
 ``--smoke`` (CI) hard-asserts the tentpole's acceptance criteria:
 
@@ -27,7 +31,11 @@ tuner-journal byte-identity discipline applied to serving).
 * the kernel path's per-decode-tick HBM bytes are below the gather
   path's at the smoke shape;
 * the paged pool's KV bytes are below the dense per-slot reservation,
-  and peak pool utilization clears the floor.
+  and peak pool utilization clears the floor;
+* every engine's ``percentiles`` block is populated (queue_wait / ttft
+  / tpot / step_time each carry counts) and a re-replay of the paged
+  engine over the Poisson trace reproduces it exactly — the latency
+  histograms are as deterministic as the token streams.
 
 ``--dispatch-table PATH`` writes a valid ``dispatch_table.json`` whose
 ``paged_attention`` bucket entry records, in its provenance, which
@@ -50,7 +58,9 @@ import jax  # noqa: E402
 
 from repro import configs  # noqa: E402
 from repro.models import build  # noqa: E402
+from repro.obs import TickClock  # noqa: E402
 from repro.serve import PagedServingEngine, ServingEngine  # noqa: E402
+from repro.serve.metrics import ServingMetrics  # noqa: E402
 from repro.serve.pool import KVPool  # noqa: E402
 from repro.serve.trace import (bursty_trace, percentile,  # noqa: E402
                                poisson_trace, replay)
@@ -75,6 +85,8 @@ def _engine_report(res, *, wall_s: float) -> dict:
         "peak_occupancy": m["peaks"]["occupancy"],
         "capacity": m["capacity"],
         "preemptions": m["counters"]["preempted"],
+        "percentiles": ServingMetrics.from_snapshot(m)
+        .latency_quantiles(),
         "metrics": m,
     }
     # stdout only — never in the report JSON (byte-identity)
@@ -104,17 +116,20 @@ def run_trace(name, trace, model, params, args) -> dict:
     print(f"  trace {name}: {len(trace)} requests")
     out = {}
 
+    # fresh virtual clock per engine: step_time histograms become a
+    # deterministic function of tick count, keeping the report
+    # byte-identical across runs and hosts
     def paged(path):
         return lambda: PagedServingEngine(
             model, params, pool_pages=args.pool_pages,
             page_size=args.page_size, max_batch=args.slots,
             max_len=args.max_len, prefill_chunk=args.prefill_chunk,
-            eos_id=-1, decode_path=path)
+            eos_id=-1, decode_path=path, clock=TickClock())
 
     engines = {
         "dense": lambda: ServingEngine(
             model, params, n_slots=args.slots, max_len=args.max_len,
-            eos_id=-1),
+            eos_id=-1, clock=TickClock()),
         "paged": paged("gather"),
         "paged_kernel": paged("kernel"),
     }
@@ -184,7 +199,7 @@ def main(argv=None):
     }
 
     report = {
-        "schema": 2,
+        "schema": 3,
         "arch": cfg.name,
         "config": {
             "seed": args.seed, "requests": args.requests,
@@ -238,10 +253,34 @@ def main(argv=None):
                 (f"{name}: kernel decode HBM "
                  f"{k['decode_hbm_bytes_per_tick']}B/tick is not below "
                  f"gather's {p['decode_hbm_bytes_per_tick']}B/tick")
+            for kind in ("dense", "paged", "paged_kernel"):
+                pct = tr[kind]["percentiles"]
+                assert set(pct) == {"queue_wait", "ttft", "tpot",
+                                    "step_time"}, \
+                    f"{name}/{kind}: percentile kinds {sorted(pct)}"
+                for lk, s in pct.items():
+                    assert s["count"] > 0, \
+                        f"{name}/{kind}: {lk} histogram is empty"
+                    assert s["p50"] <= s["p95"] <= s["p99"], \
+                        f"{name}/{kind}: {lk} quantiles not monotone"
+        # latency determinism: a fresh paged engine on a fresh virtual
+        # clock re-replaying the Poisson trace must reproduce the
+        # percentile block exactly, not just the token streams
+        eng2 = PagedServingEngine(
+            model, params, pool_pages=args.pool_pages,
+            page_size=args.page_size, max_batch=args.slots,
+            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+            eos_id=-1, decode_path="gather", clock=TickClock())
+        res2 = replay(eng2, traces["poisson"])
+        pct2 = ServingMetrics.from_snapshot(
+            res2["metrics"]).latency_quantiles()
+        assert pct2 == report["traces"]["poisson"]["paged"]["percentiles"], \
+            "poisson/paged: percentile block changed on re-replay"
         print("SMOKE OK: dense = paged = paged_kernel tokens, kernel "
               "path gathered 0 dense-view bytes and beat the gather "
               "path's per-tick decode HBM, pool below dense "
-              f"reservation, utilization >= {UTILIZATION_FLOOR} "
+              f"reservation, utilization >= {UTILIZATION_FLOOR}, "
+              "latency percentiles populated and re-replay-identical "
               "on both traces")
     return report
 

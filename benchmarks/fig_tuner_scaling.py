@@ -31,6 +31,12 @@ runs):
 * **lesson reuse** — a multi-worker ``--sweep --lessons`` run imports
   a non-zero number of *cross-family* lessons from the shared store.
 
+``--trace PATH`` writes the fleet's execution timeline, rebuilt from
+the largest sync run's journal (``mono_start_s`` / ``mono_end_s``
+stamps, :func:`repro.core.tuning.journal.fleet_timeline`), as a
+Perfetto-loadable Chrome trace — one lane per worker, stragglers
+visible as long bars.
+
 ``--sol`` adds the speed-of-light guidance suite (CI gates it via
 ``--smoke --sol``) over the full shape-bucket sweep grid:
 
@@ -336,6 +342,27 @@ def sol_suite(args, root: Path):
     return failures
 
 
+def _write_fleet_trace(args, root: Path) -> None:
+    """Rebuild the largest sync run's timeline from its journal and
+    write it as a Chrome trace (``--trace``)."""
+    import json
+
+    from repro.core.tuning import Journal
+
+    n = max(args.workers)
+    journal = root / f"sync_workers{n}" / "fleet_journal.jsonl"
+    trace = Journal(journal).timeline()
+    evs = trace["traceEvents"]
+    with open(args.trace, "w") as f:
+        json.dump(trace, f, sort_keys=True)
+        f.write("\n")
+    lanes = sorted({e["tid"] for e in evs})
+    span_us = max((e["ts"] + e["dur"] for e in evs), default=0)
+    print(f"fleet_trace,workers={n},events={len(evs)},"
+          f"lanes={lanes},span_ms={span_us / 1e3:.1f},"
+          f"out={args.trace}", flush=True)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, nargs="+",
@@ -359,6 +386,10 @@ def main(argv=None):
                          "--sol sweep quality no worse per bucket, "
                          ">=30%% fewer iterations, sync/async/resume "
                          "table identity")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the fleet timeline of the largest sync "
+                         "run (rebuilt from journaled monotonic stamps) "
+                         "as a Perfetto-loadable Chrome trace here")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny budgets, workers 1 and 4, and "
                          "hard-assert every property that ran")
@@ -375,6 +406,8 @@ def main(argv=None):
 
     with tempfile.TemporaryDirectory(prefix="fleet_scaling_") as root:
         solo_table, failures = base_sweep(jobs, args, Path(root))
+        if args.trace:
+            _write_fleet_trace(args, Path(root))
         if args.async_suite:
             failures += fleet_learning_suite(jobs, args, Path(root),
                                              solo_table)

@@ -91,6 +91,9 @@ def main(argv=None):
     ap.add_argument("--out-dir", default=".",
                     help="where the journal, caches and dispatch table "
                          "live")
+    ap.add_argument("--trace-dir", default=None,
+                    help="dump per-worker Perfetto span traces "
+                         "(fleet_worker<wid>.trace.json) here")
     ap.add_argument("--fresh", action="store_true",
                     help="discard an existing journal for a different "
                          "job set")
@@ -112,7 +115,7 @@ def main(argv=None):
                        run_kernels=args.run_kernels, fresh=args.fresh,
                        async_mode=args.async_mode, lessons=args.lessons,
                        sol=args.sol, sol_slack=args.sol_slack,
-                       log=print)
+                       trace_dir=args.trace_dir, log=print)
 
     print(f"\nfleet done: {report.rungs} rungs, {report.ran} items ran, "
           f"{report.skipped} resumed from the journal, "

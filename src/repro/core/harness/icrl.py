@@ -16,6 +16,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro import obs as _obs
+
 from ..families import assertion_key
 from ..verify_engine import VerificationEngine
 from .lowering import LoweredState, LoweringAgent, RepairAttempt
@@ -125,36 +127,42 @@ def optimize_kernel(state0: KernelState, *, planner: Planner,
         best = cur = state0
         best_t = state0.est.time_s
         res = OptimizeResult(best, best_t, best_t)
-    for _ in range(iterations):
-        props = planner.propose(cur)
-        prop = selector.select(props)
-        if prop is None:
-            break
-        lowered = lowering.apply(cur, prop)
-        verdict = validator.evaluate(lowered, best_t)
-        res.cost_units += verdict.cost_units
-        attempts: List[RepairAttempt] = []
-        while not verdict.ok and len(attempts) < max_repairs and (
-                verdict.caught_static or verdict.caught_unit):
-            # a static catch hands the structured counterexamples to the
-            # repair agent; a unit-test catch hands it nothing (blind)
-            lowered, att = lowering.repair(
-                lowered,
-                feedback=verdict.feedback if verdict.caught_static else ())
-            attempts.append(att)
+    for step_i in range(iterations):
+        with _obs.span("icrl.step") as sp:
+            props = planner.propose(cur)
+            prop = selector.select(props)
+            if prop is None:
+                break
+            lowered = lowering.apply(cur, prop)
             verdict = validator.evaluate(lowered, best_t)
             res.cost_units += verdict.cost_units
-        accepted = verdict.ok and verdict.est_time_s < best_t
-        if accepted:
-            best = lowered.state
-            best_t = verdict.est_time_s
-            cur = lowered.state
-        elif verdict.ok:
-            cur = lowered.state      # sideways move keeps exploring
-        res.history.append(StepRecord(prop.skill.name, prop.context,
-                                      verdict, accepted,
-                                      verdict.est_time_s,
-                                      repairs=attempts))
+            attempts: List[RepairAttempt] = []
+            while not verdict.ok and len(attempts) < max_repairs and (
+                    verdict.caught_static or verdict.caught_unit):
+                # a static catch hands the structured counterexamples to
+                # the repair agent; a unit-test catch hands it nothing
+                # (blind)
+                lowered, att = lowering.repair(
+                    lowered,
+                    feedback=verdict.feedback if verdict.caught_static
+                    else ())
+                attempts.append(att)
+                verdict = validator.evaluate(lowered, best_t)
+                res.cost_units += verdict.cost_units
+            accepted = verdict.ok and verdict.est_time_s < best_t
+            if accepted:
+                best = lowered.state
+                best_t = verdict.est_time_s
+                cur = lowered.state
+            elif verdict.ok:
+                cur = lowered.state      # sideways move keeps exploring
+            res.history.append(StepRecord(prop.skill.name, prop.context,
+                                          verdict, accepted,
+                                          verdict.est_time_s,
+                                          repairs=attempts))
+            if _obs.enabled():
+                sp.set(step=step_i, skill=prop.skill.name,
+                       accepted=accepted, repairs=len(attempts))
     res.best_state, res.best_time_s = best, best_t
     res.final_state = cur
     res.iterations_done = len(res.history) + (

@@ -19,7 +19,8 @@ Record format (one JSON object per line):
      "iterations_done": n, "cost_units": ..., "solved": true,
      "accepted": n, "repairs": n, "verdict_stages": {stage: count},
      "verify_stats": {...}, "lessons_imported": n, "lessons_reused": n,
-     "lessons_published": n, "worker": wid, "wall_s": ...}
+     "lessons_published": n, "worker": wid, "wall_s": ...,
+     "mono_start_s": ..., "mono_end_s": ...}
 
 ``extra`` > 0 marks a bandit-funded side branch (item id
 ``<job_id>@r<rung>+e<n>``) — journaled and table-eligible like any
@@ -29,9 +30,15 @@ fraction of it the best verified config reached (``null`` for families
 without a ``sol_bound`` hook); the scheduler's early-stop rule reads
 ``sol_frac``.  ``worker``/``wall_s``/``lessons_*`` are provenance of
 *this* run and are excluded from the dispatch table (which must be
-bitwise-identical across worker counts).  Loading tolerates a torn
-final line — the signature of a process killed mid-append — by skipping
-lines that fail to parse.
+bitwise-identical across worker counts).  ``mono_start_s`` /
+``mono_end_s`` are ``time.monotonic()`` stamps around the item's
+execution — CLOCK_MONOTONIC is system-wide on Linux, so stamps from
+different worker processes share one timeline and
+:func:`fleet_timeline` (``fig_tuner_scaling --trace``,
+``benchmarks/fig_obs.py``) can rebuild the fleet's Gantt chart from
+the journal alone, stragglers visible as long bars.  Loading tolerates
+a torn final line — the signature of a process killed mid-append — by
+skipping lines that fail to parse.
 """
 from __future__ import annotations
 
@@ -99,6 +106,11 @@ class Journal:
     def records(self) -> Dict[str, dict]:
         return self._read()[1]
 
+    def timeline(self) -> dict:
+        """The fleet timeline as a Chrome trace (see
+        :func:`fleet_timeline`)."""
+        return fleet_timeline(self.records())
+
     # -- internals -----------------------------------------------------------
     def _read(self):
         header: Optional[dict] = None
@@ -120,3 +132,28 @@ class Journal:
             elif obj.get("kind") == "result" and "item" in obj:
                 records[obj["item"]] = obj   # later line wins (re-runs)
         return header, records
+
+
+def fleet_timeline(records: Dict[str, dict]) -> dict:
+    """Rebuild the fleet's execution timeline from journaled monotonic
+    stamps as a Chrome trace-event dict (Perfetto-loadable): one
+    complete event per record, one ``tid`` lane per worker, timestamps
+    rebased to the earliest stamp.  Records without stamps (journals
+    written before the stamps existed) are skipped — the timeline is a
+    best-effort view, never a correctness input."""
+    stamped = [r for r in records.values()
+               if r.get("mono_start_s") is not None
+               and r.get("mono_end_s") is not None]
+    base = min((r["mono_start_s"] for r in stamped), default=0.0)
+    events = []
+    for r in sorted(stamped, key=lambda r: (r["mono_start_s"],
+                                            str(r["item"]))):
+        ts = int((r["mono_start_s"] - base) * 1e6)
+        events.append({
+            "name": r["item"], "ph": "X", "ts": ts,
+            "dur": max(0, int((r["mono_end_s"] - base) * 1e6) - ts),
+            "pid": 0, "tid": int(r.get("worker", 0)),
+            "args": {"family": r.get("family"), "rung": r.get("rung"),
+                     "budget": r.get("budget"),
+                     "speedup": r.get("speedup")}})
+    return {"displayTimeUnit": "ms", "traceEvents": events}

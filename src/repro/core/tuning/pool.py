@@ -59,6 +59,8 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
+from repro import obs as _obs
+
 from ..families import get_family
 from ..harness import (KernelState, LoweringAgent, OptimizeCheckpoint,
                        Planner, PlannerParams, Selector, Validator,
@@ -153,6 +155,23 @@ class ItemRunner:
                         if lessons else None)
 
     def run(self, wire: dict) -> dict:
+        """Execute one work item; the record carries monotonic start/end
+        stamps (system-wide clock, comparable across workers) so
+        :func:`repro.core.tuning.journal.fleet_timeline` can rebuild the
+        fleet's Gantt chart from the journal alone."""
+        mono0 = time.monotonic()
+        sp = _obs.span("fleet.item")
+        with sp:
+            if _obs.enabled():
+                sp.set(item=wire["item"], family=wire["family"],
+                       rung=wire["rung"], budget=wire["budget"],
+                       worker=self.worker)
+            rec = self._run_item(wire)
+        rec["mono_start_s"] = round(mono0, 6)
+        rec["mono_end_s"] = round(time.monotonic(), 6)
+        return rec
+
+    def _run_item(self, wire: dict) -> dict:
         fam = get_family(wire["family"])
         prob = fam.problem_cls(**wire["problem"])
         start_cfg = fam.config_cls(**wire["start_cfg"])
@@ -239,27 +258,40 @@ class ItemRunner:
 
 
 def _worker_main(wid: int, cache_dir: str, run_kernels: bool,
-                 lessons: bool, work_q, result_q) -> None:
+                 lessons: bool, work_q, result_q,
+                 trace_dir: Optional[str] = None) -> None:
     parent = os.getppid()
+    if trace_dir:
+        # per-worker tracing: spans ring up in-process, one Perfetto
+        # file per worker dumped on exit (pid lane = worker id)
+        _obs.enable(pid=wid)
     runner = ItemRunner(cache_dir, run_kernels=run_kernels, worker=wid,
                         lessons=lessons)
-    while True:
-        try:
-            wire = work_q.get(timeout=2.0)
-        except queue.Empty:
+    try:
+        while True:
+            try:
+                wire = work_q.get(timeout=2.0)
+            except queue.Empty:
+                if os.getppid() != parent:
+                    return      # orchestrator was killed: don't orphan
+                continue
+            if wire is None:
+                return
             if os.getppid() != parent:
-                return          # orchestrator was killed: don't orphan
-            continue
-        if wire is None:
-            return
-        if os.getppid() != parent:
-            return              # don't grind through a dead parent's rung
-        try:
-            result_q.put(runner.run(wire))
-        except Exception as e:   # report, keep serving the queue
-            result_q.put({"kind": "error", "item": wire.get("item"),
-                          "worker": wid,
-                          "error": f"{type(e).__name__}: {e}"})
+                return          # don't grind through a dead parent's rung
+            try:
+                result_q.put(runner.run(wire))
+            except Exception as e:   # report, keep serving the queue
+                result_q.put({"kind": "error", "item": wire.get("item"),
+                              "worker": wid,
+                              "error": f"{type(e).__name__}: {e}"})
+    finally:
+        if trace_dir:
+            try:
+                _obs.tracer().save(
+                    Path(trace_dir) / f"fleet_worker{wid}.trace.json")
+            except OSError:
+                pass            # tracing is telemetry, never a failure
 
 
 class WorkerPool:
@@ -269,7 +301,8 @@ class WorkerPool:
     batch wrapper the synchronous rungs use."""
 
     def __init__(self, workers: int, cache_dir, *,
-                 run_kernels: bool = False, lessons: bool = False):
+                 run_kernels: bool = False, lessons: bool = False,
+                 trace_dir=None):
         ctx = multiprocessing.get_context("spawn")
         self.work_q = ctx.Queue()
         self.result_q = ctx.Queue()
@@ -279,7 +312,8 @@ class WorkerPool:
         self.procs = [
             ctx.Process(target=_worker_main,
                         args=(i, str(cache_dir), run_kernels, lessons,
-                              self.work_q, self.result_q),
+                              self.work_q, self.result_q,
+                              str(trace_dir) if trace_dir else None),
                         daemon=True, name=f"fleet-worker-{i}")
             for i in range(workers)]
         for p in self.procs:
@@ -375,6 +409,7 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
               fresh: bool = False, async_mode: bool = False,
               lessons: bool = False, sol: bool = False,
               sol_slack: float = 0.1, sol_realloc: float = 0.25,
+              trace_dir=None,
               log: Optional[Callable] = None) -> FleetReport:
     """Orchestrate the full successive-halving tune of ``jobs``.
 
@@ -388,10 +423,17 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
     synchronous selection in both modes.  ``sol`` turns on speed-of-
     light guidance: jobs within ``sol_slack`` of their family's analytic
     bound stop promoting, and ``sol_realloc`` of the freed iterations
-    come back as bandit-granted extras on the remaining buckets."""
+    come back as bandit-granted extras on the remaining buckets.
+    ``trace_dir`` turns on span tracing: each worker (the orchestrator
+    itself when serial) dumps ``fleet_worker<wid>.trace.json`` there —
+    Perfetto-loadable, the within-item companion to the journal's
+    monotonic-stamp timeline."""
     log = log or (lambda msg: None)
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
+    if trace_dir is not None:
+        trace_dir = Path(trace_dir)
+        trace_dir.mkdir(parents=True, exist_ok=True)
     fp = fleet_fingerprint(jobs, base_budget=base_budget,
                            max_budget=max_budget, eta=eta,
                            run_kernels=run_kernels, lessons=lessons,
@@ -407,10 +449,12 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
     report = FleetReport(table=None,
                          lessons=dict.fromkeys(_LESSON_COUNTERS, 0))
     pool = (WorkerPool(workers, out, run_kernels=run_kernels,
-                       lessons=lessons)
+                       lessons=lessons, trace_dir=trace_dir)
             if workers > 1 else None)
     runner = (ItemRunner(out, run_kernels=run_kernels, lessons=lessons)
               if pool is None else None)
+    if trace_dir is not None and pool is None:
+        _obs.enable(pid=0)      # serial: the orchestrator is worker 0
     t0 = time.perf_counter()
     run_stats: List[Dict[str, int]] = []
 
@@ -473,6 +517,12 @@ def run_fleet(jobs: List[TuningJob], *, workers: int = 1,
     finally:
         if pool is not None:
             pool.close()
+        elif trace_dir is not None:
+            try:
+                _obs.tracer().save(trace_dir / "fleet_worker0.trace.json")
+            except OSError:
+                pass
+            _obs.disable()
 
     report.rungs = 1 + max((r["rung"] for r in selected.values()),
                            default=-1)

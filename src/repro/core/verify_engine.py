@@ -53,11 +53,14 @@ skeleton re-binds, constraint/canonical hits and solver discharges;
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import json
 from pathlib import Path
+
+from repro import obs as _obs
 
 from .analysis import Analyzer, CheckReport, Discharger
 from .families import get_family
@@ -404,6 +407,8 @@ class ConstraintCache:
         self.misses = 0
         self.persisted_hits = 0
         self.canonical_hits = 0
+        # wall-clock spent inside solver thunks (cache misses only), µs
+        self.solver_wall_us = 0
 
     def __len__(self) -> int:
         return len(self._memo)
@@ -439,7 +444,10 @@ class ConstraintCache:
                 self._memo[ckey] = res
                 return res
         self.misses += 1
-        res = thunk()
+        t0 = time.perf_counter()
+        with _obs.span("verify.solver"):
+            res = thunk()
+        self.solver_wall_us += int((time.perf_counter() - t0) * 1e6)
         if len(self._memo) >= self.MAX_ENTRIES:
             self._memo.pop(next(iter(self._memo)))
         self._memo[ckey] = res
@@ -658,6 +666,12 @@ class VerificationEngine:
         self.full_builds = 0
         self.skeleton_rebinds = 0
         self.trace_skips = 0
+        # per-stage wall-clock (µs): where verification time actually
+        # goes.  "analysis" excludes the solver time accrued inside
+        # Analyzer.run (tracked separately on the constraint cache), so
+        # the four numbers partition a verify call's wall time.
+        self.wall_us: Dict[str, int] = {"structural": 0, "build": 0,
+                                        "analysis": 0}
 
     def _program(self, fam, family: str, cfg, prob, inject_bug):
         """Incremental program build: exact-trace memo first (keyed on
@@ -708,9 +722,13 @@ class VerificationEngine:
                 self.result_hits += 1
                 return dataclasses.replace(hit, cached=True)
         fam = get_family(family)
+        clk = time.perf_counter
 
         # stage 1 — structural obligations (no program build needed)
-        structural = list(fam.structural(cfg, prob))
+        t0 = clk()
+        with _obs.span("verify.structural"):
+            structural = list(fam.structural(cfg, prob))
+        self.wall_us["structural"] += int((clk() - t0) * 1e6)
         feedback = [
             Feedback("structural", f"{s.kind}", False, detail=s.message,
                      repair_hint=_STRUCT_HINTS.get(s.kind, ""))
@@ -719,9 +737,12 @@ class VerificationEngine:
         # stage 2 — build + tag propagation; stage 3 — cached discharge
         report: Optional[CheckReport] = None
         build_error: Optional[str] = None
+        t0 = clk()
         try:
-            prog = self._program(fam, family, cfg, prob, inject_bug)
+            with _obs.span("verify.build"):
+                prog = self._program(fam, family, cfg, prob, inject_bug)
         except Exception as e:
+            self.wall_us["build"] += int((clk() - t0) * 1e6)
             build_error = str(e)
             feedback.append(Feedback(
                 "build", f"{family}.build_program", False, detail=str(e),
@@ -729,9 +750,19 @@ class VerificationEngine:
                             "pick knob values satisfying the family's "
                             "divisibility/shape preconditions"))
         else:
+            self.wall_us["build"] += int((clk() - t0) * 1e6)
             discharger = (CachingDischarger(self.constraints)
                           if self.use_cache else Discharger())
-            report = Analyzer(prog, discharger=discharger).run()
+            sol0 = self.constraints.solver_wall_us
+            t0 = clk()
+            with _obs.span("verify.analysis"):
+                report = Analyzer(prog, discharger=discharger).run()
+            # propagation time only: solver thunks inside the run are
+            # accounted under wall_solver_us (cached engines; the
+            # uncached Discharger's solver time stays in "analysis")
+            self.wall_us["analysis"] += max(0, int(
+                (clk() - t0) * 1e6)
+                - (self.constraints.solver_wall_us - sol0))
             for label, res in report.results:
                 feedback.append(Feedback(
                     _stage_of(res), label, res.ok,
@@ -763,6 +794,10 @@ class VerificationEngine:
             "persisted_hits": c.persisted_hits,
             "solver_discharges": c.misses,
             "cached_constraints": len(c),
+            "wall_structural_us": self.wall_us["structural"],
+            "wall_build_us": self.wall_us["build"],
+            "wall_analysis_us": self.wall_us["analysis"],
+            "wall_solver_us": c.solver_wall_us,
         }
 
     def reset_stats(self) -> None:
@@ -772,9 +807,11 @@ class VerificationEngine:
         self.full_builds = 0
         self.skeleton_rebinds = 0
         self.trace_skips = 0
+        self.wall_us = {"structural": 0, "build": 0, "analysis": 0}
         c = self.constraints
         c.lookups = c.hits = c.misses = 0
         c.persisted_hits = c.canonical_hits = 0
+        c.solver_wall_us = 0
 
     def drop_results(self) -> None:
         """Forget memoized EngineResults (but keep traced programs and

@@ -9,6 +9,12 @@ engine with chunked prefill and headroom admission; ``--engine dense``
 the per-slot slab baseline — and reports completion, throughput and the
 engine's metrics snapshot. The decode_32k / long_500k dry-run cells
 exercise the same serve_step at production shapes.
+
+Observability (docs/observability.md): ``--metrics-port N`` serves the
+live metrics snapshot in Prometheus text format at
+``http://127.0.0.1:N/metrics`` from a stdlib ``http.server`` thread
+(port 0 picks a free one); ``--trace-out FILE`` enables span tracing
+and dumps the Perfetto-loadable Chrome trace on shutdown.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import CheckpointManager
 from repro.models import build
 from repro.serve import PagedServingEngine, Request, ServingEngine
@@ -46,6 +52,12 @@ def main(argv=None):
     ap.add_argument("--dispatch-table", default=None,
                     help="fleet tuner dispatch_table.json with tuned "
                          "kernel configs (examples/argus_optimize.py)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text metrics on this port "
+                         "(0 = pick a free one)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing; dump the Perfetto trace "
+                         "file here on shutdown")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -77,6 +89,16 @@ def main(argv=None):
         eng = ServingEngine(model, params, n_slots=args.slots,
                             max_len=args.max_len, eos_id=-1,
                             dispatch_table=table)
+    if args.trace_out:
+        obs.enable()
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs.export import MetricsServer, prometheus_text
+        server = MetricsServer(
+            lambda: prometheus_text(eng.metrics.snapshot()),
+            port=args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{server.port}/metrics")
+
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.max_len // 4))
@@ -85,12 +107,26 @@ def main(argv=None):
             max_new_tokens=args.max_new_tokens))
 
     t0 = time.perf_counter()
-    done = eng.run()
+    try:
+        done = eng.run()
+    finally:
+        if server is not None:
+            server.close()
+        if args.trace_out:
+            obs.tracer().save(args.trace_out)
+            obs.disable()
+            print(f"trace: {args.trace_out} "
+                  f"({len(obs.tracer().events())} spans — load in "
+                  f"Perfetto / chrome://tracing)")
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.output) for r in done)
     print(f"{len(done)}/{args.requests} requests complete, "
           f"{new_tokens} tokens in {dt:.2f}s "
           f"({new_tokens / dt:.1f} tok/s on this host)")
+    q = eng.metrics.latency_quantiles()
+    print("latency (ticks; step_time µs): " + ", ".join(
+        f"{k} p50={v['p50']} p95={v['p95']} p99={v['p99']}"
+        for k, v in q.items()))
     print("metrics:", json.dumps(eng.metrics.snapshot(), sort_keys=True))
     assert len(done) == args.requests
     return done

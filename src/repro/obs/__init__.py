@@ -1,0 +1,17 @@
+"""Observability: spans, mergeable histograms, Prometheus/Perfetto
+export (docs/observability.md).
+
+Zero-dependency telemetry for the rest of the repo: a global tracer
+whose ``span()`` is a true no-op when disabled (:mod:`.tracer`),
+fixed-bucket log2 histograms whose merge is element-wise add
+(:mod:`.hist`), and text/HTTP exposition (:mod:`.export`).  Consumed
+by the serving engines, the verification engine, the fleet tuner, and
+``benchmarks/fig_obs.py``.
+"""
+from .hist import LogHistogram, bucket_index, bucket_upper, merge_save_hist
+from .tracer import (TickClock, Tracer, disable, enable, enabled, span,
+                     tracer, well_nested)
+
+__all__ = ["LogHistogram", "bucket_index", "bucket_upper",
+           "merge_save_hist", "TickClock", "Tracer", "disable", "enable",
+           "enabled", "span", "tracer", "well_nested"]

@@ -48,6 +48,7 @@ handle): one table per process, last install wins.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -56,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tuning import dispatch as _dispatch
+from repro import obs as _obs
 
 from .metrics import ServingMetrics
 from .pool import KVPool, PageAllocator, PoolExhausted, pages_needed
@@ -69,6 +71,11 @@ class Request:
     output: List[int] = field(default_factory=list)
     done: bool = False
     error: Optional[str] = None
+    trace_id: Optional[str] = None   # span correlation id (defaults rid)
+
+    @property
+    def trace_name(self) -> str:
+        return self.trace_id or f"req-{self.rid}"
 
 
 @dataclass
@@ -82,13 +89,17 @@ class ServingEngine:
 
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, eos_id: int = 1,
-                 greedy: bool = True, dispatch_table=None):
+                 greedy: bool = True, dispatch_table=None, clock=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        # step-time clock (seconds): injectable so benchmarks can pass a
+        # virtual TickClock and keep reports byte-identical
+        self._clock = clock or time.perf_counter
+        self._lat: Dict[int, Dict[str, int]] = {}   # rid -> tick stamps
         # tuned kernel configs: install the fleet dispatch table so the
         # validated kernel entry points under decode consult it
         self.dispatch = (_dispatch.install(dispatch_table)
@@ -105,6 +116,8 @@ class ServingEngine:
 
     # -- API ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        tick = self.metrics.counters["ticks"]
+        self._lat[req.rid] = {"submit": tick, "queued": tick}
         self.queue.append(req)
 
     def _insert_cache(self, slot: int, src_cache: Dict) -> None:
@@ -127,6 +140,7 @@ class ServingEngine:
 
     def _admit(self) -> Dict[str, int]:
         admitted = prefill_tokens = 0
+        tick = self.metrics.counters["ticks"]
         for i, s in enumerate(self.slots):
             if s.req is not None or not self.queue:
                 continue
@@ -139,11 +153,20 @@ class ServingEngine:
             s.req, s.pos = req, len(req.prompt)
             admitted += 1
             prefill_tokens += len(req.prompt)
+            # one-shot prefill emits the first token at admission: both
+            # queue-wait and TTFT resolve on this tick
+            lat = self._lat.setdefault(req.rid, {"submit": tick,
+                                                 "queued": tick})
+            self.metrics.record_latency("queue_wait", tick - lat["queued"])
+            self.metrics.record_latency("ttft", tick - lat["submit"])
+            lat["last"] = tick
         return {"admitted": admitted, "prefill_tokens": prefill_tokens}
 
     def step(self) -> int:
         """One engine tick: admit, decode, retire.  Returns #active."""
+        t0 = self._clock()
         adm = self._admit()
+        tick = self.metrics.counters["ticks"]
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
         finished = 0
         if active:
@@ -163,6 +186,11 @@ class ServingEngine:
                 nxt = int(jnp.argmax(logits[i, -1]))
                 s.req.output.append(nxt)
                 s.pos += 1
+                lat = self._lat.get(s.req.rid)
+                if lat is not None:
+                    self.metrics.record_latency(
+                        "tpot", tick - lat.get("last", tick))
+                    lat["last"] = tick
                 # retire only once the final writable position (max_len-1)
                 # has been used: s.pos is the *next* write offset, so the
                 # boundary is pos == max_len, not max_len - 1 (a sequence
@@ -173,12 +201,14 @@ class ServingEngine:
                 if exhausted:
                     s.req.done = True
                     self.finished.append(s.req)
+                    self._lat.pop(s.req.rid, None)
                     s.req = None
                     finished += 1
         occ = sum(1 for s in self.slots if s.req is not None)
         self.metrics.record_tick(
             queue_depth=len(self.queue), active=occ, occupancy=occ,
-            decode_tokens=len(active), finished=finished, **adm)
+            decode_tokens=len(active), finished=finished,
+            step_time_us=int((self._clock() - t0) * 1e6), **adm)
         return len(active)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
@@ -219,7 +249,8 @@ class PagedServingEngine:
                  page_size: int = 16, max_batch: int = 8,
                  max_len: int = 512, prefill_chunk: int = 32,
                  eos_id: int = 1, greedy: bool = True,
-                 dispatch_table=None, decode_path: str = "gather"):
+                 dispatch_table=None, decode_path: str = "gather",
+                 clock=None):
         if max_len % page_size:
             raise ValueError(f"max_len {max_len} must be a multiple of "
                              f"page_size {page_size}")
@@ -250,6 +281,8 @@ class PagedServingEngine:
         self._decode = jax.jit(model.decode_step)
         self._chunk = (jax.jit(model.decode_chunk)
                        if hasattr(model, "decode_chunk") else None)
+        self._clock = clock or time.perf_counter
+        self._lat: Dict[int, Dict[str, int]] = {}   # rid -> tick stamps
         self._admission_stamp = 0
         self._next_seq_id = 0
         self._table_sig = None
@@ -266,6 +299,8 @@ class PagedServingEngine:
 
     # -- API ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        tick = self.metrics.counters["ticks"]
+        self._lat[req.rid] = {"submit": tick, "queued": tick}
         self.queue.append(req)
 
     @property
@@ -278,6 +313,7 @@ class PagedServingEngine:
 
     def _admit(self) -> Dict[str, int]:
         admitted = 0
+        tick = self.metrics.counters["ticks"]
         while self.queue:
             req = self.queue[0]
             row = next((i for i, r in enumerate(self.rows) if r is None),
@@ -291,6 +327,7 @@ class PagedServingEngine:
                 self.queue.pop(0)
                 req.done, req.error = True, "request exceeds pool capacity"
                 self.finished.append(req)
+                self._lat.pop(req.rid, None)
                 continue
             if need > self.alloc.free_pages:
                 break                      # headroom gate: wait for pages
@@ -302,6 +339,14 @@ class PagedServingEngine:
             self.alloc.ensure(self._seq_id(seq), len(ctx) + 1)
             self.rows[row] = seq
             admitted += 1
+            lat = self._lat.setdefault(req.rid, {"submit": tick,
+                                                 "queued": tick})
+            wait = tick - lat.get("queued", tick)
+            self.metrics.record_latency("queue_wait", wait)
+            if _obs.enabled():
+                with _obs.span("serve.admit_request") as sp:
+                    sp.set(trace_id=req.trace_name, wait_ticks=wait,
+                           resumed=seq.resumed)
         return {"admitted": admitted}
 
     # -- pool pressure -------------------------------------------------------
@@ -333,9 +378,17 @@ class PagedServingEngine:
         it at the front; on re-admission its context is re-prefilled as
         prompt + generated-so-far, and greedy decode continues
         identically."""
-        self.alloc.free_seq(self._seq_id(victim))
-        self.rows[self.rows.index(victim)] = None
-        self.queue.insert(0, victim.req)
+        sp = _obs.span("serve.preempt")
+        with sp:
+            if _obs.enabled():
+                sp.set(trace_id=victim.req.trace_name, pos=victim.pos)
+            self.alloc.free_seq(self._seq_id(victim))
+            self.rows[self.rows.index(victim)] = None
+            self.queue.insert(0, victim.req)
+        # queue-wait restarts at the eviction tick (TTFT keeps running)
+        lat = self._lat.get(victim.req.rid)
+        if lat is not None:
+            lat["queued"] = self.metrics.counters["ticks"]
 
     # -- gather through the validated block tables ---------------------------
     def _tables(self) -> np.ndarray:
@@ -401,6 +454,7 @@ class PagedServingEngine:
         self._scatter(view, {i: (s.pos, lens[i]) for i, s in pend})
         total = 0
         finished = 0
+        tick = self.metrics.counters["ticks"]
         for i, s in pend:
             s.pos += lens[i]
             total += lens[i]
@@ -411,6 +465,17 @@ class PagedServingEngine:
                 nxt = int(jnp.argmax(logits[i, lens[i] - 1]))
                 s.req.output.append(nxt)
                 s.prefilled = True
+                lat = self._lat.get(s.req.rid)
+                if lat is not None:
+                    if "last" not in lat:
+                        # first token ever for this request: TTFT
+                        self.metrics.record_latency(
+                            "ttft", tick - lat.get("submit", tick))
+                    else:
+                        # resumed prefill replays a decode tick: TPOT
+                        self.metrics.record_latency(
+                            "tpot", tick - lat["last"])
+                    lat["last"] = tick
                 # a *resumed* prefill replays a decode tick, so its token
                 # gets the decode-tick exhaustion check (fresh admissions
                 # mirror the dense engine, which checks only on decode)
@@ -420,6 +485,7 @@ class PagedServingEngine:
                         or s.pos >= self.max_len):
                     s.req.done = True
                     self.finished.append(s.req)
+                    self._lat.pop(s.req.rid, None)
                     self.alloc.free_seq(self._seq_id(s))
                     self.rows[i] = None
                     finished += 1
@@ -517,17 +583,24 @@ class PagedServingEngine:
         else:
             kernel_ticks = 1
         finished = 0
+        tick = self.metrics.counters["ticks"]
         for i, s in rows:
             nxt = int(jnp.argmax(logits[i, -1]))
             s.req.output.append(nxt)
             s.pos += 1
             s.ctx.append(int(tokens[i, 0]))
+            lat = self._lat.get(s.req.rid)
+            if lat is not None:
+                self.metrics.record_latency(
+                    "tpot", tick - lat.get("last", tick))
+                lat["last"] = tick
             exhausted = (len(s.req.output) >= s.req.max_new_tokens
                          or nxt == self.eos_id
                          or s.pos >= self.max_len)
             if exhausted:
                 s.req.done = True
                 self.finished.append(s.req)
+                self._lat.pop(s.req.rid, None)
                 self.alloc.free_seq(self._seq_id(s))
                 self.rows[i] = None
                 finished += 1
@@ -556,22 +629,38 @@ class PagedServingEngine:
         """One engine tick: admit by headroom, one prefill chunk per
         pending prompt, one decode step for the running batch, retire.
         Returns #active sequences."""
-        adm = self._admit()
-        pre = self._prefill_tick()
-        dec = self._decode_tick()
-        for s in self.active:
-            self.alloc.touch(self._seq_id(s))
-        n_active = len(self.active)
-        self.metrics.record_tick(
-            queue_depth=len(self.queue), active=n_active,
-            occupancy=self.alloc.used_pages,
-            prefill_tokens=pre["prefill_tokens"],
-            decode_tokens=dec["decode_tokens"],
-            admitted=adm["admitted"],
-            finished=pre["finished"] + dec["finished"],
-            preempted=pre["preempted"] + dec["preempted"],
-            gather_bytes=dec.get("gather_bytes", 0),
-            kernel_decode_ticks=dec.get("kernel_decode_ticks", 0))
+        t0 = self._clock()
+        tick_sp = _obs.span("serve.tick")
+        with tick_sp:
+            with _obs.span("serve.admit"):
+                adm = self._admit()
+            with _obs.span("serve.prefill_chunk"):
+                pre = self._prefill_tick()
+            dec_sp = _obs.span("serve.decode_tick")
+            with dec_sp:
+                dec = self._decode_tick()
+                if _obs.enabled():
+                    dec_sp.set(
+                        decode_tokens=dec["decode_tokens"],
+                        trace_ids=[s.req.trace_name for s in self.active
+                                   if s.prefilled])
+            for s in self.active:
+                self.alloc.touch(self._seq_id(s))
+            n_active = len(self.active)
+            if _obs.enabled():
+                tick_sp.set(tick=self.metrics.counters["ticks"],
+                            active=n_active)
+            self.metrics.record_tick(
+                queue_depth=len(self.queue), active=n_active,
+                occupancy=self.alloc.used_pages,
+                prefill_tokens=pre["prefill_tokens"],
+                decode_tokens=dec["decode_tokens"],
+                admitted=adm["admitted"],
+                finished=pre["finished"] + dec["finished"],
+                preempted=pre["preempted"] + dec["preempted"],
+                gather_bytes=dec.get("gather_bytes", 0),
+                kernel_decode_ticks=dec.get("kernel_decode_ticks", 0),
+                step_time_us=int((self._clock() - t0) * 1e6))
         return n_active
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

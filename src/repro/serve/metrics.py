@@ -12,17 +12,28 @@ snapshots across ticks without reaching into engine internals.
 the dense engine, usable (non-null) pool pages for the paged one —
 ``occupancy / capacity`` is the pool-utilization number
 ``benchmarks/fig_serving.py`` gates on.
+
+Schema v3 adds ``latency``: four mergeable log2 histograms
+(:class:`repro.obs.hist.LogHistogram`) recorded by the engines —
+queue-wait, TTFT, and TPOT in engine *ticks* (the replay-aligned
+virtual clock), per-tick step time in *microseconds* from the engine's
+injectable wall clock.  ``from_snapshot`` still loads v2 snapshots
+(latency defaults to empty) and rejects unknown versions with a
+``ValueError`` naming the version.
 """
 from __future__ import annotations
 
 from typing import Dict
 
-SCHEMA_VERSION = 2
+from repro.obs.hist import LogHistogram
 
-# The snapshot schema, by example.  docs/serving.md embeds this block
-# verbatim (test_docs enforces it) — update both together.
+SCHEMA_VERSION = 3
+
+# The snapshot schema, by example.  docs/serving.md and
+# docs/observability.md embed this block verbatim (test_docs enforces
+# it) — update all together.
 SCHEMA_EXAMPLE = {
-    "schema": 2,
+    "schema": 3,
     "kind": "paged",            # "dense" | "paged"
     "capacity": 24,             # slots (dense) | usable pages (paged)
     "counters": {               # monotonic, cumulative
@@ -47,12 +58,24 @@ SCHEMA_EXAMPLE = {
         "active": 4,
         "occupancy": 19,
     },
+    "latency": {                # log2 histograms (repro.obs.hist),
+                                # sparse {bucket index: count}
+        "queue_wait": {         # submit/requeue -> admission, in ticks
+            "scheme": "log2", "counts": {"0": 4, "2": 2}, "sum": 6},
+        "ttft": {               # submit -> first generated token, ticks
+            "scheme": "log2", "counts": {"2": 4, "3": 2}, "sum": 22},
+        "tpot": {               # gap between generated tokens, ticks
+            "scheme": "log2", "counts": {"1": 118}, "sum": 118},
+        "step_time": {          # step() wall time, microseconds
+            "scheme": "log2", "counts": {"7": 37}, "sum": 3700},
+    },
 }
 
 _COUNTERS = ("ticks", "admitted", "finished", "preempted",
              "prefill_tokens", "decode_tokens", "gather_bytes",
              "kernel_decode_ticks")
 _GAUGES = ("queue_depth", "active", "occupancy")
+_LATENCY = ("queue_wait", "ttft", "tpot", "step_time")
 
 
 class ServingMetrics:
@@ -64,12 +87,15 @@ class ServingMetrics:
         self.counters: Dict[str, int] = {k: 0 for k in _COUNTERS}
         self.gauges: Dict[str, int] = {k: 0 for k in _GAUGES}
         self.peaks: Dict[str, int] = {k: 0 for k in _GAUGES}
+        self.latency: Dict[str, LogHistogram] = {k: LogHistogram()
+                                                 for k in _LATENCY}
 
     def record_tick(self, *, queue_depth: int, active: int, occupancy: int,
                     prefill_tokens: int = 0, decode_tokens: int = 0,
                     admitted: int = 0, finished: int = 0,
                     preempted: int = 0, gather_bytes: int = 0,
-                    kernel_decode_ticks: int = 0) -> None:
+                    kernel_decode_ticks: int = 0,
+                    step_time_us: int = 0) -> None:
         c = self.counters
         c["ticks"] += 1
         c["admitted"] += admitted
@@ -79,11 +105,15 @@ class ServingMetrics:
         c["decode_tokens"] += decode_tokens
         c["gather_bytes"] += gather_bytes
         c["kernel_decode_ticks"] += kernel_decode_ticks
+        self.latency["step_time"].record(step_time_us)
         g = {"queue_depth": int(queue_depth), "active": int(active),
              "occupancy": int(occupancy)}
         self.gauges = g
         for k, v in g.items():
             self.peaks[k] = max(self.peaks[k], v)
+
+    def record_latency(self, kind: str, value: int) -> None:
+        self.latency[kind].record(value)
 
     # -- derived ------------------------------------------------------------
     def utilization(self) -> float:
@@ -97,6 +127,11 @@ class ServingMetrics:
         return ((self.counters["prefill_tokens"]
                  + self.counters["decode_tokens"]) / t) if t else 0.0
 
+    def latency_quantiles(self) -> Dict[str, Dict[str, int]]:
+        """Per-kind ``{count, sum, p50, p95, p99}`` — the percentile
+        block benchmark reports embed."""
+        return {k: self.latency[k].summary() for k in _LATENCY}
+
     # -- snapshot schema ----------------------------------------------------
     def snapshot(self) -> Dict:
         return {
@@ -106,14 +141,16 @@ class ServingMetrics:
             "counters": dict(self.counters),
             "gauges": dict(self.gauges),
             "peaks": dict(self.peaks),
+            "latency": {k: self.latency[k].to_dict() for k in _LATENCY},
         }
 
     @classmethod
     def from_snapshot(cls, snap: Dict) -> "ServingMetrics":
-        if snap.get("schema") != SCHEMA_VERSION:
+        version = snap.get("schema")
+        if version not in (2, SCHEMA_VERSION):
             raise ValueError(
-                f"unsupported metrics schema {snap.get('schema')!r} "
-                f"(this build reads v{SCHEMA_VERSION})")
+                f"unsupported metrics schema {version!r} "
+                f"(this build reads v2..v{SCHEMA_VERSION})")
         m = cls(snap["capacity"], snap["kind"])
         for group, keys in (("counters", _COUNTERS), ("gauges", _GAUGES),
                             ("peaks", _GAUGES)):
@@ -122,4 +159,11 @@ class ServingMetrics:
                 raise ValueError(f"snapshot {group} keys {sorted(src)} != "
                                  f"schema keys {sorted(keys)}")
             getattr(m, group).update({k: int(src[k]) for k in keys})
+        if version >= 3:
+            src = snap["latency"]
+            if set(src) != set(_LATENCY):
+                raise ValueError(f"snapshot latency keys {sorted(src)} != "
+                                 f"schema keys {sorted(_LATENCY)}")
+            m.latency = {k: LogHistogram.from_dict(src[k]) for k in _LATENCY}
+        # v2: latency stays at the empty-histogram default.
         return m

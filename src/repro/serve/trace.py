@@ -30,10 +30,12 @@ class Arrival:
     rid: int
     prompt: Tuple[int, ...]
     max_new_tokens: int
+    trace_id: str = ""       # span correlation id; defaults to req-<rid>
 
     def request(self) -> Request:
         return Request(self.rid, list(self.prompt),
-                       max_new_tokens=self.max_new_tokens)
+                       max_new_tokens=self.max_new_tokens,
+                       trace_id=self.trace_id or f"req-{self.rid}")
 
 
 def _prompts(rng, n, prompt_lens, max_new, vocab):
@@ -54,7 +56,8 @@ def poisson_trace(*, seed: int, n_requests: int, mean_gap: float,
     t, out = 0.0, []
     for rid, (prompt, mnt) in enumerate(bodies):
         t += rng.exponential(mean_gap)
-        out.append(Arrival(int(t), rid, prompt, mnt))
+        out.append(Arrival(int(t), rid, prompt, mnt,
+                           trace_id=f"poisson{seed}-r{rid}"))
     return out
 
 
@@ -69,7 +72,7 @@ def bursty_trace(*, seed: int, n_bursts: int, burst_size: int,
     out = []
     for rid, (prompt, mnt) in enumerate(bodies):
         out.append(Arrival((rid // burst_size) * burst_gap, rid, prompt,
-                           mnt))
+                           mnt, trace_id=f"burst{seed}-r{rid}"))
     return out
 
 

@@ -156,6 +156,27 @@ def test_families_doc_has_verbatim_worked_example():
         "families.md tutorial lost its verbatim quant_gemm example"
 
 
+def test_observability_doc_has_verbatim_schema_blocks():
+    """docs/observability.md must carry the Chrome trace-event schema
+    and the snapshot-v3 latency schema as blocks checked verbatim
+    against the obs tracer and the serving metrics module."""
+    text = (ROOT / "docs" / "observability.md").read_text()
+    blocks = [m.group("path") for m in VERBATIM.finditer(text)]
+    for src, what in (("obs/tracer.py", "trace-event schema"),
+                      ("serve/metrics.py", "snapshot-v3 latency schema")):
+        assert any(src in p for p in blocks), \
+            f"observability.md lost its verbatim {what} example"
+
+
+def test_serving_doc_embeds_the_v3_schema():
+    """The serving page's verbatim snapshot example must be the current
+    schema version, not a stale one."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    from repro.serve.metrics import SCHEMA_VERSION
+    assert f'"schema": {SCHEMA_VERSION},' in text, \
+        "serving.md snapshot example is not at the current schema version"
+
+
 def test_tuning_doc_has_verbatim_schema_and_journal_format():
     """docs/tuning.md must document the dispatch-table schema, the
     journal record format, the lesson-store schema, the async promotion

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.serve import (PagedServingEngine, PageAllocator, PoolExhausted,
                          Request, ServingEngine)
+from repro.serve.metrics import ServingMetrics
 from repro.serve.pool import KVPool, NULL_PAGE, pages_needed
 from repro.serve.trace import bursty_trace, percentile, poisson_trace
 
@@ -436,6 +437,51 @@ class TestRetirementBoundary:
 
 
 # ---------------------------------------------------------------------------
+# Metrics snapshot versioning (schema v3 with v2 back-compat)
+# ---------------------------------------------------------------------------
+
+class TestMetricsSchema:
+    def _v3_snapshot(self):
+        m = ServingMetrics(16, "paged")
+        m.record_tick(queue_depth=1, active=2, occupancy=9,
+                      decode_tokens=2, step_time_us=55)
+        m.record_latency("ttft", 4)
+        m.record_latency("tpot", 1)
+        m.record_latency("queue_wait", 0)
+        return m.snapshot()
+
+    def test_v2_snapshot_loads_with_empty_latency(self):
+        """A pre-latency (schema 2) snapshot still loads — latency
+        defaults to empty histograms — and re-snapshots as v3."""
+        snap = self._v3_snapshot()
+        v2 = {k: v for k, v in snap.items() if k != "latency"}
+        v2["schema"] = 2
+        m = ServingMetrics.from_snapshot(v2)
+        assert m.counters == snap["counters"]
+        assert all(h.count == 0 for h in m.latency.values())
+        rt = m.snapshot()
+        assert rt["schema"] == 3
+        assert all(d == {"scheme": "log2", "counts": {}, "sum": 0}
+                   for d in rt["latency"].values())
+
+    def test_unknown_versions_rejected_naming_the_version(self):
+        snap = self._v3_snapshot()
+        for bad in (1, 4, 99, None):
+            with pytest.raises(ValueError, match=f"schema {bad!r}"):
+                ServingMetrics.from_snapshot({**snap, "schema": bad})
+
+    def test_v3_round_trips_latency_exactly(self):
+        snap = self._v3_snapshot()
+        assert ServingMetrics.from_snapshot(snap).snapshot() == snap
+
+    def test_v3_with_wrong_latency_keys_rejected(self):
+        snap = self._v3_snapshot()
+        snap["latency"] = {"ttft": snap["latency"]["ttft"]}
+        with pytest.raises(ValueError, match="latency keys"):
+            ServingMetrics.from_snapshot(snap)
+
+
+# ---------------------------------------------------------------------------
 # Trace replay determinism (fig_serving byte-identity gate)
 # ---------------------------------------------------------------------------
 
@@ -473,5 +519,9 @@ class TestTraces:
         fig_serving.main(argv + ["--out", str(f2)])
         assert f1.read_bytes() == f2.read_bytes()
         rep = json.loads(f1.read_text())
+        assert rep["schema"] == 3
         assert rep["traces"]["poisson"]["token_identical"]
         assert rep["traces"]["bursty"]["token_identical"]
+        pct = rep["traces"]["poisson"]["paged"]["percentiles"]
+        assert set(pct) == {"queue_wait", "ttft", "tpot", "step_time"}
+        assert all(s["count"] > 0 for s in pct.values())
