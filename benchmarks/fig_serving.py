@@ -3,9 +3,12 @@ kernel-path paged.
 
 Replays seeded Poisson and bursty arrival traces (repro.serve.trace)
 through three engines on a reduced model — the dense-slab oracle, the
-paged engine on the gather decode path, and the paged engine on the
-``decode_path="kernel"`` path (the length-masked paged-attention Pallas
-kernel run straight over the pool, no per-tick dense view) — and
+paged engine on the gather paths, and the paged engine on both kernel
+paths (``decode_path="kernel"``: the length-masked paged-attention
+Pallas kernel run straight over the pool, no per-tick dense view;
+``prefill_path="kernel"``: the tick's prompt chunks packed ragged
+through the segment/causal-masked ragged-prefill kernel, token-granular
+packed-KV gather instead of a dense view) — and
 reports, per trace and engine: p50/p99 request latency (ticks), total
 ticks, prefill/decode token counts, tokens/tick, and — for the paged
 engines — pool peak/mean occupancy, preemptions, KV bytes vs the dense
@@ -28,8 +31,14 @@ latency histograms (schema-v3 snapshot, docs/observability.md).
 * the kernel arm's ``gather_bytes`` counter is exactly 0 and its
   ``kernel_decode_ticks`` counter is positive (every decode tick ran
   the kernel, none fell back);
+* the kernel arm's ``kernel_prefill_ticks`` counter is positive and
+  its ``prefill_gather_bytes`` (token-granular packed-KV reads) land
+  below the gather arm's (full dense views per prefill tick);
 * the kernel path's per-decode-tick HBM bytes are below the gather
   path's at the smoke shape;
+* the poisoned-KV leakage canary: sentinel garbage written into a
+  foreign sequence's packed-KV span and every padding slot leaves the
+  other sequences' ragged-prefill outputs bit-identical;
 * the paged pool's KV bytes are below the dense per-slot reservation,
   and peak pool utilization clears the floor;
 * every engine's ``percentiles`` block is populated (queue_wait / ttft
@@ -120,11 +129,14 @@ def run_trace(name, trace, model, params, args) -> dict:
     # deterministic function of tick count, keeping the report
     # byte-identical across runs and hosts
     def paged(path):
+        # the kernel arm exercises BOTH kernel paths: paged-attention
+        # decode and ragged-prefill chunked prefill
         return lambda: PagedServingEngine(
             model, params, pool_pages=args.pool_pages,
             page_size=args.page_size, max_batch=args.slots,
             max_len=args.max_len, prefill_chunk=args.prefill_chunk,
-            eos_id=-1, decode_path=path, clock=TickClock())
+            eos_id=-1, decode_path=path, prefill_path=path,
+            clock=TickClock())
 
     engines = {
         "dense": lambda: ServingEngine(
@@ -199,7 +211,7 @@ def main(argv=None):
     }
 
     report = {
-        "schema": 3,
+        "schema": 4,
         "arch": cfg.name,
         "config": {
             "seed": args.seed, "requests": args.requests,
@@ -248,6 +260,14 @@ def main(argv=None):
                  f"of dense view on decode ticks")
             assert kc["kernel_decode_ticks"] > 0, \
                 f"{name}: kernel path never ran the kernel"
+            assert kc["kernel_prefill_ticks"] > 0, \
+                f"{name}: kernel path never kernel-prefilled"
+            pc = p["metrics"]["counters"]
+            assert (kc["prefill_gather_bytes"]
+                    < pc["prefill_gather_bytes"]), \
+                (f"{name}: packed prefill gather "
+                 f"{kc['prefill_gather_bytes']}B is not below the dense "
+                 f"prefill views' {pc['prefill_gather_bytes']}B")
             assert (k["decode_hbm_bytes_per_tick"]
                     < p["decode_hbm_bytes_per_tick"]), \
                 (f"{name}: kernel decode HBM "
@@ -276,13 +296,52 @@ def main(argv=None):
             res2["metrics"]).latency_quantiles()
         assert pct2 == report["traces"]["poisson"]["paged"]["percentiles"], \
             "poisson/paged: percentile block changed on re-replay"
+        _leakage_canary()
         print("SMOKE OK: dense = paged = paged_kernel tokens, kernel "
               "path gathered 0 dense-view bytes and beat the gather "
-              "path's per-tick decode HBM, pool below dense "
+              "path's per-tick decode HBM, kernel prefill ran and "
+              "packed reads beat the dense prefill views, poisoned-KV "
+              "canary clean, pool below dense "
               f"reservation, utilization >= {UTILIZATION_FLOOR}, "
               "latency percentiles populated and re-replay-identical "
               "on both traces")
     return report
+
+
+def _leakage_canary() -> None:
+    """Poisoned-KV canary over the ragged-prefill kernel the kernel
+    arm's prefill ticks run: sentinel garbage in a foreign sequence's
+    packed span and in every padding slot must leave the other
+    sequences' outputs bit-identical and padding rows exactly zero —
+    the runtime mirror of the family's gate-conformity invariant."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.families.ragged_prefill import RaggedPrefillConfig
+    from repro.kernels.ragged_prefill import (cu_seqlens, ragged_metadata,
+                                              ragged_prefill_attend)
+
+    rng = np.random.default_rng(0)
+    cu = cu_seqlens([48, 64, 30])
+    seg, pos = ragged_metadata(cu, 192)
+    q = jnp.asarray(rng.normal(size=(4, 192, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 192, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 192, 32)), jnp.float32)
+    kw = dict(cfg=RaggedPrefillConfig(block_q=32, block_kv=32),
+              interpret=jax.default_backend() != "tpu")
+    clean = np.asarray(ragged_prefill_attend(
+        q, k, v, seg, pos, seg, pos, **kw))
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    lo, hi = int(cu[1]), int(cu[2])       # sequence 1's packed span
+    k2[:, lo:hi] = v2[:, lo:hi] = 1e6
+    k2[:, int(cu[-1]):] = v2[:, int(cu[-1]):] = 1e6   # padding slots
+    poisoned = np.asarray(ragged_prefill_attend(
+        q, jnp.asarray(k2), jnp.asarray(v2), seg, pos, seg, pos, **kw))
+    np.testing.assert_array_equal(clean[:, :lo], poisoned[:, :lo])
+    np.testing.assert_array_equal(clean[:, hi:int(cu[-1])],
+                                  poisoned[:, hi:int(cu[-1])])
+    assert float(np.abs(poisoned[:, int(cu[-1]):]).max()) == 0.0, \
+        "padding rows leaked poisoned KV"
 
 
 def _write_dispatch_table(path, report, cfg, args) -> None:

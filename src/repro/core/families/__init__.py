@@ -19,6 +19,7 @@ from . import moe               # noqa: E402,F401
 from . import ssd               # noqa: E402,F401
 from . import quant_gemm        # noqa: E402,F401
 from . import paged_attention   # noqa: E402,F401
+from . import ragged_prefill    # noqa: E402,F401
 
 __all__ = [
     "KernelFamily", "Skill", "GENERIC_SKILLS", "generic_skill",

@@ -69,7 +69,13 @@ def build_flash_attention_program(cfg: FlashAttentionConfig,
     "m_depends_kv" (running max tagged with the kv step),
     "q_block_offset" (off-by-one-block Q origin).
     """
-    p = dsl.TileProgram(cfg.name())
+    # program name = the trace-relevant projection only (trace_fields):
+    # configs that share one traced program must label its assertions
+    # identically, so causal_block_skip — cost-model-only — stays out
+    pname = f"fa[{cfg.block_q}x{cfg.block_kv}]"
+    if cfg.v_transposed_staging:
+        pname += "+transv"
+    p = dsl.TileProgram(pname)
     B, H, HK = prob.batch, prob.q_heads, prob.kv_heads
     SQ, SKV, D = prob.seq_q, prob.seq_kv, prob.head_dim
     G = prob.group
@@ -335,6 +341,11 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    # causal_block_skip never enters the traced data flow (it only
+    # shifts the cost model and the structural hints), so configs that
+    # differ only there share one traced program
+    trace_fields=("block_q", "block_kv", "v_transposed_staging",
+                  "applies_mask"),
     sol_bound=flash_attention_sol,
 ))
 

@@ -449,6 +449,9 @@ FAMILY = register(KernelFamily(
     lower=_lower,
     example=_example,
     sweep_problems=_sweep,
+    # identity projection: every config knob shapes the traced program,
+    # declared so the engine's trace memo still keys on the projection
+    trace_fields=("block_pages",),
     sol_bound=paged_attention_sol,
 ))
 

@@ -1,0 +1,118 @@
+"""jit'd public entry point for ragged-prefill attention, with the
+ARGUS gate.
+
+A kernel config must pass compile-time validation of the packing
+invariants (the staged :class:`repro.core.verify_engine
+.VerificationEngine`) before lowering: a cross-sequence leak, an
+off-by-one causal bound, a mis-based cu_seqlens offset or a
+skipped/replayed KV block is rejected here — with a concrete,
+stage-attributed counterexample — before any ``pallas_call``.  The
+concrete metadata is range-checked by :func:`repro.kernels
+.ragged_prefill.packing.validate_packing`, the runtime mirror of the
+family's pre-solver ``assert_in_range``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.families.ragged_prefill import (RaggedPrefillConfig,
+                                                RaggedPrefillProblem)
+from repro.core.tuning.dispatch import configured
+from repro.core.verify_engine import default_engine
+
+from .ragged_prefill import ragged_prefill as _ragged_prefill_kernel
+from .ref import ragged_prefill_ref
+
+
+class InvariantViolation(RuntimeError):
+    pass
+
+
+def _validate(cfg: RaggedPrefillConfig,
+              prob: RaggedPrefillProblem) -> None:
+    res = default_engine().verify("ragged_prefill", cfg, prob)
+    if not res.hard_ok:
+        raise InvariantViolation(
+            f"ARGUS rejected {cfg.name()} for {prob}:\n{res.render()}")
+
+
+def _short_dtype(dt) -> str:
+    return {"bfloat16": "bf16", "float32": "f32"}.get(str(dt), str(dt))
+
+
+def default_config(total_q: int, total_k: int) -> RaggedPrefillConfig:
+    """Largest pow2 blocks ≤ 128 tiling the packed buffers.  block_q
+    must divide *both* totals: the family program models packed
+    self-attention (one token axis), so validation runs with
+    total_tokens = TK and block_q must tile it too."""
+    bq = 128
+    while bq > 8 and (total_q % bq or total_k % bq):
+        bq //= 2
+    bkv = 128
+    while bkv > 8 and total_k % bkv:
+        bkv //= 2
+    return RaggedPrefillConfig(block_q=bq, block_kv=bkv)
+
+
+def _problem(total_k: int, n_seqs: int, q_heads: int, kv_heads: int,
+             head_dim: int, dtype: str) -> RaggedPrefillProblem:
+    return RaggedPrefillProblem(
+        n_seqs=max(int(n_seqs), 1), total_tokens=int(total_k),
+        q_heads=int(q_heads), kv_heads=int(kv_heads),
+        head_dim=int(head_dim), dtype=dtype)
+
+
+def ragged_prefill_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          seg_q: jnp.ndarray, pos_q: jnp.ndarray,
+                          seg_k: jnp.ndarray, pos_k: jnp.ndarray, *,
+                          cfg: Optional[RaggedPrefillConfig] = None,
+                          scale=None, interpret: bool = False,
+                          use_kernel: bool = True) -> jnp.ndarray:
+    """Validated ragged-prefill attention.  q (Hq, TQ, D) packed
+    queries; k, v (Hkv, TK, D) packed KV; seg/pos (TQ,)/(TK,) int32
+    per-token metadata (seg -1 on padding).  ``use_kernel=False`` falls
+    back to the dense oracle (hosts without Pallas lowering support)."""
+    if not use_kernel:
+        return ragged_prefill_ref(q, k, v, seg_q, pos_q, seg_k, pos_k,
+                                  scale=scale)
+    Hq, TQ, D = q.shape
+    Hkv, TK, _ = k.shape
+    segs = np.asarray(seg_k)
+    n_seqs = int(segs.max()) + 1 if segs.size and segs.max() >= 0 else 1
+    prob = _problem(TK, n_seqs, Hq, Hkv, D, _short_dtype(q.dtype))
+    cfg = cfg or configured("ragged_prefill", prob) \
+        or default_config(TQ, TK)
+    _validate(cfg, prob)
+    return _ragged_prefill_kernel(q, k, v, seg_q, pos_q, seg_k, pos_k,
+                                  cfg=cfg, scale=scale,
+                                  interpret=interpret)
+
+
+def verified_config(total_q: int, total_k: int, n_seqs: int, *,
+                    q_heads: int, kv_heads: int, head_dim: int,
+                    dtype: str = "bf16",
+                    cfg: Optional[RaggedPrefillConfig] = None
+                    ) -> Optional[RaggedPrefillConfig]:
+    """ARGUS gate for a serving engine's packed-prefill geometry.
+
+    Resolves the kernel config from the installed fleet
+    ``dispatch_table.json`` (:func:`repro.core.tuning.dispatch
+    .configured`) and statically verifies the leakage invariants for
+    this packing geometry.  Returns the verified config, or ``None``
+    when the geometry is unverifiable (blocks cannot tile the buffers,
+    or the invariant check rejects) — the serving engine's signal to
+    stay on the dense fallback path."""
+    prob = _problem(total_k, n_seqs, q_heads, kv_heads, head_dim, dtype)
+    cfg = cfg or configured("ragged_prefill", prob) \
+        or default_config(total_q, total_k)
+    if total_q % cfg.block_q or total_k % cfg.block_q \
+            or total_k % cfg.block_kv:
+        return None
+    try:
+        _validate(cfg, prob)
+    except InvariantViolation:
+        return None
+    return cfg

@@ -1,0 +1,47 @@
+"""Dense masked oracle for ragged-prefill attention.
+
+One full (TQ, TK) score rectangle per head, masked by the same
+segment/causal/padding predicate the kernel applies, with an explicit
+mask multiply and zero-denominator guard (a plain softmax over an
+all-``-1e30`` row would emit a uniform average over garbage instead of
+zeros).  The differential target for the Pallas kernel in interpret
+mode (family ``reference_check``, tests/test_kernel_fuzz.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+F32 = jnp.float32
+
+
+def ragged_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       seg_q: jnp.ndarray, pos_q: jnp.ndarray,
+                       seg_k: jnp.ndarray, pos_k: jnp.ndarray, *,
+                       scale=None) -> jnp.ndarray:
+    """Same contract as the kernel: q (Hq, TQ, D), k/v (Hkv, TK, D),
+    seg/pos (TQ,)/(TK,) int32 (seg -1 on padding).  Returns
+    (Hq, TQ, D) in q's dtype."""
+    Hq, TQ, D = q.shape
+    Hkv, TK, _ = k.shape
+    G = Hq // Hkv
+    scale = float(scale if scale is not None else D ** -0.5)
+
+    kf = jnp.repeat(k, G, axis=0)          # (Hq, TK, D) GQA broadcast
+    vf = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("htd,hsd->hts", q.astype(F32),
+                   kf.astype(F32)) * scale
+
+    sq = seg_q.astype(jnp.int32)[:, None]
+    pq = pos_q.astype(jnp.int32)[:, None]
+    sk = seg_k.astype(jnp.int32)[None, :]
+    pk = pos_k.astype(jnp.int32)[None, :]
+    mask = (sq == sk) & (pk <= pq) & (sq >= 0) & (sk >= 0)
+    s = jnp.where(mask[None], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m) * mask[None].astype(F32)
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.where(den == 0.0, 1.0, den)
+    o = jnp.einsum("hts,hsd->htd", p, vf.astype(F32))
+    return o.astype(q.dtype)

@@ -134,6 +134,52 @@ def _paged_self_attention(p: Dict, x: jnp.ndarray, positions, cfg,
     return attn_out(p, o), leaf
 
 
+def _packed_prefill_attention(p: Dict, x: jnp.ndarray, positions, cfg,
+                              leaf: Dict, seg_q, pos_q, seg_k, pos_k,
+                              write_phys, write_offs, gather_phys,
+                              gather_offs, *, kernel_cfg,
+                              interpret: bool) -> Tuple[jnp.ndarray, Dict]:
+    """Ragged chunked-prefill attention for one layer, straight off the
+    page pool: scatter the chunk's fresh K/V to their (physical page,
+    offset) homes, token-gather the packed KV (every pending sequence's
+    prefix + fresh chunk, ``gather_phys/gather_offs``-addressed) and run
+    the segment/causal-masked ragged-prefill kernel.  Padding query
+    tokens carry ``write_phys == pool_pages`` (write dropped) and
+    ``seg == -1`` (fully masked); padding KV slots address the reserved
+    null page.  x: (1, TQ, D_model).  Returns (attn output (1, TQ,
+    D_model), updated leaf)."""
+    from repro.kernels.ragged_prefill.ragged_prefill import ragged_prefill
+    q, k, v = qkv_project(p, x, cfg, positions)    # k/v: (1, HK, TQ, hd)
+    leaf = dict(leaf)
+    leaf["k"] = leaf["k"].at[write_phys, :, write_offs].set(
+        jnp.moveaxis(k[0], 0, 1).astype(leaf["k"].dtype), mode="drop")
+    leaf["v"] = leaf["v"].at[write_phys, :, write_offs].set(
+        jnp.moveaxis(v[0], 0, 1).astype(leaf["v"].dtype), mode="drop")
+    # token-granular packed-KV gather (TK rows), not a dense view
+    kp = jnp.moveaxis(leaf["k"][gather_phys, :, gather_offs], 0, 1)
+    vp = jnp.moveaxis(leaf["v"][gather_phys, :, gather_offs], 0, 1)
+    o = ragged_prefill(q[0], kp, vp, seg_q, pos_q, seg_k, pos_k,
+                       cfg=kernel_cfg, interpret=interpret)
+    return attn_out(p, o[None]), leaf
+
+
+def apply_block_packed_prefill(p: Dict, x: jnp.ndarray, positions, cfg,
+                               leaf: Dict, meta, *, moe_layer: bool,
+                               kernel_cfg, interpret: bool):
+    h = apply_norm(p["ln_attn"], x, cfg)
+    o, leaf = _packed_prefill_attention(p["attn"], h, positions, cfg,
+                                        leaf, *meta,
+                                        kernel_cfg=kernel_cfg,
+                                        interpret=interpret)
+    x = x + o
+    h = apply_norm(p["ln_ffn"], x, cfg)
+    if moe_layer:
+        f, _ = apply_moe(p["moe"], h, cfg)
+    else:
+        f = apply_ffn(p["ffn"], h, cfg)
+    return x + f, leaf
+
+
 def apply_block_paged(p: Dict, x: jnp.ndarray, positions, cfg, leaf: Dict,
                       tables, lengths, *, moe_layer: bool, kernel_cfg,
                       interpret: bool):
@@ -327,6 +373,61 @@ class TransformerLM:
             layer_params, leaf = layer
             x, new_leaf = apply_block_paged(
                 layer_params, x, positions, cfg, leaf, tables, lengths,
+                moe_layer=is_moe, kernel_cfg=kernel_cfg,
+                interpret=interpret)
+            return x, new_leaf
+
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], pool["blocks"]))
+        new_pool["blocks"] = new_blocks
+        x = apply_norm(params["ln_f"], x, cfg)
+        return unembed(params["embed"], x, cfg), new_pool
+
+    def prefill_chunk_packed(self, params: Dict, pool: Dict,
+                             tokens: jnp.ndarray, seg_q: jnp.ndarray,
+                             pos_q: jnp.ndarray, seg_k: jnp.ndarray,
+                             pos_k: jnp.ndarray, write_phys: jnp.ndarray,
+                             write_offs: jnp.ndarray,
+                             gather_phys: jnp.ndarray,
+                             gather_offs: jnp.ndarray, *,
+                             kernel_cfg=None, interpret: bool = False
+                             ) -> Tuple[jnp.ndarray, Dict]:
+        """Kernel-path chunked prefill: every pending sequence's prompt
+        chunk packed into one (1, TQ) ragged buffer, attended through
+        the segment/causal-masked ragged-prefill kernel straight off the
+        page pool — no dense view.  ``tokens`` are the packed chunk
+        tokens; ``seg_q/pos_q`` ((TQ,) int32) their owning sequence and
+        absolute in-sequence position (seg -1 on padding); ``seg_k/
+        pos_k`` ((TK,) int32) the packed-KV metadata covering each
+        sequence's prefix *plus* the fresh chunk; ``write_phys/
+        write_offs`` ((TQ,)) each chunk token's (physical page, offset)
+        home (``pool_pages`` on padding — dropped); ``gather_phys/
+        gather_offs`` ((TK,)) each packed-KV token's address (null page
+        on padding).  ``kernel_cfg`` must come pre-verified
+        (:func:`repro.kernels.ragged_prefill.ops.verified_config` —
+        the serving engine's ARGUS gate).  Returns (logits (1, TQ, V),
+        updated pool).  GQA caches only — MLA state is positionless and
+        stays on the dense fallback."""
+        cfg = self.cfg
+        if cfg.attn_type == "mla":
+            raise ValueError("packed kernel prefill requires a GQA cache")
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.maximum(pos_q, 0)[None, :]
+        meta = (seg_q, pos_q, seg_k, pos_k, write_phys, write_offs,
+                gather_phys, gather_offs)
+        new_pool: Dict = dict(pool)
+        for i in range(self.n_dense_front):
+            x, new_pool[f"front_{i}"] = apply_block_packed_prefill(
+                params[f"front_{i}"], x, positions, cfg,
+                pool[f"front_{i}"], meta, moe_layer=False,
+                kernel_cfg=kernel_cfg, interpret=interpret)
+
+        is_moe = cfg.moe is not None
+
+        def body(x, layer):
+            layer_params, leaf = layer
+            x, new_leaf = apply_block_packed_prefill(
+                layer_params, x, positions, cfg, leaf, meta,
                 moe_layer=is_moe, kernel_cfg=kernel_cfg,
                 interpret=interpret)
             return x, new_leaf

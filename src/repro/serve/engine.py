@@ -32,10 +32,23 @@ counter stays at 0 on decode ticks).  The kernel config is resolved per
 shape bucket from the installed dispatch table and statically verified
 once per batch geometry; when no verified config exists for the bucket
 (or the model's cache cannot be paged-attended, e.g. MLA) the tick
-falls back to the gather path.  Prefill chunks stay on the gather path
-under both modes.  Per-sequence ``lengths`` (the token being written
-included) are re-validated against each row's mapped page count every
-kernel tick — the boundary-page consistency check on the hot path.
+falls back to the gather path.  Per-sequence ``lengths`` (the token
+being written included) are re-validated against each row's mapped page
+count every kernel tick — the boundary-page consistency check on the
+hot path.
+
+``prefill_path="kernel"`` does the same for chunked prefill: the tick's
+prompt chunks are packed ragged (cu_seqlens-derived segment ids and
+positions, :mod:`repro.kernels.ragged_prefill.packing`) and attended
+through the segment/causal-masked ragged-prefill kernel straight off
+the pool via :meth:`~repro.models.transformer.TransformerLM
+.prefill_chunk_packed` — the KV read is a token-granular packed gather
+(``prefill_gather_bytes`` counts it), never a dense view.  The kernel
+config is resolved per packed geometry and statically verified against
+the ``ragged_prefill`` family's leakage invariants
+(:func:`repro.kernels.ragged_prefill.ops.verified_config`); when the
+geometry is unverifiable or the model cannot packed-prefill (MLA), the
+tick falls back to the dense ``decode_chunk`` path.
 
 Kernel configs come from the fleet tuner's ``dispatch_table.json``
 (:mod:`repro.core.tuning.dispatch`): pass ``dispatch_table=`` (a path or
@@ -250,7 +263,7 @@ class PagedServingEngine:
                  max_len: int = 512, prefill_chunk: int = 32,
                  eos_id: int = 1, greedy: bool = True,
                  dispatch_table=None, decode_path: str = "gather",
-                 clock=None):
+                 prefill_path: str = "gather", clock=None):
         if max_len % page_size:
             raise ValueError(f"max_len {max_len} must be a multiple of "
                              f"page_size {page_size}")
@@ -259,6 +272,9 @@ class PagedServingEngine:
         if decode_path not in ("gather", "kernel"):
             raise ValueError(f"decode_path must be 'gather' or 'kernel', "
                              f"got {decode_path!r}")
+        if prefill_path not in ("gather", "kernel"):
+            raise ValueError(f"prefill_path must be 'gather' or 'kernel', "
+                             f"got {prefill_path!r}")
         self.model = model
         self.params = params
         self.page_size = page_size
@@ -296,6 +312,14 @@ class PagedServingEngine:
         self._interpret = jax.default_backend() != "tpu"
         self._view_bytes = KVPool.dense_reserved_bytes(
             model, max_batch, max_len)
+        # kernel prefill path: verified config + jit closure memoized per
+        # packed geometry; per-token pool bytes for the packed-KV gather
+        # accounting
+        self.prefill_path = prefill_path
+        self._prefill_cfgs: Dict = {}
+        self._prefill_fns: Dict = {}
+        self._token_bytes = KVPool.dense_reserved_bytes(
+            model, 1, page_size) // page_size
 
     # -- API ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -439,19 +463,29 @@ class PagedServingEngine:
         pend = [(i, s) for i, s in pend if self.rows[i] is s]
         if not pend:
             return dict(empty, preempted=preempted)
-        tokens = np.zeros((self.max_batch, C), np.int32)
-        pos_vec = np.zeros((self.max_batch,), np.int32)
-        lens = {}
-        for i, s in pend:
-            n = min(C, len(s.ctx) - s.pos)
-            tokens[i, :n] = s.ctx[s.pos:s.pos + n]
-            pos_vec[i] = s.pos
-            lens[i] = n
-        view = self._gather()
-        fn = self._chunk if self._chunk is not None else self._decode
-        logits, view = fn(self.params, view, jnp.asarray(tokens),
-                          jnp.asarray(pos_vec))
-        self._scatter(view, {i: (s.pos, lens[i]) for i, s in pend})
+        lens = {i: min(C, len(s.ctx) - s.pos) for i, s in pend}
+        gather_bytes = kernel_ticks = 0
+        packed = (self._prefill_kernel(pend, lens)
+                  if self.prefill_path == "kernel" else None)
+        if packed is not None:
+            row_logits, packed_kv_tokens = packed
+            gather_bytes = packed_kv_tokens * self._token_bytes
+            kernel_ticks = 1
+        else:
+            # dense decode_chunk path (default, and the fallback when
+            # the packed geometry is unverifiable)
+            tokens = np.zeros((self.max_batch, C), np.int32)
+            pos_vec = np.zeros((self.max_batch,), np.int32)
+            for i, s in pend:
+                tokens[i, :lens[i]] = s.ctx[s.pos:s.pos + lens[i]]
+                pos_vec[i] = s.pos
+            view = self._gather()
+            fn = self._chunk if self._chunk is not None else self._decode
+            logits, view = fn(self.params, view, jnp.asarray(tokens),
+                              jnp.asarray(pos_vec))
+            self._scatter(view, {i: (s.pos, lens[i]) for i, s in pend})
+            row_logits = {i: logits[i, lens[i] - 1] for i, s in pend}
+            gather_bytes = self._view_bytes
         total = 0
         finished = 0
         tick = self.metrics.counters["ticks"]
@@ -462,7 +496,7 @@ class PagedServingEngine:
                 # prompt complete: first generated token comes from the
                 # logits at the chunk's last real position (the dense
                 # engine's argmax(prefill_logits[-1]) twin)
-                nxt = int(jnp.argmax(logits[i, lens[i] - 1]))
+                nxt = int(jnp.argmax(row_logits[i]))
                 s.req.output.append(nxt)
                 s.prefilled = True
                 lat = self._lat.get(s.req.rid)
@@ -490,7 +524,93 @@ class PagedServingEngine:
                     self.rows[i] = None
                     finished += 1
         return {"prefill_tokens": total, "preempted": preempted,
-                "finished": finished}
+                "finished": finished,
+                "prefill_gather_bytes": gather_bytes,
+                "kernel_prefill_ticks": kernel_ticks}
+
+    def _prefill_kernel(self, pend, lens):
+        """Kernel-path chunked prefill: pack the tick's prompt chunks
+        ragged and attend them through the ragged-prefill kernel
+        straight off the pool (token-granular packed-KV gather, no
+        dense view).  Returns ``({row: last-real-token logits}, packed
+        kv tokens)``, or None when the model cannot packed-prefill
+        (MLA / no hook) or the packed geometry has no verified config —
+        the tick then falls back to the dense ``decode_chunk`` path."""
+        model = self.model
+        if self._chunk is None \
+                or not hasattr(model, "prefill_chunk_packed") \
+                or getattr(model.cfg, "attn_type", None) == "mla":
+            return None
+        from repro.kernels.ragged_prefill.ops import verified_config
+        PS = self.page_size
+        spans = [(i, s, s.pos, lens[i]) for i, s in pend]
+        # pad both packed extents to 64-token granularity: bounds the
+        # jit-recompile variety while keeping pow2 blocks available
+        # (64 is itself a valid block size, so every padded extent
+        # tiles) and the packed read below the dense batch view at
+        # small shapes
+        pad = lambda t: -(-max(t, 1) // 64) * 64
+        TQp = pad(sum(n for *_, n in spans))
+        TKp = pad(sum(p + n for _, _, p, n in spans))
+        mcfg = model.cfg
+        key = (TQp, TKp, len(spans))
+        if key not in self._prefill_cfgs:
+            # ARGUS gate: verify the leakage invariants once per packed
+            # geometry, config resolved from the dispatch table
+            self._prefill_cfgs[key] = verified_config(
+                TQp, TKp, len(spans), q_heads=mcfg.n_heads,
+                kv_heads=mcfg.n_kv_heads,
+                head_dim=mcfg.resolved_head_dim,
+                dtype="bf16" if "bf" in str(mcfg.dtype) else "f32")
+        kcfg = self._prefill_cfgs[key]
+        if kcfg is None:
+            return None
+        tokens = np.zeros((1, TQp), np.int32)
+        seg_q = np.full((TQp,), -1, np.int32)
+        pos_q = np.zeros((TQp,), np.int32)
+        seg_k = np.full((TKp,), -1, np.int32)
+        pos_k = np.zeros((TKp,), np.int32)
+        # padding queries write past the pool (dropped); padding KV
+        # reads the reserved null page (zeros, fully masked)
+        wphys = np.full((TQp,), self.alloc.n_pages, np.int32)
+        woffs = np.zeros((TQp,), np.int32)
+        gphys = np.zeros((TKp,), np.int32)
+        goffs = np.zeros((TKp,), np.int32)
+        qt = kt = 0
+        q_last = {}
+        for j, (i, s, p, n) in enumerate(spans):
+            table = self.alloc.table_row(self._seq_id(s),
+                                         self.pages_per_seq)
+            tokens[0, qt:qt + n] = s.ctx[p:p + n]
+            seg_q[qt:qt + n] = j
+            qpos = np.arange(p, p + n)
+            pos_q[qt:qt + n] = qpos
+            wphys[qt:qt + n] = table[qpos // PS]
+            woffs[qt:qt + n] = qpos % PS
+            seg_k[kt:kt + p + n] = j
+            kpos = np.arange(p + n)
+            pos_k[kt:kt + p + n] = kpos
+            gphys[kt:kt + p + n] = table[kpos // PS]
+            goffs[kt:kt + p + n] = kpos % PS
+            q_last[i] = qt + n - 1
+            qt += n
+            kt += p + n
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            interp = self._interpret
+            fn = jax.jit(
+                lambda prm, pool, tok, sq, pq, sk, pk, wp, wo, gp, go:
+                model.prefill_chunk_packed(prm, pool, tok, sq, pq, sk,
+                                           pk, wp, wo, gp, go,
+                                           kernel_cfg=kcfg,
+                                           interpret=interp))
+            self._prefill_fns[key] = fn
+        logits, self.kv.storage = fn(
+            self.params, self.kv.storage, jnp.asarray(tokens),
+            jnp.asarray(seg_q), jnp.asarray(pos_q), jnp.asarray(seg_k),
+            jnp.asarray(pos_k), jnp.asarray(wphys), jnp.asarray(woffs),
+            jnp.asarray(gphys), jnp.asarray(goffs))
+        return {i: logits[0, t] for i, t in q_last.items()}, TKp
 
     # -- decode --------------------------------------------------------------
     def _kernel_config(self, tables: np.ndarray):
@@ -660,6 +780,8 @@ class PagedServingEngine:
                 preempted=pre["preempted"] + dec["preempted"],
                 gather_bytes=dec.get("gather_bytes", 0),
                 kernel_decode_ticks=dec.get("kernel_decode_ticks", 0),
+                kernel_prefill_ticks=pre.get("kernel_prefill_ticks", 0),
+                prefill_gather_bytes=pre.get("prefill_gather_bytes", 0),
                 step_time_us=int((self._clock() - t0) * 1e6))
         return n_active
 

@@ -17,9 +17,14 @@ Schema v3 adds ``latency``: four mergeable log2 histograms
 (:class:`repro.obs.hist.LogHistogram`) recorded by the engines —
 queue-wait, TTFT, and TPOT in engine *ticks* (the replay-aligned
 virtual clock), per-tick step time in *microseconds* from the engine's
-injectable wall clock.  ``from_snapshot`` still loads v2 snapshots
-(latency defaults to empty) and rejects unknown versions with a
-``ValueError`` naming the version.
+injectable wall clock.  Schema v4 adds the prefill-path counters:
+``kernel_prefill_ticks`` (prefill ticks served by the ragged-prefill
+kernel, no dense view) and ``prefill_gather_bytes`` (bytes the prefill
+path read from the pool — full dense views on the gather/fallback
+path, token-granular packed-KV reads on the kernel path).
+``from_snapshot`` still loads v2 and v3 snapshots (missing counters
+default to 0, latency defaults to empty on v2) and rejects unknown
+versions with a ``ValueError`` naming the version.
 """
 from __future__ import annotations
 
@@ -27,13 +32,13 @@ from typing import Dict
 
 from repro.obs.hist import LogHistogram
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # The snapshot schema, by example.  docs/serving.md and
 # docs/observability.md embed this block verbatim (test_docs enforces
 # it) — update all together.
 SCHEMA_EXAMPLE = {
-    "schema": 3,
+    "schema": 4,
     "kind": "paged",            # "dense" | "paged"
     "capacity": 24,             # slots (dense) | usable pages (paged)
     "counters": {               # monotonic, cumulative
@@ -47,6 +52,11 @@ SCHEMA_EXAMPLE = {
                                 # (kernel-path decode gathers none)
         "kernel_decode_ticks": 9,  # decode ticks served by the paged-
                                    # attention kernel, no dense view
+        "kernel_prefill_ticks": 3,    # prefill ticks served by the
+                                      # ragged-prefill kernel
+        "prefill_gather_bytes": 2048,  # prefill-path pool reads: dense
+                                       # views (gather/fallback) or
+                                       # packed-KV tokens (kernel)
     },
     "gauges": {                 # last recorded tick
         "queue_depth": 2,
@@ -73,7 +83,10 @@ SCHEMA_EXAMPLE = {
 
 _COUNTERS = ("ticks", "admitted", "finished", "preempted",
              "prefill_tokens", "decode_tokens", "gather_bytes",
-             "kernel_decode_ticks")
+             "kernel_decode_ticks", "kernel_prefill_ticks",
+             "prefill_gather_bytes")
+# counters new in schema v4: optional (default 0) when loading v2/v3
+_V4_COUNTERS = ("kernel_prefill_ticks", "prefill_gather_bytes")
 _GAUGES = ("queue_depth", "active", "occupancy")
 _LATENCY = ("queue_wait", "ttft", "tpot", "step_time")
 
@@ -95,6 +108,8 @@ class ServingMetrics:
                     admitted: int = 0, finished: int = 0,
                     preempted: int = 0, gather_bytes: int = 0,
                     kernel_decode_ticks: int = 0,
+                    kernel_prefill_ticks: int = 0,
+                    prefill_gather_bytes: int = 0,
                     step_time_us: int = 0) -> None:
         c = self.counters
         c["ticks"] += 1
@@ -105,6 +120,8 @@ class ServingMetrics:
         c["decode_tokens"] += decode_tokens
         c["gather_bytes"] += gather_bytes
         c["kernel_decode_ticks"] += kernel_decode_ticks
+        c["kernel_prefill_ticks"] += kernel_prefill_ticks
+        c["prefill_gather_bytes"] += prefill_gather_bytes
         self.latency["step_time"].record(step_time_us)
         g = {"queue_depth": int(queue_depth), "active": int(active),
              "occupancy": int(occupancy)}
@@ -147,7 +164,7 @@ class ServingMetrics:
     @classmethod
     def from_snapshot(cls, snap: Dict) -> "ServingMetrics":
         version = snap.get("schema")
-        if version not in (2, SCHEMA_VERSION):
+        if version not in (2, 3, SCHEMA_VERSION):
             raise ValueError(
                 f"unsupported metrics schema {version!r} "
                 f"(this build reads v2..v{SCHEMA_VERSION})")
@@ -155,10 +172,15 @@ class ServingMetrics:
         for group, keys in (("counters", _COUNTERS), ("gauges", _GAUGES),
                             ("peaks", _GAUGES)):
             src = snap[group]
-            if set(src) != set(keys):
+            # counters introduced by v4 are optional on older snapshots
+            # (default 0); nothing outside the schema is ever accepted
+            required = set(keys)
+            if group == "counters" and version < 4:
+                required -= set(_V4_COUNTERS)
+            if not (required <= set(src) <= set(keys)):
                 raise ValueError(f"snapshot {group} keys {sorted(src)} != "
                                  f"schema keys {sorted(keys)}")
-            getattr(m, group).update({k: int(src[k]) for k in keys})
+            getattr(m, group).update({k: int(src.get(k, 0)) for k in keys})
         if version >= 3:
             src = snap["latency"]
             if set(src) != set(_LATENCY):

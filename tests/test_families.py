@@ -197,7 +197,7 @@ class TestSoLBound:
 
 def test_registry_is_complete_and_consistent():
     fams = all_families()
-    assert len(fams) >= 7
+    assert len(fams) >= 8
     for fam in fams:
         assert get_family(fam.name) is fam
         assert fam.build_program is not None

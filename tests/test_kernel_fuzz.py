@@ -1,0 +1,243 @@
+"""Registry-wide differential fuzz harness.
+
+Every registered kernel family gets the same treatment: draw a
+downscaled problem shape from the family's ``sweep_problems()`` menu,
+perturb it with a seeded rng, fill the inputs from the same rng, run
+the Pallas kernel in interpret mode and diff it against the package's
+jnp oracle.  Seeds derive from :func:`repro.core.tuning.jobs
+.stable_seed` (the tuner's process-stable hash), so a red run prints a
+``(family, case, seed)`` triple that reproduces byte-for-byte on any
+host — paste it into ``_rng`` and replay.
+
+The harness is deliberately registry-driven: a new family that
+registers without adding an adapter here FAILS (not skips), so kernel
+coverage cannot silently lag the registry.
+"""
+import numpy as np
+import pytest
+
+from repro.core.families import family_names, get_family
+from repro.core.tuning.jobs import stable_seed
+
+# bounded for CI: per family, |CASES| sweep-derived shapes x |TRIALS|
+# input draws.  Raise locally for a deeper soak.
+CASES = (0, 1)
+TRIALS = (0, 1)
+
+
+def _rng(family: str, case: int, trial: int):
+    seed = stable_seed(f"fuzz:{family}:{case}:{trial}")
+    return np.random.default_rng(seed), seed
+
+
+def _pick(rng, options):
+    return options[int(rng.integers(len(options)))]
+
+
+# ---------------------------------------------------------------------------
+# Per-family adapters: downscale a sweep problem, perturb it with the
+# seeded rng, run interpret-mode kernel vs oracle.  Each returns
+# (got, want, rtol, atol, shape-description).
+# ---------------------------------------------------------------------------
+
+def _fuzz_gemm(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.gemm import GemmConfig
+    from repro.kernels.gemm import matmul, matmul_ref
+    b = _pick(rng, (16, 32))
+    m, n, k = (int(rng.integers(1, 5)) * b for _ in range(3))
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = matmul(a, w, cfg=GemmConfig(bm=b, bn=b, bk=b), interpret=True)
+    return got, matmul_ref(a, w), 1e-3, 1e-3, f"m={m} n={n} k={k} b={b}"
+
+
+def _fuzz_flash_attention(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.flash_attention import FlashAttentionConfig
+    from repro.kernels.flash_attention import mha, mha_ref
+    blk = _pick(rng, (16, 32))
+    sq = int(rng.integers(2, 5)) * blk
+    skv = int(rng.integers(2, 5)) * blk
+    causal = bool(prob.causal) and sq == skv
+    d = _pick(rng, (32, 64))
+    hk = _pick(rng, (1, 2))
+    hq = hk * _pick(rng, (1, 2, 4))
+    q = jnp.asarray(rng.normal(size=(1, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, hk, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, hk, skv, d)), jnp.float32)
+    cfg = FlashAttentionConfig(block_q=blk, block_kv=blk)
+    got = mha(q, k, v, cfg=cfg, causal=causal, interpret=True)
+    return (got, mha_ref(q, k, v, causal=causal), 2e-3, 2e-3,
+            f"sq={sq} skv={skv} d={d} h={hq}:{hk} causal={causal}")
+
+
+def _fuzz_flash_decode(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.flash_decode import FlashDecodeConfig
+    from repro.kernels.flash_attention import mha_decode, mha_ref
+    splits = _pick(rng, (2, 4))
+    S = int(rng.integers(2, 9)) * splits * 8
+    d = _pick(rng, (32, 64))
+    hk = _pick(rng, (1, 2))
+    hq = hk * _pick(rng, (1, 4))
+    q = jnp.asarray(rng.normal(size=(1, hq, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, hk, S, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, hk, S, d)), jnp.float32)
+    got = mha_decode(q, k, v, jnp.int32(S),
+                     cfg=FlashDecodeConfig(kv_splits=splits),
+                     interpret=True)
+    return (got, mha_ref(q, k, v, causal=False), 2e-3, 2e-3,
+            f"S={S} d={d} h={hq}:{hk} splits={splits}")
+
+
+def _fuzz_moe(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.moe import MoEConfig
+    from repro.kernels.moe import grouped_ffn, grouped_ffn_ref
+    E = _pick(rng, (2, 4))
+    C = int(rng.integers(1, 4)) * 8
+    DM = _pick(rng, (32, 64))
+    DF = _pick(rng, (64, 128))
+    x = jnp.asarray(rng.normal(size=(E, C, DM)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, DM, DF)) * .05, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(E, DM, DF)) * .05, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(E, DF, DM)) * .05, jnp.float32)
+    cfg = MoEConfig(block_t=8, block_f=64)
+    got = grouped_ffn(x, wg, wu, wd, cfg=cfg, interpret=True)
+    return (got, grouped_ffn_ref(x, wg, wu, wd), 2e-3, 2e-3,
+            f"E={E} C={C} DM={DM} DF={DF}")
+
+
+def _fuzz_ssd(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.ssd import SSDConfig
+    from repro.kernels.ssd import ssd, ssd_ref
+    chunk = _pick(rng, (16, 32))
+    S = int(rng.integers(2, 5)) * chunk
+    BH = _pick(rng, (1, 2))
+    d = _pick(rng, (16, 32))
+    ds = _pick(rng, (8, 16))
+    x = jnp.asarray(rng.normal(size=(BH, S, d)), jnp.float32)
+    da = jnp.asarray(-np.abs(rng.normal(size=(BH, S))) * .1, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(BH, S, ds)) * .3, jnp.float32)
+    C = jnp.asarray(rng.normal(size=(BH, S, ds)) * .3, jnp.float32)
+    got = ssd(x, da, B, C, cfg=SSDConfig(chunk=chunk), interpret=True)
+    want = ssd_ref(x, da, B, C, chunk)[0]
+    return got, want, 2e-3, 2e-3, f"BH={BH} S={S} d={d} N={ds} q={chunk}"
+
+
+def _fuzz_quant_gemm(prob, rng):
+    from repro.core.families.quant_gemm import QuantGemmConfig
+    from repro.kernels.quant_gemm import (quant_matmul, quant_matmul_ref,
+                                          quantize_per_group)
+    group = _pick(rng, (32, 64))
+    m = int(rng.integers(1, 5)) * 32
+    n = int(rng.integers(1, 5)) * 32
+    k = int(rng.integers(1, 4)) * group
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    aq, sa = quantize_per_group(a, group, axis=1)
+    bq, sb = quantize_per_group(b, group, axis=0)
+    cfg = QuantGemmConfig(bm=32, bn=32, bk=32)
+    got = quant_matmul(aq, bq, sa, sb, group=group, cfg=cfg,
+                       interpret=True)
+    want = quant_matmul_ref(aq, bq, sa, sb, group=group)
+    return got, want, 2e-2, 2e-2, f"m={m} n={n} k={k} g={group}"
+
+
+def _fuzz_paged_attention(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.paged_attention import PagedAttentionConfig
+    from repro.kernels.paged_attention import (paged_decode,
+                                               paged_decode_ref)
+    B = _pick(rng, (2, 3))
+    PS = _pick(rng, (8, 16))
+    NP = _pick(rng, (2, 4))
+    d = _pick(rng, (32, 64))
+    hk = _pick(rng, (1, 2))
+    hq = hk * _pick(rng, (1, 4))
+    P = B * NP + 2
+    q = jnp.asarray(rng.normal(size=(B, hq, 1, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, hk, PS, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, hk, PS, d)), jnp.float32)
+    table = jnp.asarray(rng.permutation(P)[:B * NP].reshape(B, NP),
+                        jnp.int32)
+    lens = jnp.asarray(rng.integers(0, NP * PS + 1, size=(B,)), jnp.int32)
+    cfg = PagedAttentionConfig(block_pages=_pick(rng, (1, 2)))
+    got = paged_decode(q, kp, vp, table, lens, cfg=cfg, interpret=True)
+    want = paged_decode_ref(q, kp, vp, table, lens)
+    return (got, want, 2e-3, 2e-3,
+            f"B={B} PS={PS} NP={NP} d={d} h={hq}:{hk} "
+            f"lens={list(map(int, lens))}")
+
+
+def _fuzz_ragged_prefill(prob, rng):
+    import jax.numpy as jnp
+    from repro.core.families.ragged_prefill import RaggedPrefillConfig
+    from repro.kernels.ragged_prefill import (cu_seqlens, ragged_metadata,
+                                              ragged_prefill_attend,
+                                              ragged_prefill_ref)
+    blk = _pick(rng, (16, 32))
+    total = int(rng.integers(3, 7)) * blk
+    n_seqs = _pick(rng, (1, 2, 3))
+    # random ragged split (empty sequences allowed), padded tail
+    cuts = np.sort(rng.integers(0, total + 1, size=n_seqs))
+    lens = np.diff(np.concatenate([[0], cuts])).tolist()
+    cu = cu_seqlens(lens)
+    seg, pos = ragged_metadata(cu, total)
+    d = _pick(rng, (32, 64))
+    hk = _pick(rng, (1, 2))
+    hq = hk * _pick(rng, (1, 2))
+    q = jnp.asarray(rng.normal(size=(hq, total, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(hk, total, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(hk, total, d)), jnp.float32)
+    cfg = RaggedPrefillConfig(block_q=blk, block_kv=blk)
+    got = ragged_prefill_attend(q, k, v, seg, pos, seg, pos, cfg=cfg,
+                                interpret=True)
+    want = ragged_prefill_ref(q, k, v, seg, pos, seg, pos)
+    return (got, want, 2e-3, 2e-3,
+            f"lens={lens} total={total} d={d} h={hq}:{hk} blk={blk}")
+
+
+ADAPTERS = {
+    "gemm": _fuzz_gemm,
+    "flash_attention": _fuzz_flash_attention,
+    "flash_decode": _fuzz_flash_decode,
+    "moe": _fuzz_moe,
+    "ssd": _fuzz_ssd,
+    "quant_gemm": _fuzz_quant_gemm,
+    "paged_attention": _fuzz_paged_attention,
+    "ragged_prefill": _fuzz_ragged_prefill,
+}
+
+
+@pytest.mark.parametrize("family", sorted(family_names()))
+def test_every_family_has_a_fuzz_adapter(family):
+    """Registering a kernel family without extending the fuzz harness
+    is an error, not a gap."""
+    assert family in ADAPTERS, \
+        (f"family {family!r} is registered but has no differential fuzz "
+         f"adapter — add one to tests/test_kernel_fuzz.py:ADAPTERS")
+
+
+@pytest.mark.parametrize("trial", TRIALS)
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("family", sorted(family_names()))
+def test_differential_fuzz(family, case, trial):
+    if family not in ADAPTERS:
+        pytest.fail(f"no fuzz adapter for {family!r}")
+    fam = get_family(family)
+    sweeps = fam.sweep_problems() if fam.sweep_problems else [
+        fam.example()[1]]
+    prob = sweeps[case % len(sweeps)]
+    rng, seed = _rng(family, case, trial)
+    got, want, rtol, atol, desc = ADAPTERS[family](prob, rng)
+    got, want = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    assert got.shape == want.shape, \
+        f"{family}[{desc}] seed={seed}: shape {got.shape} != {want.shape}"
+    np.testing.assert_allclose(
+        got, want, rtol=rtol, atol=atol,
+        err_msg=(f"{family} kernel diverged from oracle on {desc} — "
+                 f"reproduce with stable_seed input "
+                 f"'fuzz:{family}:{case}:{trial}' (seed={seed})"))

@@ -1,0 +1,117 @@
+"""Property tests for the ragged-prefill packing helpers
+(:mod:`repro.kernels.ragged_prefill.packing`): cu_seqlens is monotone
+and bounded, metadata round-trips lengths exactly (empty sequences and
+full-buffer packings included), pack/unpack is an identity, and the
+validators reject every malformed table.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels.ragged_prefill import (PackingError, cu_seqlens,
+                                          lengths_from_cu, pack_ragged,
+                                          positions_from_cu,
+                                          ragged_metadata,
+                                          segment_ids_from_cu,
+                                          unpack_ragged, validate_packing)
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+# ragged length lists: empty sequences allowed, small enough to stay fast
+LENGTHS = st.lists(st.integers(0, 64), min_size=1, max_size=8)
+
+
+@st.composite
+def lengths_and_total(draw):
+    """A length list plus a buffer size with room for padding."""
+    lens = draw(LENGTHS)
+    pad = draw(st.integers(0, 32))
+    return lens, sum(lens) + pad
+
+
+class TestCuSeqlens:
+    @given(LENGTHS)
+    @settings(max_examples=60, deadline=None)
+    def test_monotone_bounded_and_round_trips(self, lens):
+        cu = cu_seqlens(lens)
+        assert cu.dtype == np.int32
+        assert cu.shape == (len(lens) + 1,)
+        assert cu[0] == 0
+        assert (np.diff(cu) >= 0).all()
+        assert cu[-1] == sum(lens)
+        assert lengths_from_cu(cu).tolist() == lens
+        validate_packing(cu, total=sum(lens))
+
+    @given(lengths_and_total())
+    @settings(max_examples=60, deadline=None)
+    def test_metadata_round_trips_lengths(self, case):
+        lens, total = case
+        cu = cu_seqlens(lens)
+        seg, pos = ragged_metadata(cu, total)
+        assert seg.shape == pos.shape == (total,)
+        # every sequence's token count survives the seg projection —
+        # empty sequences simply never appear
+        counts = [int((seg == s).sum()) for s in range(len(lens))]
+        assert counts == lens
+        # padding (and only padding) carries the fill id
+        assert int((seg == -1).sum()) == total - sum(lens)
+        assert (seg[sum(lens):] == -1).all()
+        # positions restart at 0 inside each sequence and stay in range
+        for s, n in enumerate(lens):
+            p = pos[seg == s]
+            assert (p == np.arange(n)).all()
+
+    @given(lengths_and_total())
+    @settings(max_examples=60, deadline=None)
+    def test_segment_ids_and_positions_agree_with_metadata(self, case):
+        lens, total = case
+        cu = cu_seqlens(lens)
+        seg, pos = ragged_metadata(cu, total)
+        assert (seg == segment_ids_from_cu(cu, total)).all()
+        assert (pos == positions_from_cu(cu, total)).all()
+
+    def test_boundaries(self):
+        # single empty sequence: all-padding metadata
+        seg, pos = ragged_metadata(cu_seqlens([0]), 4)
+        assert (seg == -1).all() and (pos == 0).all()
+        # full buffer, no padding
+        seg, _ = ragged_metadata(cu_seqlens([8]), 8)
+        assert (seg == 0).all()
+        # zero-size buffer is legal when every sequence is empty
+        seg, pos = ragged_metadata(cu_seqlens([0, 0]), 0)
+        assert seg.shape == (0,)
+
+
+class TestPackRoundTrip:
+    @given(st.lists(st.integers(0, 32), min_size=1, max_size=6),
+           st.integers(0, 16), st.integers(1, 4))
+    @settings(max_examples=60, deadline=None)
+    def test_pack_then_unpack_is_identity(self, lens, pad, width):
+        rng = np.random.default_rng(0)
+        rows = [rng.normal(size=(n, width)).astype(np.float32)
+                for n in lens]
+        packed, cu = pack_ragged(rows, total=sum(lens) + pad)
+        assert packed.shape == (sum(lens) + pad, width)
+        assert lengths_from_cu(cu).tolist() == lens
+        # padding rows are exact zeros
+        assert float(np.abs(packed[sum(lens):]).max() if pad else 0) == 0
+        out = unpack_ragged(packed, cu)
+        assert len(out) == len(rows)
+        for a, b in zip(out, rows):
+            np.testing.assert_array_equal(a, b)
+
+    def test_pack_overflow_rejected(self):
+        with pytest.raises(PackingError):
+            pack_ragged([np.zeros((4, 2), np.float32)], total=3)
+
+
+class TestValidation:
+    @pytest.mark.parametrize("cu,total", [
+        ([1, 2], None),          # cu[0] != 0
+        ([0, 3, 2], None),       # not monotone
+        ([0, 5], 4),             # escapes the buffer
+        ([], None),              # empty table
+    ])
+    def test_malformed_tables_rejected(self, cu, total):
+        with pytest.raises(PackingError):
+            validate_packing(np.asarray(cu, np.int32), total=total)

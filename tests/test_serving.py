@@ -452,21 +452,43 @@ class TestMetricsSchema:
 
     def test_v2_snapshot_loads_with_empty_latency(self):
         """A pre-latency (schema 2) snapshot still loads — latency
-        defaults to empty histograms — and re-snapshots as v3."""
+        defaults to empty histograms, the v4 prefill counters to 0 —
+        and re-snapshots at the current version."""
+        from repro.serve.metrics import SCHEMA_VERSION
         snap = self._v3_snapshot()
         v2 = {k: v for k, v in snap.items() if k != "latency"}
         v2["schema"] = 2
+        v2["counters"] = {k: v for k, v in snap["counters"].items()
+                          if k not in ("kernel_prefill_ticks",
+                                       "prefill_gather_bytes")}
         m = ServingMetrics.from_snapshot(v2)
         assert m.counters == snap["counters"]
         assert all(h.count == 0 for h in m.latency.values())
         rt = m.snapshot()
-        assert rt["schema"] == 3
+        assert rt["schema"] == SCHEMA_VERSION
         assert all(d == {"scheme": "log2", "counts": {}, "sum": 0}
                    for d in rt["latency"].values())
 
+    def test_v3_snapshot_loads_without_prefill_counters(self):
+        """A schema-3 snapshot predates the prefill-path counters: they
+        are optional on load (default 0) but a v3 snapshot carrying a
+        key outside its schema is still rejected."""
+        snap = self._v3_snapshot()
+        v3 = dict(snap, schema=3)
+        v3["counters"] = {k: v for k, v in snap["counters"].items()
+                          if k not in ("kernel_prefill_ticks",
+                                       "prefill_gather_bytes")}
+        m = ServingMetrics.from_snapshot(v3)
+        assert m.counters["kernel_prefill_ticks"] == 0
+        assert m.counters["prefill_gather_bytes"] == 0
+        bad = dict(v3)
+        bad["counters"] = dict(v3["counters"], bogus=1)
+        with pytest.raises(ValueError, match="counters keys"):
+            ServingMetrics.from_snapshot(bad)
+
     def test_unknown_versions_rejected_naming_the_version(self):
         snap = self._v3_snapshot()
-        for bad in (1, 4, 99, None):
+        for bad in (1, 5, 99, None):
             with pytest.raises(ValueError, match=f"schema {bad!r}"):
                 ServingMetrics.from_snapshot({**snap, "schema": bad})
 
@@ -519,7 +541,7 @@ class TestTraces:
         fig_serving.main(argv + ["--out", str(f2)])
         assert f1.read_bytes() == f2.read_bytes()
         rep = json.loads(f1.read_text())
-        assert rep["schema"] == 3
+        assert rep["schema"] == 4
         assert rep["traces"]["poisson"]["token_identical"]
         assert rep["traces"]["bursty"]["token_identical"]
         pct = rep["traces"]["poisson"]["paged"]["percentiles"]

@@ -357,3 +357,46 @@ class TestTraceFieldsProjection:
         assert small.ok and not small.structural
         assert not big.ok
         assert any(i.kind == "vmem" for i in big.structural), big.structural
+
+    def test_flash_causal_block_skip_flip_skips_the_trace(self):
+        """flash_attention's causal_block_skip only shifts the cost
+        model — a flip shares the traced program via trace_fields."""
+        fam = get_family("flash_attention")
+        eng = VerificationEngine()
+        prob = fam.problem_cls(2, 8, 1, 2048, 2048, 128, True, "bf16")
+        on = eng.verify("flash_attention", fam.config_cls(), prob)
+        off = eng.verify(
+            "flash_attention",
+            fam.config_cls(causal_block_skip=False), prob)
+        s = eng.stats()
+        assert s["trace_skips"] == 1 and s["program_hits"] == 1, s
+        assert on.hard_ok and off.hard_ok
+
+    def test_paged_block_pages_flip_retraces(self):
+        """paged_attention's projection is the identity — every knob is
+        trace-relevant, so a block_pages flip never skips the trace."""
+        fam = get_family("paged_attention")
+        eng = VerificationEngine()
+        prob = fam.problem_cls(4, 8, 1, 1024, 64, 128, 128, "bf16")
+        eng.verify("paged_attention", fam.config_cls(block_pages=1), prob)
+        eng.verify("paged_attention", fam.config_cls(block_pages=2), prob)
+        s = eng.stats()
+        assert s["trace_skips"] == 0, s
+        assert s["full_builds"] + s["skeleton_rebinds"] == 2, s
+
+    def test_flash_sweep_trace_work_is_bounded(self):
+        """Regression bound for the tuner's hot loop: sweeping block
+        sizes x causal_block_skip pays one Python trace per block
+        geometry, never per config — the skip flips all land in the
+        trace memo."""
+        fam = get_family("flash_attention")
+        eng = VerificationEngine()
+        prob = fam.problem_cls(2, 8, 1, 2048, 2048, 128, True, "bf16")
+        for bq in (64, 128, 256):
+            for skip in (True, False):
+                eng.verify("flash_attention",
+                           fam.config_cls(block_q=bq,
+                                          causal_block_skip=skip), prob)
+        s = eng.stats()
+        assert s["full_builds"] <= 3, s
+        assert s["trace_skips"] >= 3, s
